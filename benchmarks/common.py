@@ -1,0 +1,36 @@
+"""Benchmark harness helpers: timing + CSV row emission.
+
+Every benchmark module exposes run() -> list of (name, us_per_call, derived)
+rows, where `derived` is the paper-comparable figure (speedup, GB/s, nJ/KB,
+...). run.py aggregates and prints the combined CSV.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, List, Tuple
+
+import jax
+
+Row = Tuple[str, float, str]
+
+
+def time_call(fn: Callable, *args, iters: int = 5, warmup: int = 2) -> float:
+    """Median wall-time (us) of fn(*args) with block_until_ready."""
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        times.append((time.perf_counter() - t0) * 1e6)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def emit(rows: List[Row], header: bool = False) -> None:
+    if header:
+        print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.3f},{derived}")

@@ -1,0 +1,41 @@
+"""Fig. 10: bitmap-index query performance (paper §8.1).
+
+us_per_call: functional query execution (reduced size) on this host.
+derived: modeled end-to-end baseline/Buddy times and speedup per (m, n).
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from benchmarks.common import Row, emit, time_call
+from repro.apps import bitmap_index
+
+
+def run() -> list[Row]:
+    rows: list[Row] = []
+
+    # functional path (reduced m so the host run is quick)
+    db = bitmap_index.UserDatabase.synthetic(jax.random.PRNGKey(0),
+                                             m_users=1 << 16, n_weeks=4)
+    us = time_call(lambda d: bitmap_index.weekly_active_query(d)[0], db,
+                   iters=3)
+    rows.append(("fig10/functional_m=64k_n=4", us, "query executes on ops layer"))
+
+    sps = []
+    for m in (8 << 20, 16 << 20, 32 << 20):
+        for n in (2, 4, 6, 8):
+            tb = bitmap_index.query_time_ns(m, n, use_buddy=False)
+            tbd = bitmap_index.query_time_ns(m, n, use_buddy=True)
+            sp = tb / tbd
+            sps.append(sp)
+            rows.append((f"fig10/m={m >> 20}M_n={n}", 0.0,
+                         f"base={tb / 1e6:.2f}ms buddy={tbd / 1e6:.2f}ms "
+                         f"speedup={sp:.1f}x"))
+    rows.append(("fig10/summary", 0.0,
+                 f"avg_speedup={np.mean(sps):.1f}x (paper: 6.0x)"))
+    return rows
+
+
+if __name__ == "__main__":
+    emit(run(), header=True)

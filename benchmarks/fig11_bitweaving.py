@@ -1,0 +1,41 @@
+"""Fig. 11: BitWeaving column-scan speedup (paper §8.2).
+
+us_per_call: the fused vertical-scan on this host (functional validation).
+derived: modeled Buddy-vs-BitWeaving speedup across (b, r), including the
+cache-exit jumps the paper highlights.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Row, emit, time_call
+from repro.apps import bitweaving
+
+
+def run() -> list[Row]:
+    rows: list[Row] = []
+
+    rng = np.random.default_rng(0)
+    vals = rng.integers(0, 2**12, 1 << 16, dtype=np.uint64).astype(np.uint32)
+    us = time_call(
+        lambda v: bitweaving.scan_query(v, 12, 500, 2500)[0],
+        jnp.asarray(vals), iters=3)
+    rows.append(("fig11/functional_r=64k_b=12", us, "fused scan kernel"))
+
+    sps = []
+    for b in (1, 4, 8, 12, 16, 24, 32):
+        for r_log in (20, 23, 25):
+            r = 1 << r_log
+            sp = bitweaving.speedup(r, b)
+            sps.append(sp)
+            rows.append((f"fig11/b={b}_r=2^{r_log}", 0.0,
+                         f"speedup={sp:.1f}x"))
+    rows.append(("fig11/summary", 0.0,
+                 f"range={min(sps):.1f}-{max(sps):.1f}x avg={np.mean(sps):.1f}x "
+                 f"(paper: 1.8-11.8x avg 7.0x)"))
+    return rows
+
+
+if __name__ == "__main__":
+    emit(run(), header=True)

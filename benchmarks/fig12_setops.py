@@ -1,0 +1,42 @@
+"""Fig. 12: set operations — RB-tree vs SIMD bitset vs Buddy (paper §8.3)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Row, emit, time_call
+from repro.apps import bitset as app
+from repro.ops import BitSet
+
+
+def run() -> list[Row]:
+    rows: list[Row] = []
+
+    # functional: k=15 unions over the paper's 2^19 domain
+    rng = np.random.default_rng(0)
+    domain = 1 << 19
+    sets = [BitSet.from_elements(
+        jnp.asarray(rng.integers(0, domain, 1024, dtype=np.int64)), domain)
+        for _ in range(15)]
+    us = time_call(lambda s0: s0.union(*sets[1:]).cardinality(), sets[0],
+                   iters=3)
+    rows.append(("fig12/functional_union_k=15", us, "bitvector set ops"))
+
+    grid = app.figure12_grid()
+    for m, c in grid.items():
+        rows.append((f"fig12/elems={m}", 0.0,
+                     f"rb={c.rbtree_ns / 1e3:.1f}us "
+                     f"bitset={c.bitset_ns / 1e3:.1f}us "
+                     f"buddy={c.buddy_ns / 1e3:.2f}us "
+                     f"vs_rb={c.buddy_vs_rbtree:.1f}x "
+                     f"vs_bitset={c.buddy_vs_bitset:.1f}x"))
+    big = [c.buddy_vs_rbtree for m, c in grid.items() if m >= 64]
+    rows.append(("fig12/summary", 0.0,
+                 f"rb_wins_at_16={grid[16].buddy_vs_rbtree < 1} "
+                 f"buddy_vs_rb_at_64={grid[64].buddy_vs_rbtree:.1f}x "
+                 f"(paper: ~3x from 64 elements)"))
+    return rows
+
+
+if __name__ == "__main__":
+    emit(run(), header=True)

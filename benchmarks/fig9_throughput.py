@@ -1,0 +1,56 @@
+"""Fig. 9: raw throughput of bulk bitwise operations.
+
+Derived columns report the modeled GB/s for Skylake / GTX 745 / Buddy at
+1, 2, 4 banks, plus the Buddy-vs-baseline ratios the paper headlines
+(3.8-9.1x vs Skylake, 2.7-6.4x vs GTX one-bank; 10.9-25.6x abstract).
+us_per_call is the wall time of the *functional* fused op on this host
+(32 MB operands, the paper's microbenchmark size) — it validates that the
+op actually runs; the derived model numbers are the paper-comparable part.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import Row, emit, time_call
+from repro.core import timing
+from repro.kernels import ref
+
+OPS = ["not", "and", "or", "nand", "nor", "xor", "xnor"]
+N_BYTES = 32 << 20  # 32 MB vectors, as in §7
+
+
+def run() -> list[Row]:
+    rows: list[Row] = []
+    table = timing.throughput_table(banks_list=(1, 2, 4))
+    table_tfaw = timing.throughput_table(banks_list=(4,), respect_tfaw=True)
+
+    rng = np.random.default_rng(0)
+    words = N_BYTES // 4
+    a = rng.integers(0, 2**32, (words,), dtype=np.uint32)
+    b = rng.integers(0, 2**32, (words,), dtype=np.uint32)
+
+    for op in OPS:
+        args = (a,) if op == "not" else (a, b)
+        us = time_call(lambda *xs: ref.bitwise(op, *xs), *args)
+        t = table[op]
+        derived = (
+            f"sky={t['skylake']:.2f}GB/s gtx={t['gtx745']:.2f}GB/s "
+            f"b1={t['buddy_1bank']:.1f} b2={t['buddy_2bank']:.1f} "
+            f"b4={t['buddy_4bank']:.1f} "
+            f"b4_tfaw={table_tfaw[op]['buddy_4bank']:.1f} "
+            f"b1/gtx={t['buddy_1bank'] / t['gtx745']:.1f}x "
+            f"b1/sky={t['buddy_1bank'] / t['skylake']:.1f}x "
+            f"b4/gtx={t['buddy_4bank'] / t['gtx745']:.1f}x"
+        )
+        rows.append((f"fig9/{op}", us, derived))
+
+    r1g = [t["buddy_1bank"] / t["gtx745"] for t in table.values()]
+    r4g = [t["buddy_4bank"] / t["gtx745"] for t in table.values()]
+    rows.append(("fig9/summary", 0.0,
+                 f"b1-vs-gtx={min(r1g):.1f}-{max(r1g):.1f}x(paper:2.7-6.4) "
+                 f"b4-vs-gtx={min(r4g):.1f}-{max(r4g):.1f}x(paper:10.9-25.6)"))
+    return rows
+
+
+if __name__ == "__main__":
+    emit(run(), header=True)

@@ -1,0 +1,40 @@
+"""Aggregate benchmark runner: one section per paper table/figure.
+
+Usage: PYTHONPATH=src python -m benchmarks.run [section ...]
+Prints ``name,us_per_call,derived`` CSV rows.
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+from benchmarks.common import emit
+
+SECTIONS = [
+    "fig9_throughput",
+    "table1_tra",
+    "table3_energy",
+    "fig10_bitmap",
+    "fig11_bitweaving",
+    "fig12_setops",
+    "extra_apps",
+    "perf_summary",
+]
+
+
+def main() -> None:
+    want = sys.argv[1:] or SECTIONS
+    print("name,us_per_call,derived")
+    for section in SECTIONS:
+        if section not in want:
+            continue
+        mod = __import__(f"benchmarks.{section}", fromlist=["run"])
+        t0 = time.perf_counter()
+        rows = mod.run()
+        emit(rows)
+        dt = time.perf_counter() - t0
+        print(f"{section}/_section_total,{dt * 1e6:.0f},")
+
+
+if __name__ == "__main__":
+    main()

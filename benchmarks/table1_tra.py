@@ -1,0 +1,43 @@
+"""Table 1: TRA latency/reliability under process variation (SPICE-lite).
+
+Derived column: modeled latency per case/variation vs the paper's value,
+plus Monte-Carlo failure rates at increasing variation sigma.
+"""
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import Row, emit, time_call
+from repro.core import spice
+
+PAPER = {
+    "0s0w0w": [16.4, 16.3, 16.3, 16.4, 16.3, 16.2],
+    "1s0w0w": [18.3, 18.6, 18.8, 19.1, 19.7, None],
+    "0s1w1w": [24.9, 25.0, 25.2, 25.3, 25.4, 25.7],
+    "1s1w1w": [22.5, 22.3, 22.2, 22.2, 22.2, 22.1],
+}
+
+
+def run() -> list[Row]:
+    rows: list[Row] = []
+    t = spice.table1()
+    for case, entries in t.items():
+        cells = []
+        for (v, e), pv in zip(entries.items(), PAPER[case]):
+            got = "FAIL" if e["fails"] else f"{e['latency_ns']:.1f}"
+            ref = "FAIL" if pv is None else f"{pv}"
+            cells.append(f"{int(v * 100)}%:{got}(paper {ref})")
+        rows.append((f"table1/{case}", 0.0, " ".join(cells)))
+
+    for sigma in (0.02, 0.06, 0.10, 0.25):
+        us = time_call(spice.monte_carlo_tra, jax.random.PRNGKey(0),
+                       100_000, sigma, iters=3)
+        mc = spice.monte_carlo_tra(jax.random.PRNGKey(0), 100_000, sigma)
+        rows.append((f"table1/montecarlo_sigma={sigma}", us,
+                     f"fail_rate={float(mc['failure_rate']):.2e} "
+                     f"mean_lat={float(mc['mean_latency_ns']):.1f}ns"))
+    return rows
+
+
+if __name__ == "__main__":
+    emit(run(), header=True)

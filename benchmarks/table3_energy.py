@@ -1,0 +1,32 @@
+"""Table 3: energy of bulk bitwise operations (nJ/KB), derived from
+per-command energies x Fig. 8 command counts — the table itself is never
+hard-coded, so this benchmark is a genuine consistency check."""
+from __future__ import annotations
+
+from benchmarks.common import Row, emit
+from repro.core import energy
+
+PAPER = {"not": (93.7, 1.6), "and": (137.9, 3.2), "or": (137.9, 3.2),
+         "nand": (137.9, 4.0), "nor": (137.9, 4.0),
+         "xor": (137.9, 5.5), "xnor": (137.9, 5.5)}
+
+
+def run() -> list[Row]:
+    rows: list[Row] = []
+    t = energy.energy_table()
+    for op, e in t.items():
+        pd, pb = PAPER[op]
+        rows.append((
+            f"table3/{op}", 0.0,
+            f"ddr3={e['ddr3']:.1f}nJ/KB(paper {pd}) "
+            f"buddy={e['buddy']:.2f}nJ/KB(paper {pb}) "
+            f"reduction={e['reduction']:.1f}x"))
+    reds = [e["reduction"] for e in t.values()]
+    rows.append(("table3/summary", 0.0,
+                 f"reduction={min(reds):.1f}-{max(reds):.1f}x "
+                 f"(paper: 25.1-59.5x)"))
+    return rows
+
+
+if __name__ == "__main__":
+    emit(run(), header=True)

@@ -1,0 +1,22 @@
+"""Serving example: batched prefill + KV-cache decode for any assigned
+architecture (reduced config on CPU; identical path serves the full configs
+on a TPU slice — decode_32k / long_500k are the dry-run-validated shapes).
+
+Run:  PYTHONPATH=src python examples/serve_lm.py --arch mamba2_1p3b
+"""
+import argparse
+
+from repro.launch.serve import main as serve_main
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3_0p6b")
+    ap.add_argument("--max-new", type=int, default=32)
+    args = ap.parse_args()
+    return serve_main(["--arch", args.arch, "--batch", "4",
+                       "--prompt-len", "64", "--max-new", str(args.max_new)])
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,32 @@
+"""End-to-end training driver: a ~10M-param qwen3-family model for a few
+hundred steps on synthetic data, with checkpointing and failure recovery —
+the full production path (config -> model -> optimizer -> resilient runner)
+at laptop scale. On a TPU slice, drop --reduced and the identical driver
+trains the full assigned configs under the production mesh.
+
+Run:  PYTHONPATH=src python examples/train_lm.py [--steps 200] [--signum]
+"""
+import argparse
+import sys
+
+from repro.launch.train import main as train_main
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--arch", default="qwen3_0p6b")
+    ap.add_argument("--signum", action="store_true",
+                    help="majority-vote 1-bit signSGD (the Buddy collective)")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    args = ap.parse_args()
+    argv = ["--arch", args.arch, "--steps", str(args.steps),
+            "--batch", "8", "--seq", "128",
+            "--ckpt-dir", args.ckpt_dir, "--ckpt-every", "50"]
+    if args.signum:
+        argv += ["--opt", "signum", "--lr", "1e-3"]
+    return train_main(argv)
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,2 @@
+"""Paper §8 applications: bitmap indices, BitWeaving scans, bitvector sets."""
+from repro.apps.cost import AppSystem, DEFAULT_APP_SYSTEM

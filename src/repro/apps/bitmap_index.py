@@ -1,0 +1,103 @@
+"""Bitmap-index analytics (paper §8.1).
+
+The workload is the paper's real-application query [21]: per-user activity
+bitmaps tracked per day, plus attribute bitmaps (e.g. gender). The query
+
+  "How many unique users were active every week for the past n weeks?
+   How many male users were active each of the past n weeks?"
+
+executes 6n ORs (7 daily bitmaps -> weekly), 2n-1 ANDs, n+1 bitcounts.
+Functional execution runs on the packed ops layer (validated vs numpy);
+end-to-end time comes from apps.cost for baseline CPU vs Buddy.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.apps.cost import DEFAULT_APP_SYSTEM, AppSystem
+from repro.core.bitplane import BitVector
+from repro.ops.bitwise import bitwise_and, bitwise_or
+from repro.ops.popcount import popcount_words
+
+
+@dataclasses.dataclass
+class UserDatabase:
+    """m users; daily activity bitmaps for 7n days; gender bitmap."""
+
+    daily: jax.Array       # (n_weeks, 7, m_words) uint32
+    male: jax.Array        # (m_words,) uint32
+    m_users: int
+
+    @classmethod
+    def synthetic(cls, key, m_users: int, n_weeks: int,
+                  p_active: float = 0.3) -> "UserDatabase":
+        from repro.core.bitplane import pack_bits
+
+        k1, k2 = jax.random.split(key)
+        act = jax.random.bernoulli(k1, p_active, (n_weeks, 7, m_users))
+        male = jax.random.bernoulli(k2, 0.5, (m_users,))
+        return cls(pack_bits(act), pack_bits(male), m_users)
+
+
+def weekly_active_query(db: UserDatabase) -> Tuple[jax.Array, jax.Array, Dict]:
+    """Returns (n_active_every_week, per-week male actives, op counts)."""
+    n_weeks = db.daily.shape[0]
+    ops = {"or": 0, "and": 0, "bitcount": 0}
+
+    weekly: List[jax.Array] = []
+    for w in range(n_weeks):
+        acc = db.daily[w, 0]
+        for d in range(1, 7):
+            acc = bitwise_or(acc, db.daily[w, d])
+            ops["or"] += 1
+        weekly.append(acc)
+
+    every_week = weekly[0]
+    for w in range(1, n_weeks):
+        every_week = bitwise_and(every_week, weekly[w])
+        ops["and"] += 1
+    n_every = popcount_words(every_week)
+    ops["bitcount"] += 1
+
+    male_counts = []
+    for w in range(n_weeks):
+        mw = bitwise_and(weekly[w], db.male)
+        ops["and"] += 1
+        male_counts.append(popcount_words(mw))
+        ops["bitcount"] += 1
+
+    assert ops["or"] == 6 * n_weeks
+    assert ops["and"] == 2 * n_weeks - 1
+    assert ops["bitcount"] == n_weeks + 1
+    return n_every, jnp.stack(male_counts), ops
+
+
+# ---------------------------------------------------------------------------
+# End-to-end time model (Fig. 10)
+# ---------------------------------------------------------------------------
+
+
+def query_time_ns(m_users: int, n_weeks: int, use_buddy: bool,
+                  sys: AppSystem = DEFAULT_APP_SYSTEM) -> float:
+    n_or = 6 * n_weeks
+    n_and = 2 * n_weeks - 1
+    n_cnt = n_weeks + 1
+    if use_buddy:
+        t_ops = n_or * sys.buddy_op_ns("or", m_users) \
+            + n_and * sys.buddy_op_ns("and", m_users)
+    else:
+        t_ops = n_or * sys.cpu_bitwise_ns("or", m_users) \
+            + n_and * sys.cpu_bitwise_ns("and", m_users)
+    # bitcount stays on the CPU in both systems (§8.1)
+    t_cnt = n_cnt * sys.cpu_bitcount_ns(m_users)
+    return t_ops + t_cnt
+
+
+def speedup(m_users: int, n_weeks: int,
+            sys: AppSystem = DEFAULT_APP_SYSTEM) -> float:
+    return query_time_ns(m_users, n_weeks, False, sys) / \
+        query_time_ns(m_users, n_weeks, True, sys)

@@ -1,0 +1,2 @@
+from repro.configs.base import (ModelConfig, ShapeConfig, SHAPES, ARCH_IDS,
+                                LONG_CONTEXT_ARCHS, get_config, reduced, cells)

@@ -1,0 +1,16 @@
+"""Buddy-RAM core: the paper's contribution as a composable JAX module."""
+from repro.core.bitplane import (BitVector, pack_bits, unpack_bits, n_words,
+                                 WORD_BITS, ROW_BITS, ROW_WORDS)
+from repro.core.commands import AAP, AP, Program
+from repro.core.compiler import (Expr, maj, compile_expr, op_program,
+                                 and_program, or_program, not_program,
+                                 nand_program, nor_program, xor_program,
+                                 xnor_program, maj3_program, copy_program)
+from repro.core.engine import Subarray, execute
+from repro.core.timing import (DDR3_1600, DramTiming, program_latency_ns,
+                               buddy_throughput_gbps, baseline_throughput_gbps,
+                               throughput_table, SKYLAKE, GTX745)
+from repro.core.energy import (EnergyModel, DEFAULT_ENERGY, program_energy_nj,
+                               buddy_energy_nj_per_kb, ddr3_energy_nj_per_kb,
+                               energy_table)
+from repro.core.isa import BuddyDevice, BopResult

@@ -1,0 +1,126 @@
+"""Packed bit-plane tensors — the TPU analogue of a DRAM row.
+
+Buddy-RAM operates on 8 KB DRAM rows (65536 bits across a rank). On TPU we
+represent a "row" as a vector of uint32 words, 32 bits per lane (LSB-first).
+All bulk bitwise operations in this framework run on this packed layout, which
+is what gives the 32x density win over byte-per-bool layouts.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+WORD_BITS = 32
+WORD_DTYPE = jnp.uint32
+
+# Geometry of the paper's subarray: 8 KB row across a rank = 65536 bits.
+ROW_BYTES = 8192
+ROW_BITS = ROW_BYTES * 8
+ROW_WORDS = ROW_BITS // WORD_BITS  # 2048
+
+
+def n_words(n_bits: int) -> int:
+    return (n_bits + WORD_BITS - 1) // WORD_BITS
+
+
+def pack_bits(bits: jax.Array) -> jax.Array:
+    """Pack a bool/int {0,1} array along the last axis into uint32 words.
+
+    bits: (..., n) -> (..., ceil(n/32)) uint32, LSB-first within each word.
+    """
+    n = bits.shape[-1]
+    nw = n_words(n)
+    pad = nw * WORD_BITS - n
+    b = bits.astype(WORD_DTYPE)
+    if pad:
+        b = jnp.pad(b, [(0, 0)] * (b.ndim - 1) + [(0, pad)])
+    b = b.reshape(b.shape[:-1] + (nw, WORD_BITS))
+    shifts = jnp.arange(WORD_BITS, dtype=WORD_DTYPE)
+    return (b << shifts).sum(axis=-1).astype(WORD_DTYPE)
+
+
+def unpack_bits(words: jax.Array, n_bits: int) -> jax.Array:
+    """Inverse of pack_bits: (..., nw) uint32 -> (..., n_bits) bool."""
+    shifts = jnp.arange(WORD_BITS, dtype=WORD_DTYPE)
+    bits = (words[..., :, None] >> shifts) & jnp.uint32(1)
+    bits = bits.reshape(words.shape[:-1] + (words.shape[-1] * WORD_BITS,))
+    return bits[..., :n_bits].astype(jnp.bool_)
+
+
+def tail_mask(n_bits: int) -> np.ndarray:
+    """uint32 mask vector zeroing the padding bits of the final word."""
+    nw = n_words(n_bits)
+    m = np.full((nw,), 0xFFFFFFFF, dtype=np.uint32)
+    rem = n_bits % WORD_BITS
+    if rem:
+        m[-1] = np.uint32((1 << rem) - 1)
+    return m
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class BitVector:
+    """A length-tagged packed bitvector (1-D logical bit array).
+
+    `words` may have leading batch dims; the last axis is packed words.
+    """
+
+    words: jax.Array
+    n_bits: int
+
+    def tree_flatten(self):
+        return (self.words,), self.n_bits
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], aux)
+
+    # -- constructors ------------------------------------------------------
+    @classmethod
+    def from_bits(cls, bits: jax.Array) -> "BitVector":
+        return cls(pack_bits(bits), bits.shape[-1])
+
+    @classmethod
+    def zeros(cls, n_bits: int, batch: Tuple[int, ...] = ()) -> "BitVector":
+        return cls(jnp.zeros(batch + (n_words(n_bits),), WORD_DTYPE), n_bits)
+
+    @classmethod
+    def ones(cls, n_bits: int, batch: Tuple[int, ...] = ()) -> "BitVector":
+        w = jnp.broadcast_to(
+            jnp.asarray(tail_mask(n_bits)), batch + (n_words(n_bits),)
+        )
+        return cls(w, n_bits)
+
+    # -- views -------------------------------------------------------------
+    def to_bits(self) -> jax.Array:
+        return unpack_bits(self.words, self.n_bits)
+
+    def popcount(self) -> jax.Array:
+        from repro.ops.popcount import popcount_words
+
+        return popcount_words(self.words)
+
+    # -- logical ops (jnp fast path; kernels used via repro.ops) -----------
+    def _mask(self) -> jax.Array:
+        return jnp.asarray(tail_mask(self.n_bits))
+
+    def __and__(self, o: "BitVector") -> "BitVector":
+        return BitVector(self.words & o.words, self.n_bits)
+
+    def __or__(self, o: "BitVector") -> "BitVector":
+        return BitVector(self.words | o.words, self.n_bits)
+
+    def __xor__(self, o: "BitVector") -> "BitVector":
+        return BitVector(self.words ^ o.words, self.n_bits)
+
+    def __invert__(self) -> "BitVector":
+        return BitVector(~self.words & self._mask(), self.n_bits)
+
+    def majority(self, b: "BitVector", c: "BitVector") -> "BitVector":
+        """Triple-row activation: MAJ(self, b, c) = AB + BC + CA."""
+        a, bw, cw = self.words, b.words, c.words
+        return BitVector((a & bw) | (bw & cw) | (cw & a), self.n_bits)

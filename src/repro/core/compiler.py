@@ -1,0 +1,252 @@
+"""Compile bitwise operations/expressions to AAP programs (paper Fig. 8).
+
+Primitive op programs are the paper's exact command sequences. The expression
+compiler lowers arbitrary boolean expression DAGs over D-group rows to AAP
+sequences through temporary D-rows, with common-subexpression and dead-store
+elimination (the "standard compiler techniques" of §5.2).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple, Union
+
+from repro.core.commands import AAP, AP, Command, Program
+
+# ---------------------------------------------------------------------------
+# Fig. 8 primitive programs
+# ---------------------------------------------------------------------------
+
+
+def copy_program(src: str, dst: str) -> Program:
+    """RowClone-FPM copy expressed as a single AAP (§3.5)."""
+    return Program([AAP(src, dst)], f"{dst} = {src}")
+
+
+def zero_program(dst: str) -> Program:
+    return Program([AAP("C0", dst)], f"{dst} = 0")
+
+
+def one_program(dst: str) -> Program:
+    return Program([AAP("C1", dst)], f"{dst} = 1")
+
+
+def not_program(di: str, dk: str) -> Program:
+    # §5.2: ACTIVATE Di; ACTIVATE B5; PRECHARGE; ACTIVATE B4; ACTIVATE Dk; PRE
+    return Program(
+        [AAP(di, "B5"),   # DCC0 = !Di  (n-wordline captures negation)
+         AAP("B4", dk)],  # Dk = DCC0
+        f"{dk} = not {di}",
+    )
+
+
+def _and_or(di: str, dj: str, dk: str, ctrl: str, name: str) -> Program:
+    return Program(
+        [AAP(di, "B0"),     # T0 = Di
+         AAP(dj, "B1"),     # T1 = Dj
+         AAP(ctrl, "B2"),   # T2 = 0 (and) / 1 (or)
+         AAP("B12", dk)],   # TRA(T0,T1,T2) -> Dk
+        f"{dk} = {di} {name} {dj}",
+    )
+
+
+def and_program(di: str, dj: str, dk: str) -> Program:
+    return _and_or(di, dj, dk, "C0", "and")
+
+
+def or_program(di: str, dj: str, dk: str) -> Program:
+    return _and_or(di, dj, dk, "C1", "or")
+
+
+def _nand_nor(di: str, dj: str, dk: str, ctrl: str, name: str) -> Program:
+    return Program(
+        [AAP(di, "B0"),
+         AAP(dj, "B1"),
+         AAP(ctrl, "B2"),
+         AAP("B12", "B5"),  # DCC0 = !(TRA result)
+         AAP("B4", dk)],    # Dk = DCC0
+        f"{dk} = {di} {name} {dj}",
+    )
+
+
+def nand_program(di: str, dj: str, dk: str) -> Program:
+    return _nand_nor(di, dj, dk, "C0", "nand")
+
+
+def nor_program(di: str, dj: str, dk: str) -> Program:
+    return _nand_nor(di, dj, dk, "C1", "nor")
+
+
+def _xor_xnor(di: str, dj: str, dk: str, c_init: str, c_final: str,
+              name: str) -> Program:
+    # xor:  T1 = !Di & Dj ; T0 = Di & !Dj ; Dk = T0 | T1
+    # xnor: T1 = !Di | Dj ; T0 = Di | !Dj ; Dk = T0 & T1
+    # (same skeleton; control rows swapped — paper: "or/nor/xnor can be
+    #  implemented by appropriately modifying the control rows")
+    return Program(
+        [AAP(di, "B8"),        # DCC0 = !Di, T0 = Di
+         AAP(dj, "B9"),        # DCC1 = !Dj, T1 = Dj
+         AAP(c_init, "B10"),   # T2 = T3 = 0 (xor) / 1 (xnor)
+         AP("B14"),            # T1 = TRA(DCC0, T1, T2)
+         AP("B15"),            # T0 = TRA(DCC1, T0, T3)
+         AAP(c_final, "B2"),   # T2 = 1 (xor) / 0 (xnor)
+         AAP("B12", dk)],      # Dk = TRA(T0, T1, T2)
+        f"{dk} = {di} {name} {dj}",
+    )
+
+
+def xor_program(di: str, dj: str, dk: str) -> Program:
+    return _xor_xnor(di, dj, dk, "C0", "C1", "xor")
+
+
+def xnor_program(di: str, dj: str, dk: str) -> Program:
+    return _xor_xnor(di, dj, dk, "C1", "C0", "xnor")
+
+
+def maj3_program(da: str, db: str, dc: str, dk: str) -> Program:
+    """Native TRA majority — the hardware's actual primitive, exposed.
+
+    Not in the paper's Fig. 8 but free given the same address map; we use it
+    for majority-vote gradient aggregation (k=3) and as a paper-plus op.
+    """
+    return Program(
+        [AAP(da, "B0"),
+         AAP(db, "B1"),
+         AAP(dc, "B2"),
+         AAP("B12", dk)],
+        f"{dk} = maj({da},{db},{dc})",
+    )
+
+
+BINARY_PROGRAMS = {
+    "and": and_program,
+    "or": or_program,
+    "nand": nand_program,
+    "nor": nor_program,
+    "xor": xor_program,
+    "xnor": xnor_program,
+}
+
+
+def op_program(op: str, srcs: Sequence[str], dst: str) -> Program:
+    if op == "not":
+        (src,) = srcs
+        return not_program(src, dst)
+    if op == "maj3":
+        a, b, c = srcs
+        return maj3_program(a, b, c, dst)
+    if op == "copy":
+        (src,) = srcs
+        return copy_program(src, dst)
+    if op in BINARY_PROGRAMS:
+        a, b = srcs
+        return BINARY_PROGRAMS[op](a, b, dst)
+    raise ValueError(f"unknown op {op!r}")
+
+
+# ---------------------------------------------------------------------------
+# Expression DAG -> program, with CSE + dead-store elimination
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Expr:
+    """Boolean expression node over named D-group rows."""
+
+    op: str                       # 'row' | 'not' | 'and' | ... | 'maj3'
+    args: Tuple["Expr", ...] = ()
+    row: Optional[str] = None     # for op == 'row'
+
+    # -- sugar --
+    def __and__(self, o): return Expr("and", (self, o))
+    def __or__(self, o): return Expr("or", (self, o))
+    def __xor__(self, o): return Expr("xor", (self, o))
+    def __invert__(self): return Expr("not", (self,))
+
+    @staticmethod
+    def of(row: str) -> "Expr":
+        return Expr("row", row=row)
+
+
+def maj(a: Expr, b: Expr, c: Expr) -> Expr:
+    return Expr("maj3", (a, b, c))
+
+
+@dataclasses.dataclass
+class CompileResult:
+    program: Program
+    n_temp_rows: int
+
+
+def compile_expr(expr: Expr, dst: str, temp_prefix: str = "TMP") -> CompileResult:
+    """Lower an expression DAG to an AAP program.
+
+    Strategy: post-order walk with hash-consing (CSE). Each interior node is
+    materialized into a temporary D-row via its Fig. 8 primitive program; the
+    root is materialized directly into `dst` (dead-store elimination — no
+    final copy). Temp rows are reference-counted and recycled so the peak
+    temp-row footprint is reported (these consume D-group capacity).
+    """
+    commands: List[Command] = []
+    memo: Dict[Tuple, str] = {}
+    free_temps: List[str] = []
+    n_temps = 0
+    refcounts: Dict[Tuple, int] = {}
+
+    def key(e: Expr) -> Tuple:
+        if e.op == "row":
+            return ("row", e.row)
+        return (e.op,) + tuple(key(a) for a in e.args)
+
+    def count(e: Expr):
+        k = key(e)
+        refcounts[k] = refcounts.get(k, 0) + 1
+        if refcounts[k] == 1 and e.op != "row":
+            for a in e.args:
+                count(a)
+
+    count(expr)
+
+    def alloc_temp() -> str:
+        nonlocal n_temps
+        if free_temps:
+            return free_temps.pop()
+        name = f"{temp_prefix}{n_temps}"
+        n_temps += 1
+        return name
+
+    def release(row: str):
+        if row.startswith(temp_prefix):
+            free_temps.append(row)
+
+    def emit(e: Expr, out: Optional[str]) -> str:
+        k = key(e)
+        if e.op == "row":
+            if out is not None and out != e.row:
+                commands.extend(copy_program(e.row, out).commands)
+                return out
+            return e.row
+        if k in memo and out is None:
+            return memo[k]
+        src_rows = [emit(a, None) for a in e.args]
+        # rows that die after this op can host the result in-place: every
+        # Fig. 8 program stages its sources into designated rows before the
+        # final AAP writes the destination, so dst == src is safe.
+        dying = [r for a, r in zip(e.args, src_rows)
+                 if refcounts[key(a)] == 1 and r.startswith(temp_prefix)]
+        if out is not None:
+            dst_row = out
+        elif dying:
+            dst_row = dying[0]
+        else:
+            dst_row = alloc_temp()
+        commands.extend(op_program(e.op, src_rows, dst_row).commands)
+        for a, r in zip(e.args, src_rows):
+            refcounts[key(a)] -= 1
+            if refcounts[key(a)] == 0 and r != dst_row:
+                release(r)
+        if out is None:
+            memo[k] = dst_row
+        return dst_row
+
+    emit(expr, dst)
+    return CompileResult(Program(commands, f"{dst} = <expr>"), n_temps)

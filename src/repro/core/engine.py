@@ -1,0 +1,144 @@
+"""Functional simulator of the Buddy subarray (paper §3-§5 semantics).
+
+Executes AAP/AP command programs against a subarray state with the *exact*
+hardware semantics, including the destructive nature of triple-row activation
+(all connected cells are overwritten with the sensed result, Fig. 4 state 3)
+and the negation capture of dual-contact-cell n-wordlines (Fig. 6).
+
+The state is a dict of packed uint32 row vectors (a JAX pytree), so a whole
+program executes as traced jnp bitwise ops and can live under jit/vmap. The
+"analog" sensing rule is digital majority — `core.spice` justifies this
+abstraction against Eq. 1 charge sharing with process variation.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import addressing
+from repro.core.addressing import D_WL, N_WL, resolve
+from repro.core.commands import Activate, Precharge, Program
+
+RowState = Dict[str, jax.Array]
+
+
+class BuddyError(RuntimeError):
+    pass
+
+
+def _maj3(a, b, c):
+    return (a & b) | (b & c) | (c & a)
+
+
+@dataclasses.dataclass
+class Subarray:
+    """One subarray: named rows -> packed uint32 vectors (same shape each).
+
+    `rows` always contains T0..T3, DCC0, DCC1, C0, C1 plus any D-group rows
+    the caller installs. C0/C1 are pre-initialized (paper §3.5).
+    """
+
+    rows: RowState
+    row_words: int
+    strict: bool = True  # raise on analog-undefined sequences
+
+    @classmethod
+    def create(cls, row_words: int, data: Optional[RowState] = None,
+               batch: Tuple[int, ...] = ()) -> "Subarray":
+        shape = batch + (row_words,)
+        zeros = jnp.zeros(shape, jnp.uint32)
+        ones = jnp.full(shape, 0xFFFFFFFF, jnp.uint32)
+        rows: RowState = {
+            "T0": zeros, "T1": zeros, "T2": zeros, "T3": zeros,
+            "DCC0": zeros, "DCC1": zeros,
+            "C0": zeros, "C1": ones,
+        }
+        if data:
+            for k, v in data.items():
+                rows[k] = jnp.asarray(v, jnp.uint32)
+        return cls(rows=rows, row_words=row_words)
+
+    # -- micro-op semantics -------------------------------------------------
+
+    def run(self, program: Program) -> "Subarray":
+        """Execute a program; returns the post-state (functional)."""
+        rows = dict(self.rows)
+        sense: Optional[jax.Array] = None  # latched bitline value, None = precharged
+
+        for op in program.micro_ops():
+            if isinstance(op, Precharge):
+                sense = None
+                continue
+            assert isinstance(op, Activate)
+            wls = resolve(op.addr)
+            for r, _ in wls:
+                if r not in rows:
+                    raise BuddyError(f"activate of unknown row {r!r}")
+
+            if sense is None:
+                # First ACTIVATE after precharge: charge sharing + sensing.
+                if len(wls) == 2 and self.strict:
+                    # Dual addresses (B8-B11) sense two cells: ties are
+                    # analog-undefined; hardware only uses them as the second
+                    # ACTIVATE of an AAP.
+                    raise BuddyError(
+                        f"{op.addr} raises 2 wordlines from precharged state; "
+                        "majority of 2 is undefined on disagreement")
+                # Effective bitline contribution: cells on bitline-bar
+                # (n-wordline) contribute their complement.
+                vals = [rows[r] if pol == D_WL else ~rows[r] for r, pol in wls]
+                if len(vals) == 1:
+                    sense = vals[0]
+                elif len(vals) == 3:
+                    sense = _maj3(*vals)  # TRA (§3.1)
+                else:
+                    sense = vals[0]
+                # Sense amplification restores/overwrites every raised cell
+                # with the (polarity-adjusted) result — TRA is destructive.
+                for r, pol in wls:
+                    rows[r] = sense if pol == D_WL else ~sense
+            else:
+                # Second ACTIVATE while the bank is active (split decoder,
+                # §5.3): the sense amps force the raised cells to the
+                # already-latched result.
+                for r, pol in wls:
+                    rows[r] = sense if pol == D_WL else ~sense
+
+        return Subarray(rows=rows, row_words=self.row_words, strict=self.strict)
+
+    # -- convenience --------------------------------------------------------
+
+    def read(self, addr: str) -> jax.Array:
+        return self.rows[addr]
+
+    def write(self, addr: str, value: jax.Array) -> "Subarray":
+        rows = dict(self.rows)
+        rows[addr] = jnp.asarray(value, jnp.uint32)
+        return Subarray(rows=rows, row_words=self.row_words, strict=self.strict)
+
+
+def execute(program: Program, data: RowState, row_words: Optional[int] = None,
+            outputs: Optional[List[str]] = None) -> RowState:
+    """One-shot helper: run `program` over `data` rows, return named rows.
+
+    Rows referenced by the program but missing from `data` (e.g. destination
+    or temp rows) are implicitly created as zero rows.
+    """
+    if row_words is None:
+        row_words = next(iter(data.values())).shape[-1]
+    sample = jnp.asarray(next(iter(data.values())))
+    batch = sample.shape[:-1]
+    full: RowState = dict(data)
+    for addr in program.activates():
+        for r, _ in resolve(addr):
+            if r not in full and r not in addressing.B_GROUP_ROWS \
+                    and r not in addressing.C_GROUP_ROWS:
+                full[r] = jnp.zeros(batch + (row_words,), jnp.uint32)
+    sub = Subarray.create(row_words, full, batch=batch)
+    out = sub.run(program)
+    if outputs is None:
+        return out.rows
+    return {k: out.rows[k] for k in outputs}

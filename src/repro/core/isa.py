@@ -1,0 +1,91 @@
+"""The `bop` instruction layer (paper §6.2): dispatch Buddy vs CPU.
+
+bop(dst, src1, [src2], size): the microarchitecture checks row alignment and
+size, counts required RowClone-PSM staging copies, and executes on Buddy
+unless (a) operands are misaligned/too small or (b) 3 PSM copies are needed
+(where the CPU path is faster, §3.5). This module implements that dispatch
+against the allocator's placement and executes both paths functionally so
+results are bit-identical.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import compiler, engine, timing
+from repro.core.allocator import DramAllocator
+from repro.core.rowclone import DEFAULT_ROWCLONE, op_latency_with_placement
+from repro.core.timing import DDR3_1600
+
+
+@dataclasses.dataclass
+class BopResult:
+    value: jax.Array          # packed uint32 result
+    path: str                 # 'buddy' | 'cpu'
+    latency_ns: float
+    n_psm: int
+
+
+_JNP_OPS = {
+    "not": lambda a: ~a,
+    "and": lambda a, b: a & b,
+    "or": lambda a, b: a | b,
+    "nand": lambda a, b: ~(a & b),
+    "nor": lambda a, b: ~(a | b),
+    "xor": lambda a, b: a ^ b,
+    "xnor": lambda a, b: ~(a ^ b),
+    "maj3": lambda a, b, c: (a & b) | (b & c) | (c & a),
+}
+
+
+class BuddyDevice:
+    """Holds named packed rows + their DRAM placement; executes bop()s."""
+
+    def __init__(self, allocator: Optional[DramAllocator] = None,
+                 row_bits: Optional[int] = None):
+        self.alloc = allocator or DramAllocator()
+        if row_bits is not None:
+            geom = dataclasses.replace(self.alloc.geometry, row_bits=row_bits)
+            self.alloc.geometry = geom
+        self.rows: Dict[str, jax.Array] = {}
+
+    @property
+    def row_bits(self) -> int:
+        return self.alloc.geometry.row_bits
+
+    def store(self, name: str, words: jax.Array, group: Optional[str] = None):
+        assert words.shape[-1] * 32 == self.row_bits, \
+            f"bop operands must be row-sized ({self.row_bits} bits)"
+        self.alloc.alloc(name, self.row_bits, group=group)
+        self.rows[name] = jnp.asarray(words, jnp.uint32)
+
+    def bop(self, op: str, dst: str, srcs: List[str],
+            group: Optional[str] = None) -> BopResult:
+        if dst not in self.rows:
+            self.store(dst, jnp.zeros_like(self.rows[srcs[0]]), group=group)
+        n_psm = self.alloc.psm_copies_for_op(srcs, dst)
+        use_cpu = n_psm >= 3  # §6.2.2 dispatch rule
+        if use_cpu:
+            value = _JNP_OPS[op](*[self.rows[s] for s in srcs])
+            lat = _cpu_latency_ns(op, self.row_bits)
+            path = "cpu"
+        else:
+            prog = compiler.op_program(op, srcs, dst)
+            out = engine.execute(prog, {s: self.rows[s] for s in srcs},
+                                 outputs=[dst])
+            value = out[dst]
+            lat = op_latency_with_placement(
+                n_fpm_aap=prog.n_aap, n_psm_copies=n_psm,
+                aap_ns=DDR3_1600.aap_ns) + prog.n_ap * DDR3_1600.ap_ns
+            path = "buddy"
+        self.rows[dst] = value
+        return BopResult(value=value, path=path, latency_ns=lat, n_psm=n_psm)
+
+
+def _cpu_latency_ns(op: str, row_bits: int) -> float:
+    bytes_out = row_bits // 8
+    gbps = timing.baseline_throughput_gbps(op, timing.SKYLAKE)
+    return bytes_out / gbps

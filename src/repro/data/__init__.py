@@ -1,0 +1,2 @@
+from repro.data.pipeline import SyntheticLM, host_shard
+from repro.data.bitmap_filter import CorpusCatalog, build_filter

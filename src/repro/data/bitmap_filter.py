@@ -1,0 +1,101 @@
+"""Bitmap-index corpus curation — the paper's §8.1/§8.2 machinery as a
+training-data pipeline stage.
+
+A corpus catalog keeps one packed bitmap per document attribute (language,
+quality tier, dedup-canonical, toxicity flag, ...) plus BitWeaving-V vertical
+columns for integer metadata (token counts). A filter expression is compiled
+to bulk bitwise ops over the packed bitmaps (AND/OR/NOT — on hardware these
+are Buddy AAP programs; here the fused TPU kernels) and BitWeaving range
+scans, yielding the eligible-document bitmap that drives sampling.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.bitplane import pack_bits, unpack_bits
+from repro.ops.bitwise import bitwise_and, bitwise_not, bitwise_or
+from repro.ops.popcount import popcount_words
+from repro.ops.predicate import VerticalColumn
+
+
+@dataclasses.dataclass
+class CorpusCatalog:
+    """n_docs documents with boolean attribute bitmaps and integer columns."""
+
+    attrs: Dict[str, jax.Array]            # name -> (n_words,) uint32 packed
+    columns: Dict[str, VerticalColumn]     # name -> vertical int column
+    n_docs: int
+
+    @classmethod
+    def synthetic(cls, key, n_docs: int,
+                  attr_p: Optional[Dict[str, float]] = None,
+                  token_bits: int = 12) -> "CorpusCatalog":
+        attr_p = attr_p or {"lang_en": 0.6, "quality_hi": 0.3,
+                            "dedup_canonical": 0.8, "toxic": 0.05}
+        keys = jax.random.split(key, len(attr_p) + 1)
+        attrs = {name: pack_bits(jax.random.bernoulli(k, p, (n_docs,)))
+                 for (name, p), k in zip(attr_p.items(), keys[:-1])}
+        n_tokens = jax.random.randint(keys[-1], (n_docs,), 0,
+                                      (1 << token_bits) - 1)
+        cols = {"n_tokens": VerticalColumn.encode(n_tokens, token_bits)}
+        return cls(attrs, cols, n_docs)
+
+
+def build_filter(cat: CorpusCatalog,
+                 require: Sequence[str] = (),
+                 exclude: Sequence[str] = (),
+                 ranges: Optional[Dict[str, Tuple[int, int]]] = None
+                 ) -> Tuple[jax.Array, int]:
+    """Compile and evaluate a filter; returns (packed eligibility bitmap,
+    n_eligible). `require`: attributes that must be 1; `exclude`: must be 0;
+    `ranges`: integer column lo <= v <= hi (BitWeaving scan)."""
+    acc = None
+
+    def et(a, b):
+        return b if a is None else bitwise_and(a, b)
+
+    for name in require:
+        acc = et(acc, cat.attrs[name])
+    for name in exclude:
+        acc = et(acc, bitwise_not(cat.attrs[name]))
+    for name, (lo, hi) in (ranges or {}).items():
+        acc = et(acc, cat.columns[name].scan(lo, hi).words)
+    if acc is None:
+        acc = jnp.full(((cat.n_docs + 31) // 32,), 0xFFFFFFFF, jnp.uint32)
+    # mask tail padding
+    n_valid = int(popcount_words(_mask_tail(acc, cat.n_docs)).sum())
+    return acc, n_valid
+
+
+def _mask_tail(packed: jax.Array, n: int) -> jax.Array:
+    nw = packed.shape[-1]
+    full_bits = nw * 32
+    if full_bits == n:
+        return packed
+    idx = jnp.arange(nw) * 32
+    bits_here = jnp.clip(n - idx, 0, 32)
+    mask = jnp.where(bits_here >= 32, jnp.uint32(0xFFFFFFFF),
+                     (jnp.uint32(1) << bits_here.astype(jnp.uint32)) - 1)
+    return packed & mask
+
+
+def eligible_indices(packed: jax.Array, n_docs: int) -> np.ndarray:
+    """Unpack the eligibility bitmap into document indices (host-side)."""
+    bits = np.asarray(unpack_bits(packed, n_docs))
+    return np.nonzero(bits)[0]
+
+
+def sample_eligible(key, packed: jax.Array, n_docs: int, batch: int
+                    ) -> jax.Array:
+    """Uniformly sample `batch` eligible document ids (jit-friendly:
+    gumbel-top-k over the eligibility mask)."""
+    bits = unpack_bits(packed, n_docs).astype(jnp.float32)
+    g = jax.random.gumbel(key, (n_docs,))
+    scored = jnp.where(bits > 0, g, -jnp.inf)
+    _, idx = jax.lax.top_k(scored, batch)
+    return idx.astype(jnp.int32)

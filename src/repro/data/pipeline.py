@@ -1,0 +1,76 @@
+"""Deterministic synthetic data pipeline.
+
+Batches are pure functions of (seed, step): restart/elastic-resume replays
+the exact token stream with no iterator state to checkpoint beyond the step
+counter. `host_shard` carves the per-host slice for multi-host deployment
+(each host feeds its addressable devices; under a single-process dry run it
+is the identity).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+
+@dataclasses.dataclass
+class SyntheticLM:
+    """Markov-ish synthetic LM stream: token t+1 depends on token t plus
+    step-keyed noise, so models can actually reduce loss on it (used by the
+    end-to-end training convergence tests and examples)."""
+
+    vocab_size: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    n_frontend_tokens: int = 0
+    frontend_dim: int = 0
+    frontend_name: str = ""
+
+    def batch(self, step: int) -> Dict[str, jax.Array]:
+        key = jax.random.fold_in(jax.random.PRNGKey(self.seed), step)
+        k1, k2, k3 = jax.random.split(key, 3)
+        B, S, V = self.global_batch, self.seq_len, self.vocab_size
+        base = jax.random.randint(k1, (B, 1), 0, V)
+        drift = jax.random.randint(k2, (B, S), 0, 7)
+        toks = (base + jnp.cumsum(drift, axis=1)) % V
+        toks = toks.astype(jnp.int32)
+        batch = {
+            "tokens": toks,
+            "labels": jnp.roll(toks, -1, axis=1).astype(jnp.int32),
+            "mask": jnp.ones((B, S), jnp.float32).at[:, -1].set(0.0),
+        }
+        if self.frontend_name:
+            batch[self.frontend_name] = jax.random.normal(
+                k3, (B, self.n_frontend_tokens, self.frontend_dim),
+                jnp.bfloat16)
+        return batch
+
+    @classmethod
+    def for_cell(cls, cfg: ModelConfig, shape: ShapeConfig,
+                 seed: int = 0) -> "SyntheticLM":
+        name = ""
+        if cfg.frontend:
+            name = "frames" if cfg.frontend == "audio" else "patches"
+        return cls(vocab_size=cfg.vocab_size, seq_len=shape.seq_len,
+                   global_batch=shape.global_batch, seed=seed,
+                   n_frontend_tokens=cfg.n_frontend_tokens,
+                   frontend_dim=cfg.frontend_dim or cfg.d_model,
+                   frontend_name=name)
+
+
+def host_shard(batch: Dict[str, Any], host_id: int = 0, n_hosts: int = 1
+               ) -> Dict[str, Any]:
+    """Slice the per-host portion of a global batch (leading axis)."""
+    if n_hosts == 1:
+        return batch
+
+    def s(x):
+        per = x.shape[0] // n_hosts
+        return x[host_id * per:(host_id + 1) * per]
+    return jax.tree.map(s, batch)

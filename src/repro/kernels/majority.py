@@ -1,0 +1,81 @@
+"""Majority-of-k over packed bit-planes — generalized triple-row activation.
+
+TRA computes MAJ3 in analog; lifting the paper's primitive to k operands
+(needed for majority-vote gradient aggregation across k data-parallel
+workers) uses a carry-save adder network: each bit position accumulates a
+ceil(log2(k+1))-bit counter held as bit-planes in VREGs, then a bit-serial
+>= threshold comparison produces the packed majority word. Total work is
+O(k log k) VPU bit-ops per word — no unpacking, no integer widening; the
+operand planes stream through VMEM exactly once.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.common import (LANE, SUBLANE, pad_to, pick_block, round_up,
+                                  use_interpret)
+
+
+def _csa_add_bit(counter, bit):
+    """Ripple-add a 1-bit plane into an LSB-first list of counter planes."""
+    carry = bit
+    out = []
+    for s in counter:
+        out.append(s ^ carry)
+        carry = s & carry
+    return out, carry
+
+
+def _ge_const(counter, threshold: int):
+    """Packed (counter >= threshold), counter is LSB-first plane list."""
+    ones = jnp.full_like(counter[0], 0xFFFFFFFF)
+    zeros = jnp.zeros_like(counter[0])
+    ge = zeros
+    eq = ones
+    for j in range(len(counter) - 1, -1, -1):
+        tj = ones if ((threshold >> j) & 1) else zeros
+        ge = ge | (eq & counter[j] & ~tj)
+        eq = eq & ~(counter[j] ^ tj)
+    return ge | eq
+
+
+def _majority_kernel(k: int, threshold: int):
+    import math
+
+    n_planes = max(1, math.ceil(math.log2(k + 1)))
+
+    def kern(x_ref, o_ref):
+        counter = [jnp.zeros_like(x_ref[0]) for _ in range(n_planes)]
+        for i in range(k):  # static unroll: k is a compile-time constant
+            counter, _ = _csa_add_bit(counter, x_ref[i])
+        o_ref[...] = _ge_const(counter, threshold)
+
+    return kern
+
+
+@functools.partial(jax.jit, static_argnums=(1,),
+                   static_argnames=("threshold", "block_rows", "block_cols"))
+def majority_kernel(planes: jax.Array, threshold: int | None = None,
+                    block_rows: int = SUBLANE, block_cols: int = 2048
+                    ) -> jax.Array:
+    """planes: (k, rows, words) uint32 -> (rows, words) packed majority."""
+    k, r, w = planes.shape
+    if threshold is None:
+        threshold = k // 2 + 1
+    br = pick_block(r, block_rows, SUBLANE)
+    bw = pick_block(w, block_cols, LANE)
+    rp, wp = round_up(r, br), round_up(w, bw)
+    x = pad_to(jnp.asarray(planes, jnp.uint32), (k, rp, wp))
+    out = pl.pallas_call(
+        _majority_kernel(k, threshold),
+        grid=(rp // br, wp // bw),
+        in_specs=[pl.BlockSpec((k, br, bw), lambda i, j: (0, i, j))],
+        out_specs=pl.BlockSpec((br, bw), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((rp, wp), jnp.uint32),
+        interpret=use_interpret(),
+    )(x)
+    return out[:r, :w]

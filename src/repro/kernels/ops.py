@@ -1,0 +1,67 @@
+"""Public jit'd wrappers over the Pallas kernels (with ref fallbacks)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.bitwise import bitwise_kernel
+from repro.kernels.bittranspose import (bit_transpose_kernel,
+                                        bit_untranspose_kernel)
+from repro.kernels.bitweaving import bitweaving_scan_kernel
+from repro.kernels.flashattn import flash_attention  # noqa: F401
+from repro.kernels.majority import majority_kernel
+from repro.kernels.popcount import popcount_kernel
+from repro.kernels.signpack import pack_signs_kernel, unpack_signs_kernel
+
+
+def bitwise(op: str, *args: jax.Array, **kw) -> jax.Array:
+    """Fused bitwise op on 2-D (rows, words) uint32 arrays."""
+    args = tuple(jnp.asarray(a, jnp.uint32) for a in args)
+    if args[0].ndim == 1:
+        out = bitwise_kernel(op, *(a[None, :] for a in args), **kw)
+        return out[0]
+    return bitwise_kernel(op, *args, **kw)
+
+
+def majority(planes: jax.Array, threshold: int | None = None, **kw) -> jax.Array:
+    """(k, rows, words) -> (rows, words) packed majority (generalized TRA)."""
+    if planes.ndim == 2:
+        return majority_kernel(planes[:, None, :], threshold, **kw)[0]
+    return majority_kernel(planes, threshold, **kw)
+
+
+def popcount(words: jax.Array, **kw) -> jax.Array:
+    if words.ndim == 1:
+        words = words[None, :]
+    return popcount_kernel(words, **kw)
+
+
+def bit_transpose(values: jax.Array, n_bits: int, **kw) -> jax.Array:
+    """(n,) uint32 -> (n_bits, n//32) vertical planes (LSB-first order)."""
+    return bit_transpose_kernel(values, **kw)[:n_bits]
+
+
+def bit_untranspose(planes: jax.Array, n_bits: int, **kw) -> jax.Array:
+    b, g = planes.shape
+    if b < 32:
+        planes = jnp.concatenate(
+            [planes, jnp.zeros((32 - b, g), jnp.uint32)], axis=0)
+    return bit_untranspose_kernel(planes, **kw)
+
+
+def bitweaving_scan(planes: jax.Array, c1: int, c2: int, n_bits: int, **kw
+                    ) -> jax.Array:
+    return bitweaving_scan_kernel(planes, c1, c2, n_bits, **kw)
+
+
+def pack_signs(x: jax.Array, **kw) -> jax.Array:
+    if x.ndim == 1:
+        return pack_signs_kernel(x[None, :], **kw)[0]
+    return pack_signs_kernel(x, **kw)
+
+
+def unpack_signs(words: jax.Array, dtype=jnp.float32, **kw) -> jax.Array:
+    if words.ndim == 1:
+        return unpack_signs_kernel(words[None, :], dtype, **kw)[0]
+    return unpack_signs_kernel(words, dtype, **kw)

@@ -1,0 +1,50 @@
+"""Popcount reduction kernel: SWAR per word, per-block partial sums.
+
+Buddy keeps `bitcount` on the CPU (paper §8.1); on TPU we keep it resident:
+each grid cell reduces an (8, bw) uint32 block to one int32 partial with the
+Hacker's-Delight SWAR sequence on the VPU, and the partials are summed by XLA.
+Bytes moved: N words in, N/(br*bw) partials out — pure memory-bound streaming.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.common import (LANE, SUBLANE, pad_to, pick_block, round_up,
+                                  use_interpret)
+
+
+def _popcount_swar(w):
+    w = w - ((w >> 1) & jnp.uint32(0x55555555))
+    w = (w & jnp.uint32(0x33333333)) + ((w >> 2) & jnp.uint32(0x33333333))
+    w = (w + (w >> 4)) & jnp.uint32(0x0F0F0F0F)
+    return (w * jnp.uint32(0x01010101)) >> 24
+
+
+def _kern(x_ref, o_ref):
+    o_ref[0, 0] = _popcount_swar(x_ref[...]).astype(jnp.int32).sum()
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_rows", "block_cols"))
+def popcount_kernel(words: jax.Array, block_rows: int = SUBLANE,
+                    block_cols: int = 2048) -> jax.Array:
+    """words: (rows, words) uint32 -> scalar int64 total popcount."""
+    r, w = words.shape
+    br = pick_block(r, block_rows, SUBLANE)
+    bw = pick_block(w, block_cols, LANE)
+    rp, wp = round_up(r, br), round_up(w, bw)
+    x = pad_to(jnp.asarray(words, jnp.uint32), (rp, wp))
+    partials = pl.pallas_call(
+        _kern,
+        grid=(rp // br, wp // bw),
+        in_specs=[pl.BlockSpec((br, bw), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((1, 1), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((rp // br, wp // bw), jnp.int32),
+        interpret=use_interpret(),
+    )(x)
+    # int32 is exact up to 2^31 set bits (= 256 MiB of all-ones input).
+    return partials.sum(dtype=jnp.int32)

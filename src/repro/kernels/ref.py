@@ -1,0 +1,155 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the semantic ground truth: each kernel's test sweeps shapes/dtypes
+and asserts exact equality (bitwise ops) / allclose (float paths) against
+these functions. They are also the small-input fallback dispatch path.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# fused bitwise ops
+# ---------------------------------------------------------------------------
+
+BITWISE_OPS = {
+    "and": lambda a, b: a & b,
+    "or": lambda a, b: a | b,
+    "xor": lambda a, b: a ^ b,
+    "nand": lambda a, b: ~(a & b),
+    "nor": lambda a, b: ~(a | b),
+    "xnor": lambda a, b: ~(a ^ b),
+    "andnot": lambda a, b: a & ~b,
+    "not": lambda a: ~a,
+    "maj3": lambda a, b, c: (a & b) | (b & c) | (c & a),
+}
+
+
+def bitwise(op: str, *args: jax.Array) -> jax.Array:
+    args = tuple(jnp.asarray(a, jnp.uint32) for a in args)
+    return BITWISE_OPS[op](*args)
+
+
+# ---------------------------------------------------------------------------
+# majority over k bit-planes (generalized TRA)
+# ---------------------------------------------------------------------------
+
+
+def majority_k(planes: jax.Array, threshold: int | None = None) -> jax.Array:
+    """planes: (k, ...) uint32. Majority (count > k/2), or count >= threshold.
+
+    Oracle implementation: unpack each bit position and count — O(32k) work,
+    exact by construction.
+    """
+    k = planes.shape[0]
+    if threshold is None:
+        threshold = k // 2 + 1
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    bits = (planes[..., None] >> shifts) & jnp.uint32(1)   # (k, ..., 32)
+    counts = bits.astype(jnp.int32).sum(axis=0)            # (..., 32)
+    maj = (counts >= threshold).astype(jnp.uint32)
+    return (maj << shifts).sum(axis=-1).astype(jnp.uint32)
+
+
+# ---------------------------------------------------------------------------
+# popcount
+# ---------------------------------------------------------------------------
+
+
+def popcount(words: jax.Array) -> jax.Array:
+    from repro.ops.popcount import popcount_words
+
+    return popcount_words(words)
+
+
+# ---------------------------------------------------------------------------
+# BitWeaving-V bit transpose: values -> vertical bit planes
+# ---------------------------------------------------------------------------
+
+
+def bit_transpose(values: jax.Array, n_bits: int) -> jax.Array:
+    """values: (n,) uint32 integers (< 2**n_bits), n % 32 == 0.
+
+    Returns planes: (n_bits, n//32) uint32 — plane j, word g, bit i equals
+    bit j of values[32*g + i] (LSB-first packing; plane 0 = LSB).
+    """
+    n = values.shape[0]
+    assert n % 32 == 0
+    v = values.astype(jnp.uint32)
+    planes = []
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    for j in range(n_bits):
+        bits = (v >> jnp.uint32(j)) & jnp.uint32(1)
+        w = (bits.reshape(-1, 32) << shifts).sum(-1).astype(jnp.uint32)
+        planes.append(w)
+    return jnp.stack(planes)
+
+
+def bit_untranspose(planes: jax.Array, n_bits: int) -> jax.Array:
+    """Inverse of bit_transpose -> (n,) uint32 values."""
+    b, g = planes.shape
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    bits = (planes[:, :, None] >> shifts) & jnp.uint32(1)   # (b, g, 32)
+    bits = bits.reshape(b, g * 32)
+    vals = jnp.zeros((g * 32,), jnp.uint32)
+    for j in range(n_bits):
+        vals = vals | (bits[j] << jnp.uint32(j))
+    return vals
+
+
+# ---------------------------------------------------------------------------
+# BitWeaving-V predicate scan: c1 <= v <= c2 over vertical planes
+# ---------------------------------------------------------------------------
+
+
+def _cmp_planes(planes: jax.Array, c: int, n_bits: int
+                ) -> Tuple[jax.Array, jax.Array]:
+    """Bit-serial compare of every packed column value against constant c.
+
+    Returns (lt, eq) packed words. Scans MSB -> LSB (BitWeaving §4).
+    """
+    g = planes.shape[1]
+    ones = jnp.full((g,), 0xFFFFFFFF, jnp.uint32)
+    zeros = jnp.zeros((g,), jnp.uint32)
+    lt, eq = zeros, ones
+    for j in range(n_bits - 1, -1, -1):
+        cj = ones if ((c >> j) & 1) else zeros
+        lt = lt | (eq & ~planes[j] & cj)
+        eq = eq & ~(planes[j] ^ cj)
+    return lt, eq
+
+
+def bitweaving_scan(planes: jax.Array, c1: int, c2: int, n_bits: int) -> jax.Array:
+    """Result bitvector of predicate c1 <= v <= c2 (paper §8.2 query)."""
+    lt1, eq1 = _cmp_planes(planes, c1, n_bits)
+    lt2, eq2 = _cmp_planes(planes, c2, n_bits)
+    ge_c1 = ~lt1
+    le_c2 = lt2 | eq2
+    return ge_c1 & le_c2
+
+
+# ---------------------------------------------------------------------------
+# sign pack / unpack (1-bit gradient compression)
+# ---------------------------------------------------------------------------
+
+
+def pack_signs(x: jax.Array) -> jax.Array:
+    """x: (..., 32*w) float -> (..., w) uint32; bit = IEEE sign bit
+    (jnp.signbit: true for -0.0, matching the kernel's bitcast path)."""
+    n = x.shape[-1]
+    assert n % 32 == 0
+    bits = jnp.signbit(x).astype(jnp.uint32)
+    bits = bits.reshape(x.shape[:-1] + (n // 32, 32))
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    return (bits << shifts).sum(-1).astype(jnp.uint32)
+
+
+def unpack_signs(words: jax.Array, dtype=jnp.float32) -> jax.Array:
+    """(..., w) uint32 -> (..., 32*w) in {-1, +1} (bit=1 -> -1)."""
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    bits = (words[..., :, None] >> shifts) & jnp.uint32(1)
+    bits = bits.reshape(words.shape[:-1] + (words.shape[-1] * 32,))
+    return (1.0 - 2.0 * bits.astype(dtype)).astype(dtype)

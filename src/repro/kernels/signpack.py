@@ -1,0 +1,92 @@
+"""Sign pack/unpack kernels: 32:1 gradient compression for majority-vote
+signSGD (the Buddy technique lifted to the data-parallel collective).
+
+pack:   (r, 32*w) float32/bf16 -> (r, w) uint32, bit i = sign bit of lane i.
+unpack: (r, w) uint32 -> (r, 32*w) {-1,+1} float.
+
+The pack kernel extracts IEEE sign bits with a bitcast + logical shift (no
+compares, no selects) and folds 32 lanes/word with the shift-or tree on the
+VPU. This runs as the producer stage right before the all-gather in
+`optim/signum.py`, so only packed words cross the ICI.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.common import (LANE, SUBLANE, pad_to, pick_block, round_up,
+                                  use_interpret)
+
+
+def _pack_kern(x_ref, o_ref):
+    x = x_ref[...]
+    # IEEE sign bit -> {0,1}; works for f32 via bitcast, other dtypes via <0.
+    if x.dtype == jnp.float32:
+        bits = jax.lax.bitcast_convert_type(x, jnp.uint32) >> 31
+    else:
+        bits = jnp.signbit(x).astype(jnp.uint32)
+    r, n = bits.shape
+    bits = bits.reshape(r, n // 32, 32)
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    o_ref[...] = (bits << shifts).sum(axis=-1).astype(jnp.uint32)
+
+
+def _unpack_kern(dtype):
+    def kern(w_ref, o_ref):
+        w = w_ref[...]
+        r, nw = w.shape
+        shifts = jnp.arange(32, dtype=jnp.uint32)
+        bits = (w[:, :, None] >> shifts) & jnp.uint32(1)
+        o_ref[...] = (1.0 - 2.0 * bits.astype(jnp.float32)).astype(dtype) \
+            .reshape(r, nw * 32)
+
+    return kern
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_rows", "block_words"))
+def pack_signs_kernel(x: jax.Array, block_rows: int = SUBLANE,
+                      block_words: int = 512) -> jax.Array:
+    """x: (r, n) float, n % 32 == 0 -> (r, n//32) uint32."""
+    r, n = x.shape
+    assert n % 32 == 0
+    w = n // 32
+    br = pick_block(r, block_rows, SUBLANE)
+    bw = pick_block(w, block_words, LANE)
+    rp, wp = round_up(r, br), round_up(w, bw)
+    # pad with +0.0 => sign bit 0 in padding
+    xp = pad_to(x, (rp, wp * 32))
+    out = pl.pallas_call(
+        _pack_kern,
+        grid=(rp // br, wp // bw),
+        in_specs=[pl.BlockSpec((br, bw * 32), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((br, bw), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((rp, wp), jnp.uint32),
+        interpret=use_interpret(),
+    )(xp)
+    return out[:r, :w]
+
+
+@functools.partial(jax.jit, static_argnums=(1,),
+                   static_argnames=("block_rows", "block_words"))
+def unpack_signs_kernel(words: jax.Array, dtype=jnp.float32,
+                        block_rows: int = SUBLANE, block_words: int = 512
+                        ) -> jax.Array:
+    """words: (r, w) uint32 -> (r, 32*w) in {-1,+1}."""
+    r, w = words.shape
+    br = pick_block(r, block_rows, SUBLANE)
+    bw = pick_block(w, block_words, LANE)
+    rp, wp = round_up(r, br), round_up(w, bw)
+    x = pad_to(jnp.asarray(words, jnp.uint32), (rp, wp))
+    out = pl.pallas_call(
+        _unpack_kern(dtype),
+        grid=(rp // br, wp // bw),
+        in_specs=[pl.BlockSpec((br, bw), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((br, bw * 32), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((rp, wp * 32), dtype),
+        interpret=use_interpret(),
+    )(x)
+    return out[:r, : w * 32]

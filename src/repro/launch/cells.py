@@ -1,0 +1,175 @@
+"""Cell construction: one (architecture x input-shape x mesh) dry-run cell =
+a jitted step function + ShapeDtypeStruct arguments + shardings.
+
+Used by dryrun.py (lower/compile/memory/cost), roofline.py (term extraction)
+and the perf pass (plans with overrides). No device allocation happens here —
+everything is abstract until `.lower().compile()`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import (ModelConfig, SHAPES, ShapeConfig, get_config)
+from repro.dist.sharding import (DECODE_SP_RULES, DEFAULT_RULES, DP_RULES,
+                                 SP_RULES, axis_rules, resolve_spec,
+                                 tree_shardings)
+from repro.launch.plans import CellPlan, plan_for
+from repro.models import registry
+from repro.optim.optimizers import get_optimizer
+from repro.optim.schedules import warmup_cosine
+from repro.train.step import make_train_step
+
+
+def rules_named(name: str):
+    return {"default": DEFAULT_RULES, "sp": SP_RULES,
+            "decode_sp": DECODE_SP_RULES, "dp": DP_RULES}.get(
+        name, DEFAULT_RULES)
+
+
+@dataclasses.dataclass
+class Cell:
+    arch: str
+    shape: ShapeConfig
+    plan: CellPlan
+    fn: Callable                  # the function to lower
+    args: Tuple                   # ShapeDtypeStruct args
+    in_shardings: Tuple
+    out_shardings: Any            # or None (auto)
+    mesh: Mesh
+
+    def lower(self):
+        from repro.models.layers import attention_backend, attention_remat
+        from repro.models.moe import moe_constraints
+        with self.mesh, axis_rules(self.mesh, rules_named(self.plan.rules)), \
+                attention_remat(self.plan.attn_remat), \
+                attention_backend(self.plan.attn_kernel), \
+                moe_constraints(self.plan.moe_constrain):
+            jitted = jax.jit(self.fn, in_shardings=self.in_shardings,
+                             out_shardings=self.out_shardings)
+            return jitted.lower(*self.args)
+
+
+def _batch_shardings(cfg, shape, mesh, rules):
+    specs = registry.batch_logical_specs(cfg, shape)
+    abstract = registry.input_specs(cfg, shape)
+    return tree_shardings(abstract, specs, mesh, rules), abstract
+
+
+def build_cell(arch: str, shape_name: str, mesh: Mesh,
+               overrides: Optional[dict] = None,
+               reduce_config: bool = False,
+               shape_override: Optional[ShapeConfig] = None) -> Cell:
+    cfg = get_config(arch)
+    if reduce_config:
+        from repro.configs.base import reduced
+        cfg = reduced(cfg)
+    shape = shape_override or SHAPES[shape_name]
+    plan = plan_for(cfg, shape, overrides)
+    # clamp accumulation to a divisor of the (possibly overridden) batch
+    accum = plan.grad_accum
+    while accum > 1 and shape.global_batch % accum:
+        accum //= 2
+    if accum != plan.grad_accum:
+        plan = dataclasses.replace(plan, grad_accum=accum)
+    rules = rules_named(plan.rules)
+    bundle = registry.build(cfg, remat=plan.remat)
+    param_shapes, param_specs = bundle.abstract()
+    with axis_rules(mesh, rules):
+        p_shard = tree_shardings(param_shapes, param_specs, mesh, rules)
+
+        if shape.kind == "train":
+            if plan.compressed_dp:
+                # majority-vote 1-bit signSGD inside shard_map over the DP
+                # axes — the paper's TRA as the gradient collective.
+                from repro.train.step import make_train_step_compressed
+                dp_axes = tuple(a for a in ("pod", "data")
+                                if a in mesh.axis_names)
+                # use_kernel=False: interpret-mode pallas does not partition
+                # under GSPMD (dry-run only; the pack/majority kernels are
+                # exercised by tests/test_kernels.py on their own)
+                opt = get_optimizer("signum",
+                                    warmup_cosine(3e-4, 100, 10_000),
+                                    axis_name=(dp_axes if len(dp_axes) > 1
+                                               else dp_axes[0]),
+                                    use_kernel=False)
+                opt_shapes = jax.eval_shape(opt.init, param_shapes)
+                o_shard = _opt_shardings(opt_shapes, param_shapes,
+                                         param_specs, mesh, rules)
+                step_fn = make_train_step_compressed(
+                    bundle, opt, mesh, dp_axes=dp_axes,
+                    grad_accum=plan.grad_accum)
+            else:
+                opt = get_optimizer(plan.optimizer,
+                                    warmup_cosine(3e-4, 100, 10_000))
+                opt_shapes = jax.eval_shape(opt.init, param_shapes)
+                o_shard = _opt_shardings(opt_shapes, param_shapes,
+                                         param_specs, mesh, rules)
+                step_fn = make_train_step(bundle, opt,
+                                          grad_accum=plan.grad_accum)
+            b_shard, b_abs = _batch_shardings(cfg, shape, mesh, rules)
+            args = (param_shapes, opt_shapes,
+                    jax.ShapeDtypeStruct((), jnp.int32), b_abs)
+            in_sh = (p_shard, o_shard, NamedSharding(mesh, P()), b_shard)
+            out_sh = (p_shard, o_shard, None)
+            return Cell(arch, shape, plan, step_fn, args, in_sh, out_sh, mesh)
+
+        if shape.kind == "prefill":
+            b_shard, b_abs = _batch_shardings(cfg, shape, mesh, rules)
+
+            def prefill_fn(params, batch):
+                return bundle.prefill(params, batch)
+
+            args = (param_shapes, b_abs)
+            in_sh = (p_shard, b_shard)
+            return Cell(arch, shape, plan, prefill_fn, args, in_sh, None,
+                        mesh)
+
+        # decode: serve_step(params, token, cache, pos)
+        b_shard, b_abs = _batch_shardings(cfg, shape, mesh, rules)
+
+        def serve_step(params, token, cache, pos):
+            return bundle.decode_step(params, token, cache, pos)
+
+        args = (param_shapes, b_abs["token"], b_abs["cache"], b_abs["pos"])
+        in_sh = (p_shard, b_shard["token"], b_shard["cache"],
+                 NamedSharding(mesh, P()))
+        # cache out must match cache in (steady-state decode loop)
+        out_sh = (None, b_shard["cache"])
+        return Cell(arch, shape, plan, serve_step, args, in_sh, out_sh, mesh)
+
+
+def _opt_shardings(opt_shapes, param_shapes, param_specs, mesh, rules):
+    """Optimizer state mirrors params (adamw m/v, signum mu/err) or carries
+    factored stats (adafactor r/c) — derive shardings leaf-by-leaf: any leaf
+    whose shape matches the param's gets the param spec; reduced-rank
+    (factored) leaves inherit the matching prefix/suffix of the spec."""
+    flat_p, _ = jax.tree_util.tree_flatten_with_path(param_shapes)
+    spec_by_shape: Dict[Tuple, Any] = {}
+    flat_s = jax.tree.leaves(param_specs,
+                             is_leaf=lambda x: isinstance(x, tuple))
+    for (path, leaf), spec in zip(flat_p, flat_s):
+        spec_by_shape.setdefault(tuple(leaf.shape), spec)
+
+    def one(leaf):
+        names = spec_by_shape.get(tuple(leaf.shape))
+        if names is None:
+            # factored stats: try matching a prefix or suffix of some param
+            for shp, spec in spec_by_shape.items():
+                if tuple(leaf.shape) == shp[:-1]:
+                    names = spec[:-1]
+                    break
+                if tuple(leaf.shape) == shp[:-2] + shp[-1:]:
+                    names = spec[:-2] + spec[-1:]
+                    break
+        if names is None:
+            names = (None,) * leaf.ndim
+        return NamedSharding(mesh,
+                             resolve_spec(leaf.shape, names, mesh, rules))
+
+    return jax.tree.map(one, opt_shapes)

@@ -1,0 +1,335 @@
+"""Trip-count-aware HLO cost analysis.
+
+XLA's HloCostAnalysis (what `compiled.cost_analysis()` exposes) counts each
+`while` body ONCE — for scan-over-layers models that under-reports FLOPs by
+the layer count (validated empirically in tests/test_hlocost.py). This module
+walks the optimized HLO text instead and:
+
+  * multiplies while-loop body+condition costs by the trip count XLA records
+    in `backend_config={"known_trip_count":{"n":...}}`,
+  * counts dot FLOPs exactly (2 x out_elems x contracted dims, from
+    `lhs_contracting_dims`),
+  * approximates elementwise/reduce FLOPs as output/input element counts,
+  * counts bytes as sum(operand bytes) + output bytes per materialized op,
+    with fusion-internal instructions contributing flops but not bytes
+    (same convention as HloCostAnalysis).
+
+Costs are per-partition (the module is post-SPMD), matching the roofline's
+per-chip peak constants.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s2": 1, "u2": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3b11fnuz": 1,
+    "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def shape_info(shape_str: str) -> Tuple[int, int]:
+    """(total elements, total bytes) of a shape or tuple-shape string."""
+    elems = byts = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        elems += n
+        byts += n * _DTYPE_BYTES[dtype]
+    return elems, byts
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    shape: str
+    opcode: str
+    operands: List[str]
+    line: str
+
+
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*"          # name
+    r"((?:\([^)]*\))|(?:[\w\[\],{}]+))\s+"           # shape (maybe tuple)
+    r"([\w\-]+)\(")                                   # opcode
+
+
+def _parse_operands(line: str, opcode: str) -> List[str]:
+    start = line.index(opcode + "(") + len(opcode) + 1
+    depth = 1
+    args = []
+    cur = []
+    for ch in line[start:]:
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                break
+        if ch == "," and depth == 1:
+            args.append("".join(cur))
+            cur = []
+        else:
+            cur.append(ch)
+    if cur:
+        args.append("".join(cur))
+    out = []
+    for a in args:
+        a = a.strip()
+        m = re.match(r"%?([\w.\-]+)", a)
+        if m:
+            out.append(m.group(1))
+    return out
+
+
+_CALLS_RE = re.compile(r"calls=%?([\w.\-]+)")
+_TO_APPLY_RE = re.compile(r"to_apply=%?([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w.\-]+)")
+_BODY_RE = re.compile(r"body=%?([\w.\-]+)")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"')
+_LHS_C_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+
+_FREE_OPS = {"parameter", "constant", "tuple", "get-tuple-element",
+             "bitcast", "after-all", "iota", "partition-id", "replica-id"}
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute", "ragged-all-to-all")
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    transcendentals: float = 0.0
+    collective_bytes: float = 0.0
+    collective_ops: Dict[str, float] = dataclasses.field(default_factory=dict)
+    unknown_trip_counts: int = 0
+    # matmul-attributed traffic (dot ops + fusions containing dots): a
+    # fusion-granularity-independent FLOOR on HBM traffic. The raw `bytes`
+    # reflects XLA:CPU fusion boundaries, which are finer than TPU's — the
+    # true TPU memory term lies between bytes_dot and bytes.
+    dot_bytes: float = 0.0
+
+    def __iadd__(self, o: "Cost"):
+        self.flops += o.flops
+        self.bytes += o.bytes
+        self.transcendentals += o.transcendentals
+        self.collective_bytes += o.collective_bytes
+        for k, v in o.collective_ops.items():
+            self.collective_ops[k] = self.collective_ops.get(k, 0) + v
+        self.unknown_trip_counts += o.unknown_trip_counts
+        self.dot_bytes += o.dot_bytes
+        return self
+
+    def scaled(self, n: float) -> "Cost":
+        return Cost(self.flops * n, self.bytes * n, self.transcendentals * n,
+                    self.collective_bytes * n,
+                    {k: v * n for k, v in self.collective_ops.items()},
+                    self.unknown_trip_counts, self.dot_bytes * n)
+
+
+class HloCostModel:
+    def __init__(self, hlo_text: str):
+        self.computations: Dict[str, List[Instr]] = {}
+        self.entry: Optional[str] = None
+        self._parse(hlo_text)
+        self._memo: Dict[Tuple[str, bool], Cost] = {}
+
+    # ---- parsing ---------------------------------------------------------
+
+    _COMP_HDR = re.compile(
+        r"^\s*(ENTRY\s+)?%?([\w.\-]+)\s*(?:\([^{]*\))?\s*->.*\{")
+
+    def _parse(self, text: str):
+        cur: Optional[str] = None
+        for raw in text.splitlines():
+            line = raw.rstrip()
+            hdr = self._COMP_HDR.match(line)
+            if hdr and ("->" in line):
+                cur = hdr.group(2)
+                self.computations[cur] = []
+                if hdr.group(1):
+                    self.entry = cur
+                continue
+            if cur is None:
+                continue
+            if line.strip() == "}":
+                cur = None
+                continue
+            m = _INSTR_RE.match(line)
+            if m:
+                name, shape, opcode = m.groups()
+                ops = _parse_operands(line, opcode)
+                self.computations[cur].append(
+                    Instr(name, shape, opcode, ops, line))
+        if self.entry is None and self.computations:
+            self.entry = next(iter(self.computations))
+
+    # ---- cost ------------------------------------------------------------
+
+    def total(self) -> Cost:
+        return self.comp_cost(self.entry, fused=False)
+
+    def comp_cost(self, comp: str, fused: bool) -> Cost:
+        key = (comp, fused)
+        if key in self._memo:
+            return self._memo[key]
+        self._memo[key] = Cost()   # cycle guard
+        shapes = {i.name: i.shape for i in self.computations.get(comp, [])}
+        total = Cost()
+        for ins in self.computations.get(comp, []):
+            total += self._instr_cost(ins, shapes, fused)
+        self._memo[key] = total
+        return total
+
+    def _operand_bytes(self, ins: Instr, shapes: Dict[str, str]) -> float:
+        return float(sum(shape_info(shapes.get(o, ""))[1]
+                         for o in ins.operands))
+
+    def _instr_cost(self, ins: Instr, shapes: Dict[str, str], fused: bool
+                    ) -> Cost:
+        op = ins.opcode
+        out_elems, out_bytes = shape_info(ins.shape)
+        c = Cost()
+        if op in _FREE_OPS:
+            return c
+        io_bytes = 0.0 if fused else \
+            self._operand_bytes(ins, shapes) + out_bytes
+
+        if op == "while":
+            cond = _COND_RE.search(ins.line)
+            body = _BODY_RE.search(ins.line)
+            trip = _TRIP_RE.search(ins.line)
+            n = int(trip.group(1)) if trip else 1
+            if not trip:
+                c.unknown_trip_counts += 1
+            inner = Cost()
+            if body:
+                inner += self.comp_cost(body.group(1), fused=False)
+            if cond:
+                inner += self.comp_cost(cond.group(1), fused=False)
+            c += inner.scaled(n)
+            return c
+
+        if op == "conditional":
+            m = _BRANCHES_RE.search(ins.line)
+            if m:
+                branches = re.findall(r"%?([\w.\-]+)", m.group(1))
+                # upper bound: sum of branches (XLA executes one; we take
+                # max for flops to avoid double counting)
+                costs = [self.comp_cost(b, fused=False) for b in branches]
+                if costs:
+                    best = max(costs, key=lambda x: x.flops)
+                    c += best
+            c.bytes += io_bytes
+            return c
+
+        if op == "fusion":
+            m = _CALLS_RE.search(ins.line)
+            inner = None
+            if m:
+                inner = self.comp_cost(m.group(1), fused=True)
+                c.flops += inner.flops
+                c.transcendentals += inner.transcendentals
+                c.collective_bytes += inner.collective_bytes
+            c.bytes += io_bytes
+            if inner is not None and inner.dot_bytes > 0:
+                # fusion wraps a dot: its io is matmul traffic
+                c.dot_bytes += io_bytes
+            return c
+
+        if op in ("call", "custom-call", "async-start"):
+            m = _TO_APPLY_RE.search(ins.line) or _CALLS_RE.search(ins.line)
+            if m:
+                c += self.comp_cost(m.group(1), fused=False)
+            c.bytes += io_bytes
+            return c
+
+        # indexed data movement: reads/writes touch only the slice, not the
+        # whole operand (XLA aliases dynamic-update-slice in place). Without
+        # this, a decode step "reads" the entire KV cache once per layer and
+        # interpret-mode Pallas grids read full operands once per grid step.
+        if op in ("dynamic-slice", "gather"):
+            c.bytes += 0.0 if fused else 2.0 * out_bytes
+            return c
+        if op in ("dynamic-update-slice", "scatter"):
+            upd_idx = 1 if op == "dynamic-update-slice" else 2
+            upd = ins.operands[upd_idx] if len(ins.operands) > upd_idx else \
+                None
+            upd_bytes = shape_info(shapes.get(upd, ""))[1] if upd else 0
+            c.bytes += 0.0 if fused else 2.0 * upd_bytes
+            return c
+
+        kind = next((k for k in _COLLECTIVES
+                     if op == k or op.startswith(k + "-")), None)
+        if kind is not None:
+            opb = self._operand_bytes(ins, shapes) or out_bytes
+            c.collective_bytes += opb
+            c.collective_ops[kind] = c.collective_ops.get(kind, 0) + 1
+            c.bytes += io_bytes
+            return c
+
+        if op in ("dot", "dot-general"):
+            m = _LHS_C_RE.search(ins.line)
+            contract = 1
+            if m and ins.operands:
+                lhs_shape = shapes.get(ins.operands[0], "")
+                dims = _SHAPE_RE.search(lhs_shape)
+                if dims:
+                    sizes = [int(d) for d in dims.group(2).split(",") if d]
+                    for idx in m.group(1).split(","):
+                        if idx and int(idx) < len(sizes):
+                            contract *= sizes[int(idx)]
+            c.flops += 2.0 * out_elems * contract
+            c.bytes += io_bytes
+            # unfused: io is matmul traffic; fused: 1-byte marker so the
+            # enclosing fusion attributes its io instead (no double count)
+            c.dot_bytes += io_bytes if io_bytes else 1.0
+            return c
+
+        if op == "convolution":
+            # not used by our models; fall back to output-elems estimate
+            c.flops += 2.0 * out_elems
+            c.bytes += io_bytes
+            return c
+
+        if op in ("reduce", "reduce-window"):
+            in_elems = sum(shape_info(shapes.get(o, ""))[0]
+                           for o in ins.operands[:1])
+            c.flops += float(in_elems)
+            c.bytes += io_bytes
+            return c
+
+        if op in ("exponential", "log", "tanh", "rsqrt", "sqrt", "power",
+                  "logistic", "sine", "cosine"):
+            c.transcendentals += out_elems
+            c.flops += out_elems
+            c.bytes += io_bytes
+            return c
+
+        if op == "sort":
+            import math
+            c.flops += out_elems * max(1.0, math.log2(max(out_elems, 2)))
+            c.bytes += io_bytes
+            return c
+
+        # generic elementwise / data movement
+        c.flops += out_elems
+        c.bytes += io_bytes
+        return c
+
+
+def analyze_text(hlo_text: str) -> Cost:
+    return HloCostModel(hlo_text).total()

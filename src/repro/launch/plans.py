@@ -1,0 +1,65 @@
+"""Per-(arch x shape) execution plans: optimizer, microbatching, remat.
+
+grad_accum is sized so the per-chip activation working set stays in the
+single-digit-GB range on a 16 GB v5e: saved block inputs per chip are
+roughly tokens/accum x d_model x 2B x n_layers / data_shards. The largest
+models use Adafactor (factored second moments) because full Adam state for
+1T params cannot fit a 256-chip pod (see DESIGN.md §memory budget).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class CellPlan:
+    arch: str
+    shape: str
+    optimizer: str = "adamw"      # adamw | adafactor | signum
+    grad_accum: int = 1
+    remat: str = "block"          # block | dots | full
+    rules: str = "default"        # default | sp (sequence-parallel) | dp
+    attn_remat: bool = True       # flash-style q-row checkpoint (layers.py)
+    attn_kernel: str = "chunked"  # chunked | flash (Pallas, perf pass)
+    compressed_dp: bool = False   # 1-bit majority-vote gradient exchange
+    moe_constrain: bool = False   # force expert sharding constraints
+    notes: str = ""
+
+
+_OPT: Dict[str, str] = {
+    "kimi_k2_1t_a32b": "adafactor",
+    "llama4_maverick_400b_a17b": "adafactor",
+}
+
+_ACCUM: Dict[str, int] = {
+    # train_4k (1.05M global tokens/step): keep microbatch activations and
+    # MoE dispatch buffers per chip in the low-GB range.
+    "zamba2_2p7b": 2,
+    "seamless_m4t_medium": 1,
+    "qwen3_8b": 4,
+    "deepseek_67b": 8,
+    "qwen1p5_110b": 8,
+    "qwen3_0p6b": 1,
+    "kimi_k2_1t_a32b": 16,
+    "llama4_maverick_400b_a17b": 8,
+    "llama_3p2_vision_90b": 8,
+    "mamba2_1p3b": 2,
+}
+
+
+def plan_for(cfg: ModelConfig, shape: ShapeConfig,
+             overrides: Optional[dict] = None) -> CellPlan:
+    arch = cfg.name.replace("-", "_").replace(".", "p")
+    kw = dict(
+        arch=arch, shape=shape.name,
+        optimizer=_OPT.get(arch, "adamw"),
+        grad_accum=_ACCUM.get(arch, 1) if shape.kind == "train" else 1,
+        remat="block",
+        rules="default",
+        attn_remat=shape.kind == "train",
+    )
+    kw.update(overrides or {})
+    return CellPlan(**kw)

@@ -1,0 +1,2 @@
+from repro.models.registry import (ModelBundle, batch_logical_specs, build,
+                                   input_specs)

@@ -1,0 +1,202 @@
+"""Encoder-decoder family (SeamlessM4T-medium backbone).
+
+The audio frontend is a STUB per the assignment: `input_specs()` provides
+precomputed frame embeddings (B, n_frontend_tokens, frontend_dim); the model
+owns only a linear adapter into d_model. Encoder blocks are bidirectional
+self-attention; decoder blocks are causal self-attention + cross-attention to
+the encoder output + MLP.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.dist.sharding import constrain
+from repro.models import layers as L
+from repro.models.transformer import (dense_block_init, init_stacked,
+                                      remat_policy)
+
+Params = Dict[str, Any]
+
+
+def _frontend_dim(cfg: ModelConfig) -> int:
+    return getattr(cfg, "frontend_dim", 0) or cfg.d_model
+
+
+def dec_block_init(key, cfg: ModelConfig) -> Tuple[Params, Params]:
+    k1, k2 = jax.random.split(key)
+    p, s = dense_block_init(k1, cfg)
+    xp, xs = L.cross_attention_init(k2, cfg)
+    p["ln_x"] = jnp.ones((cfg.d_model,), L._dtype(cfg))
+    p["cross"] = xp
+    s["ln_x"] = ("embed",)
+    s["cross"] = xs
+    return p, s
+
+
+def encdec_init(key, cfg: ModelConfig) -> Tuple[Params, Params]:
+    ks = jax.random.split(key, 5)
+    emb_p, emb_s = L.embed_init(ks[0], cfg)
+    Df = _frontend_dim(cfg)
+    p: Params = {
+        "embed": emb_p,
+        "frontend_proj": L.dense_init(ks[1], (Df, cfg.d_model), L._dtype(cfg)),
+        "final_norm": jnp.ones((cfg.d_model,), L._dtype(cfg)),
+        "enc_norm": jnp.ones((cfg.d_model,), L._dtype(cfg)),
+    }
+    s: Params = {"embed": emb_s, "frontend_proj": (None, "embed"),
+                 "final_norm": ("embed",), "enc_norm": ("embed",)}
+    ep, es = init_stacked(ks[2], cfg.n_enc_layers,
+                          lambda k: dense_block_init(k, cfg))
+    dp, ds = init_stacked(ks[3], cfg.n_layers,
+                          lambda k: dec_block_init(k, cfg))
+    p["enc"], s["enc"] = ep, es
+    p["dec"], s["dec"] = dp, ds
+    return p, s
+
+
+def encode(params: Params, frames: jax.Array, cfg: ModelConfig,
+           remat: str = "block") -> jax.Array:
+    """frames: (B, Sf, Df) stub embeddings -> (B, Sf, D) encoder output."""
+    from repro.models.transformer import dense_block
+    x = jnp.einsum("bsf,fd->bsd", frames.astype(L._dtype(cfg)),
+                   params["frontend_proj"])
+    x = constrain(x, "batch", "seq", "embed_act")
+
+    @functools.partial(jax.checkpoint, policy=remat_policy(remat))
+    def body(h, lp):
+        # bidirectional: same block, causal=False via explicit call
+        h2 = h + L.attention_train(lp["attn"],
+                                   L.rmsnorm(h, lp["ln1"], cfg.norm_eps),
+                                   cfg, causal=False)
+        h2 = h2 + L.mlp(lp["mlp"], L.rmsnorm(h2, lp["ln2"], cfg.norm_eps), cfg)
+        return h2, None
+
+    x, _ = jax.lax.scan(body, x, params["enc"])
+    return L.rmsnorm(x, params["enc_norm"], cfg.norm_eps)
+
+
+def dec_block(p: Params, x: jax.Array, memory: jax.Array, cfg: ModelConfig,
+              qc: int = 512) -> jax.Array:
+    x = constrain(x, "batch", "seq", "embed_act")
+    h = x + L.attention_train(p["attn"], L.rmsnorm(x, p["ln1"], cfg.norm_eps),
+                              cfg, q_chunk=qc, kv_chunk=qc)
+    h = h + L.cross_attention(p["cross"],
+                              L.rmsnorm(h, p["ln_x"], cfg.norm_eps),
+                              memory, cfg)
+    h = h + L.mlp(p["mlp"], L.rmsnorm(h, p["ln2"], cfg.norm_eps), cfg)
+    return h
+
+
+def encdec_apply(params: Params, tokens: jax.Array, cfg: ModelConfig,
+                 frames: jax.Array = None, remat: str = "block"
+                 ) -> Tuple[jax.Array, jax.Array]:
+    memory = encode(params, frames, cfg, remat)
+    x = L.embed(params["embed"], tokens)
+    qc = min(512, tokens.shape[1])
+
+    @functools.partial(jax.checkpoint, policy=remat_policy(remat))
+    def body(h, lp):
+        return dec_block(lp, h, memory, cfg, qc), None
+
+    x, _ = jax.lax.scan(body, x, params["dec"])
+    x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    return x, jnp.zeros((), jnp.float32)
+
+
+# --------------------------------------------------------------------------
+# serving
+# --------------------------------------------------------------------------
+
+def encdec_cache_init(cfg: ModelConfig, batch: int, max_len: int
+                      ) -> Tuple[Params, Params]:
+    selfc, selfs = L.kv_cache_init(cfg, cfg.n_layers, batch, max_len)
+    Sf = cfg.n_frontend_tokens
+    KV, hd = cfg.n_kv_heads, cfg.head_dim_
+    dt = L._dtype(cfg)
+    cache = {"self": selfc,
+             "cross_k": jnp.zeros((cfg.n_layers, batch, Sf, KV * hd), dt),
+             "cross_v": jnp.zeros((cfg.n_layers, batch, Sf, KV * hd), dt)}
+    specs = {"self": selfs,
+             "cross_k": ("layers", "batch", None, "kv_flat"),
+             "cross_v": ("layers", "batch", None, "kv_flat")}
+    return cache, specs
+
+
+def encdec_prefill(params: Params, tokens: jax.Array, cfg: ModelConfig,
+                   frames: jax.Array = None) -> Tuple[jax.Array, Params]:
+    memory = encode(params, frames, cfg)
+    B, Sq = tokens.shape
+    x = L.embed(params["embed"], tokens)
+    positions = jnp.arange(Sq)[None, :]
+    qc = min(512, Sq)
+
+    def body(h, lp):
+        xn = L.rmsnorm(h, lp["ln1"], cfg.norm_eps)
+        q, k, v = L._project_qkv(lp["attn"], xn, cfg, positions)
+        o = L.chunked_attention(q, k, v, causal=True, q_chunk=qc, kv_chunk=qc)
+        h = h + jnp.einsum("bshk,hkd->bsd", o, lp["attn"]["wo"])
+        xk = jnp.einsum("bsd,dhk->bshk", memory, lp["cross"]["wk"])
+        xv = jnp.einsum("bsd,dhk->bshk", memory, lp["cross"]["wv"])
+        h = h + L.cross_attention(lp["cross"],
+                                  L.rmsnorm(h, lp["ln_x"], cfg.norm_eps),
+                                  memory, cfg)
+        h = h + L.mlp(lp["mlp"], L.rmsnorm(h, lp["ln2"], cfg.norm_eps), cfg)
+        Sm = xk.shape[1]
+        return h, (k.reshape(B, Sq, -1), v.reshape(B, Sq, -1),
+                   xk.reshape(B, Sm, -1), xv.reshape(B, Sm, -1))
+
+    x, (ck, cv, xk, xv) = jax.lax.scan(body, x, params["dec"])
+    x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = L.lm_logits(params["embed"], x[:, -1:])[:, 0]
+    return logits, {"self": {"k": ck, "v": cv}, "cross_k": xk, "cross_v": xv}
+
+
+def _cross_decode(p: Params, x: jax.Array, xk: jax.Array, xv: jax.Array,
+                  cfg: ModelConfig) -> jax.Array:
+    """Single-token cross-attention against precomputed memory K/V
+    (flat (Sm, KV*hd) cache layout)."""
+    B = x.shape[0]
+    KV, hd, H = cfg.n_kv_heads, cfg.head_dim_, cfg.n_heads
+    G = H // KV
+    Sm = xk.shape[1]
+    xk = xk.reshape(B, Sm, KV, hd)
+    xv = xv.reshape(B, Sm, KV, hd)
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])[:, 0]
+    if cfg.qk_norm:
+        q = L.rmsnorm(q, p["q_norm"], cfg.norm_eps)
+    qg = q.reshape(B, KV, G, hd)
+    s = jnp.einsum("bkgd,bskd->bkgs", qg, xk,
+                   preferred_element_type=jnp.float32) / jnp.sqrt(1.0 * hd)
+    prob = jax.nn.softmax(s, axis=-1).astype(xv.dtype)
+    o = jnp.einsum("bkgs,bskd->bkgd", prob, xv)
+    return jnp.einsum("bhk,hkd->bd", o.reshape(B, H, hd), p["wo"])[:, None]
+
+
+def encdec_decode_step(params: Params, token: jax.Array, cache: Params,
+                       pos: jax.Array, cfg: ModelConfig
+                       ) -> Tuple[jax.Array, Params]:
+    x = L.embed(params["embed"], token[:, None])
+
+    def body(h, xs):
+        lp, ck, cv, xk, xv = xs
+        a, ck, cv = L.attention_decode(
+            lp["attn"], L.rmsnorm(h, lp["ln1"], cfg.norm_eps), ck, cv, pos, cfg)
+        h = h + a
+        h = h + _cross_decode(lp["cross"],
+                              L.rmsnorm(h, lp["ln_x"], cfg.norm_eps),
+                              xk, xv, cfg)
+        h = h + L.mlp(lp["mlp"], L.rmsnorm(h, lp["ln2"], cfg.norm_eps), cfg)
+        return h, (ck, cv)
+
+    x, (ck, cv) = jax.lax.scan(
+        body, x, (params["dec"], cache["self"]["k"], cache["self"]["v"],
+                  cache["cross_k"], cache["cross_v"]))
+    x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = L.lm_logits(params["embed"], x)[:, 0]
+    return logits, {"self": {"k": ck, "v": cv},
+                    "cross_k": cache["cross_k"], "cross_v": cache["cross_v"]}

@@ -1,0 +1,208 @@
+"""SSM (mamba2) and hybrid (zamba2) model families.
+
+mamba2: a pure stack of SSM mixer blocks (no MLP, no attention) — O(S)
+training compute and O(1)/token decode, which is why the long_500k cell runs
+for this family.
+
+zamba2: a mamba2 backbone where ONE shared transformer block (attention+MLP,
+single parameter set) is applied after every `attn_every` SSM layers
+(9 applications for 54L/6). Each application has its own KV-cache sheet at
+decode time (shared weights, distinct activations). The paper's
+concat-with-embedding + per-application LoRA is simplified to an additive
+residual application of the shared block; noted in DESIGN.md.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.dist.sharding import constrain
+from repro.models import layers as L
+from repro.models import ssm as S
+from repro.models.transformer import (dense_block_init, init_stacked,
+                                      remat_policy)
+
+Params = Dict[str, Any]
+
+
+def ssm_block_init(key, cfg: ModelConfig) -> Tuple[Params, Params]:
+    p_s, s_s = S.ssm_init(key, cfg)
+    p = {"ln": jnp.ones((cfg.d_model,), L._dtype(cfg)), "ssm": p_s}
+    s = {"ln": ("embed",), "ssm": s_s}
+    return p, s
+
+
+def ssm_block(p: Params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    y, _ = S.ssm_forward(p["ssm"], L.rmsnorm(x, p["ln"], cfg.norm_eps), cfg)
+    return x + y
+
+
+def hybrid_init(key, cfg: ModelConfig) -> Tuple[Params, Params]:
+    ks = jax.random.split(key, 4)
+    emb_p, emb_s = L.embed_init(ks[0], cfg)
+    p: Params = {"embed": emb_p,
+                 "final_norm": jnp.ones((cfg.d_model,), L._dtype(cfg))}
+    s: Params = {"embed": emb_s, "final_norm": ("embed",)}
+    if cfg.family == "hybrid":
+        n_groups = cfg.n_layers // cfg.attn_every
+
+        def group_init(k):
+            return init_stacked(k, cfg.attn_every,
+                                lambda kk: ssm_block_init(kk, cfg))
+
+        gp, gs = init_stacked(ks[1], n_groups, group_init)
+        p["groups"], s["groups"] = gp, gs
+        sp, ss = dense_block_init(ks[2], cfg)   # the ONE shared block
+        p["shared"], s["shared"] = sp, ss
+    else:
+        lp, ls = init_stacked(ks[1], cfg.n_layers,
+                              lambda k: ssm_block_init(k, cfg))
+        p["layers"], s["layers"] = lp, ls
+    return p, s
+
+
+def hybrid_apply(params: Params, tokens: jax.Array, cfg: ModelConfig,
+                 remat: str = "block") -> Tuple[jax.Array, jax.Array]:
+    from repro.models.transformer import dense_block
+    x = L.embed(params["embed"], tokens)
+    x = constrain(x, "batch", "seq", "embed_act")
+    policy = remat_policy(remat)
+    if cfg.family == "hybrid":
+        shared = params["shared"]
+        qc = min(512, tokens.shape[1])
+
+        @functools.partial(jax.checkpoint, policy=policy)
+        def g_body(h, gp):
+            def s_body(hh, sp):
+                return ssm_block(sp, hh, cfg), None
+            h, _ = jax.lax.scan(s_body, h, gp)
+            h = dense_block(shared, h, cfg, qc, qc)
+            return h, None
+
+        x, _ = jax.lax.scan(g_body, x, params["groups"])
+    else:
+        @functools.partial(jax.checkpoint, policy=policy)
+        def body(h, lp):
+            return ssm_block(lp, h, cfg), None
+
+        x, _ = jax.lax.scan(body, x, params["layers"])
+    x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    return x, jnp.zeros((), jnp.float32)
+
+
+# --------------------------------------------------------------------------
+# serving
+# --------------------------------------------------------------------------
+
+def hybrid_cache_init(cfg: ModelConfig, batch: int, max_len: int
+                      ) -> Tuple[Params, Params]:
+    cache, specs = {}, {}
+    sc, ss = S.ssm_cache_init(cfg, cfg.n_layers, batch)
+    cache["ssm"], specs["ssm"] = sc, ss
+    if cfg.family == "hybrid":
+        n_groups = cfg.n_layers // cfg.attn_every
+        kc, kss = L.kv_cache_init(cfg, n_groups, batch, max_len)
+        cache["attn"], specs["attn"] = kc, kss
+    return cache, specs
+
+
+def _ssm_block_prefill(p: Params, x: jax.Array, cfg: ModelConfig):
+    y, (state, conv) = S.ssm_forward(
+        p["ssm"], L.rmsnorm(x, p["ln"], cfg.norm_eps), cfg, return_cache=True)
+    return x + y, state, conv
+
+
+def _ssm_block_decode(p: Params, x: jax.Array, state, conv, cfg: ModelConfig):
+    y, state, conv = S.ssm_decode_step(
+        p["ssm"], L.rmsnorm(x, p["ln"], cfg.norm_eps), state, conv, cfg)
+    return x + y, state, conv
+
+
+def hybrid_prefill(params: Params, tokens: jax.Array, cfg: ModelConfig
+                   ) -> Tuple[jax.Array, Params]:
+    B, Sq = tokens.shape
+    x = L.embed(params["embed"], tokens)
+    positions = jnp.arange(Sq)[None, :]
+    if cfg.family == "hybrid":
+        shared = params["shared"]
+        qc = min(512, Sq)
+
+        def g_body(h, gp):
+            def s_body(hh, sp):
+                hh, st, cv = _ssm_block_prefill(sp, hh, cfg)
+                return hh, (st, cv)
+            h, (states, convs) = jax.lax.scan(s_body, h, gp)
+            xn = L.rmsnorm(h, shared["ln1"], cfg.norm_eps)
+            q, k, v = L._project_qkv(shared["attn"], xn, cfg, positions)
+            o = L.chunked_attention(q, k, v, causal=True, q_chunk=qc,
+                                    kv_chunk=qc)
+            h = h + jnp.einsum("bshk,hkd->bsd", o, shared["attn"]["wo"])
+            h = h + L.mlp(shared["mlp"],
+                          L.rmsnorm(h, shared["ln2"], cfg.norm_eps), cfg)
+            return h, (states, convs, k.reshape(B, Sq, -1),
+                       v.reshape(B, Sq, -1))
+
+        x, (st, cv, ks, vs) = jax.lax.scan(g_body, x, params["groups"])
+        cache = {"ssm": {"state": st.reshape(-1, *st.shape[2:]),
+                         "conv": cv.reshape(-1, *cv.shape[2:])},
+                 "attn": {"k": ks, "v": vs}}
+    else:
+        def body(h, lp):
+            h, st, cv = _ssm_block_prefill(lp, h, cfg)
+            return h, (st, cv)
+
+        x, (st, cv) = jax.lax.scan(body, x, params["layers"])
+        cache = {"ssm": {"state": st, "conv": cv}}
+    x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = L.lm_logits(params["embed"], x[:, -1:])[:, 0]
+    return logits, cache
+
+
+def hybrid_decode_step(params: Params, token: jax.Array, cache: Params,
+                       pos: jax.Array, cfg: ModelConfig
+                       ) -> Tuple[jax.Array, Params]:
+    x = L.embed(params["embed"], token[:, None])
+    if cfg.family == "hybrid":
+        shared = params["shared"]
+        n_groups = cfg.n_layers // cfg.attn_every
+        st = cache["ssm"]["state"].reshape(
+            n_groups, cfg.attn_every, *cache["ssm"]["state"].shape[1:])
+        cv = cache["ssm"]["conv"].reshape(
+            n_groups, cfg.attn_every, *cache["ssm"]["conv"].shape[1:])
+
+        def g_body(h, xs):
+            gp, g_st, g_cv, ck, vk = xs
+
+            def s_body(hh, sxs):
+                sp, st_l, cv_l = sxs
+                hh, st_l, cv_l = _ssm_block_decode(sp, hh, st_l, cv_l, cfg)
+                return hh, (st_l, cv_l)
+
+            h, (n_st, n_cv) = jax.lax.scan(s_body, h, (gp, g_st, g_cv))
+            from repro.models.transformer import dense_block_decode
+            h, ck, vk = dense_block_decode(shared, h, ck, vk, pos, cfg)
+            return h, (n_st, n_cv, ck, vk)
+
+        x, (n_st, n_cv, ks, vs) = jax.lax.scan(
+            g_body, x, (params["groups"], st, cv,
+                        cache["attn"]["k"], cache["attn"]["v"]))
+        cache = {"ssm": {"state": n_st.reshape(-1, *n_st.shape[2:]),
+                         "conv": n_cv.reshape(-1, *n_cv.shape[2:])},
+                 "attn": {"k": ks, "v": vs}}
+    else:
+        def body(h, xs):
+            lp, st_l, cv_l = xs
+            h, st_l, cv_l = _ssm_block_decode(lp, h, st_l, cv_l, cfg)
+            return h, (st_l, cv_l)
+
+        x, (n_st, n_cv) = jax.lax.scan(
+            body, x, (params["layers"], cache["ssm"]["state"],
+                      cache["ssm"]["conv"]))
+        cache = {"ssm": {"state": n_st, "conv": n_cv}}
+    x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = L.lm_logits(params["embed"], x)[:, 0]
+    return logits, cache

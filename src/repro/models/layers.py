@@ -1,0 +1,398 @@
+"""Core transformer layers, pure JAX (no flax): norms, RoPE, GQA attention.
+
+Conventions
+-----------
+* Params are plain pytrees (nested dicts of jnp arrays). Every init fn takes a
+  PRNG key and returns (params, logical_specs) where logical_specs mirrors the
+  param tree with tuples of *logical axis names* (resolved to mesh axes by
+  `repro.dist.sharding`).
+* Activations are (batch, seq, d_model) in cfg.dtype; softmax/statistics in
+  f32.
+* Training attention is a chunked (flash-style) online-softmax over KV blocks
+  so the (S, S) logits matrix is never materialized — required for the 32k
+  prefill shapes to fit HBM.
+* Decode attention addresses a pre-allocated KV cache with
+  `dynamic_update_slice` at the current position.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+
+Params = Dict[str, Any]
+
+INIT_STD = 0.02
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def dense_init(key, shape, dtype, std: float = INIT_STD):
+    return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+
+
+# --------------------------------------------------------------------------
+# RMSNorm
+# --------------------------------------------------------------------------
+
+def rmsnorm_init(dim: int, dtype) -> Tuple[jax.Array, Tuple]:
+    return jnp.ones((dim,), dtype), ("embed",)
+
+
+def rmsnorm(x: jax.Array, scale: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps)).astype(dt) * scale
+
+
+# --------------------------------------------------------------------------
+# Rotary position embeddings
+# --------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> np.ndarray:
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    head_dim = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(head_dim, theta), jnp.float32)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    cos = jnp.cos(angles)[..., None, :]   # broadcast over heads
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# GQA attention
+# --------------------------------------------------------------------------
+
+def attn_init(key, cfg: ModelConfig, d_model: Optional[int] = None
+              ) -> Tuple[Params, Params]:
+    D = d_model or cfg.d_model
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    dt = _dtype(cfg)
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (D, H, hd), dt),
+        "wk": dense_init(ks[1], (D, KV, hd), dt),
+        "wv": dense_init(ks[2], (D, KV, hd), dt),
+        "wo": dense_init(ks[3], (H, hd, D), dt, std=INIT_STD / np.sqrt(2 * max(cfg.n_layers, 1))),
+    }
+    s = {
+        "wq": ("fsdp", "heads", "head_dim"),
+        "wk": ("fsdp", "kv_heads", "head_dim"),
+        "wv": ("fsdp", "kv_heads", "head_dim"),
+        "wo": ("heads", "head_dim", "fsdp"),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H, hd), dt)
+        p["bk"] = jnp.zeros((KV, hd), dt)
+        p["bv"] = jnp.zeros((KV, hd), dt)
+        s["bq"] = ("heads", "head_dim")
+        s["bk"] = ("kv_heads", "head_dim")
+        s["bv"] = ("kv_heads", "head_dim")
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), dt)
+        p["k_norm"] = jnp.ones((hd,), dt)
+        s["q_norm"] = ("head_dim",)
+        s["k_norm"] = ("head_dim",)
+    return p, s
+
+
+def _project_qkv(p: Params, x: jax.Array, cfg: ModelConfig,
+                 positions: jax.Array, rope: bool = True):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_norm"], cfg.norm_eps)
+        k = rmsnorm(k, p["k_norm"], cfg.norm_eps)
+    if rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+NEG_INF = -1e30
+
+# When enabled (the production default for train/prefill cells), each
+# q-chunk row of the online-softmax attention is wrapped in jax.checkpoint,
+# so the backward pass recomputes that row's (qc, kc) score/prob blocks
+# instead of keeping every block live — a flash-attention-style backward in
+# pure JAX. Peak per-layer attention memory drops from O(S^2) to
+# O(S * kv_chunk) at the cost of ~1 extra attention forward in the backward.
+import contextlib
+
+_ATTN_REMAT = {"on": False}
+_ATTN_BACKEND = {"name": "chunked"}   # chunked | flash (Pallas kernel)
+
+
+@contextlib.contextmanager
+def attention_remat(enabled: bool = True):
+    prev = _ATTN_REMAT["on"]
+    _ATTN_REMAT["on"] = enabled
+    try:
+        yield
+    finally:
+        _ATTN_REMAT["on"] = prev
+
+
+@contextlib.contextmanager
+def attention_backend(name: str):
+    """'chunked' (pure-jnp online softmax) or 'flash' (Pallas TPU kernel,
+    kernels/flashattn.py — q+k+v+o HBM traffic only)."""
+    prev = _ATTN_BACKEND["name"]
+    _ATTN_BACKEND["name"] = name
+    try:
+        yield
+    finally:
+        _ATTN_BACKEND["name"] = prev
+
+
+def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                      causal: bool = True,
+                      q_chunk: int = 512, kv_chunk: int = 512) -> jax.Array:
+    if _ATTN_BACKEND["name"] == "flash":
+        from repro.kernels.flashattn import flash_attention
+        return flash_attention(q, k, v, causal=causal,
+                               block_q=q_chunk, block_k=kv_chunk)
+    return _chunked_attention(q, k, v, causal=causal,
+                              q_chunk=q_chunk, kv_chunk=kv_chunk)
+
+
+def _chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                       causal: bool = True,
+                       q_chunk: int = 512, kv_chunk: int = 512) -> jax.Array:
+    """Flash-style online-softmax attention; never materializes (S, S).
+
+    q: (B, Sq, H, hd);  k, v: (B, Sk, KV, hd) with H % KV == 0.
+    Returns (B, Sq, H, hd). Causal assumes Sq == Sk and aligned positions.
+    """
+    B, Sq, H, hd = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    q_chunk = min(q_chunk, Sq)
+    kv_chunk = min(kv_chunk, Sk)
+    # pad ragged sequence lengths (e.g. 1600 vision patches vs 512 chunks);
+    # padded key positions are masked below, padded query rows sliced off.
+    Sq_orig, Sk_orig = Sq, Sk
+    pad_q, pad_k = (-Sq) % q_chunk, (-Sk) % kv_chunk
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+        Sq += pad_q
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        Sk += pad_k
+    nq, nk = Sq // q_chunk, Sk // kv_chunk
+    scale = 1.0 / np.sqrt(hd)
+
+    qb = q.reshape(B, nq, q_chunk, KV, G, hd).transpose(1, 0, 3, 4, 2, 5)
+    kb = k.reshape(B, nk, kv_chunk, KV, hd).transpose(1, 0, 3, 2, 4)
+    vb = v.reshape(B, nk, kv_chunk, KV, hd).transpose(1, 0, 3, 2, 4)
+    # qb: (nq, B, KV, G, qc, hd);  kb/vb: (nk, B, KV, kc, hd)
+
+    def q_block(carry, q_in):
+        from repro.dist.sharding import match_vma
+        q_i, qidx = q_in   # (B, KV, G, qc, hd)
+        m0 = jnp.full((B, KV, G, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, KV, G, q_chunk), jnp.float32)
+        a0 = jnp.zeros((B, KV, G, q_chunk, hd), jnp.float32)
+        m0, l0, a0 = match_vma((m0, l0, a0), q_i)
+
+        def kv_block(c, kv_in):
+            m, l, acc = c
+            k_j, v_j, kidx = kv_in
+            s = jnp.einsum("bkgqd,bksd->bkgqs", q_i, k_j,
+                           preferred_element_type=jnp.float32) * scale
+            kpos = kidx * kv_chunk + jnp.arange(kv_chunk)
+            if causal:
+                qpos = qidx * q_chunk + jnp.arange(q_chunk)
+                mask = (qpos[:, None] >= kpos[None, :]) & \
+                    (kpos[None, :] < Sk_orig)
+                s = jnp.where(mask, s, NEG_INF)
+            elif pad_k:
+                s = jnp.where(kpos[None, :] < Sk_orig, s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            alpha = jnp.exp(m - m_new)
+            prob = jnp.exp(s - m_new[..., None])
+            l_new = l * alpha + prob.sum(axis=-1)
+            acc_new = acc * alpha[..., None] + jnp.einsum(
+                "bkgqs,bksd->bkgqd", prob.astype(v_j.dtype), v_j,
+                preferred_element_type=jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        (m, l, acc), _ = jax.lax.scan(
+            kv_block, (m0, l0, a0), (kb, vb, jnp.arange(nk)))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return carry, out.astype(q.dtype)
+
+    body = (jax.checkpoint(q_block,
+                           policy=jax.checkpoint_policies.nothing_saveable)
+            if _ATTN_REMAT["on"] else q_block)
+    _, ob = jax.lax.scan(body, None, (qb, jnp.arange(nq)))
+    # ob: (nq, B, KV, G, qc, hd) -> (B, S, H, hd)
+    out = ob.transpose(1, 0, 4, 2, 3, 5).reshape(B, Sq, H, hd)
+    return out[:, :Sq_orig]
+
+
+def attention_train(p: Params, x: jax.Array, cfg: ModelConfig,
+                    positions: Optional[jax.Array] = None,
+                    causal: bool = True,
+                    q_chunk: int = 512, kv_chunk: int = 512) -> jax.Array:
+    """Self-attention over a full sequence (train / prefill)."""
+    B, S, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(S)[None, :]
+    q, k, v = _project_qkv(p, x, cfg, positions)
+    o = chunked_attention(q, k, v, causal=causal,
+                          q_chunk=q_chunk, kv_chunk=kv_chunk)
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+
+
+def cross_attention_init(key, cfg: ModelConfig) -> Tuple[Params, Params]:
+    """Separate q (from decoder) and kv (from encoder/vision) projections."""
+    return attn_init(key, cfg)
+
+
+def cross_attention(p: Params, x: jax.Array, memory: jax.Array,
+                    cfg: ModelConfig) -> jax.Array:
+    """x: (B, Sq, D) queries; memory: (B, Sm, D) keys/values. No RoPE/causal."""
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", memory, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", memory, p["wv"])
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_norm"], cfg.norm_eps)
+        k = rmsnorm(k, p["k_norm"], cfg.norm_eps)
+    o = chunked_attention(q, k, v, causal=False)
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+
+
+# ---- decode path ---------------------------------------------------------
+
+def kv_cache_init(cfg: ModelConfig, n_layers: int, batch: int, max_len: int
+                  ) -> Tuple[Params, Params]:
+    """KV sheets use a flattened (KV*hd) trailing dim so tensor-parallel
+    sharding works even when n_kv_heads < mesh model size (e.g. kv=8 on a
+    16-way model axis: 8*128=1024 divides 16; GSPMD re-expresses the merged
+    sharding as kv-major x head-dim-minor through the reshape)."""
+    KV, hd = cfg.n_kv_heads, cfg.head_dim_
+    dt = _dtype(cfg)
+    cache = {
+        "k": jnp.zeros((n_layers, batch, max_len, KV * hd), dt),
+        "v": jnp.zeros((n_layers, batch, max_len, KV * hd), dt),
+    }
+    specs = {"k": ("layers", "batch", "kv_seq", "kv_flat"),
+             "v": ("layers", "batch", "kv_seq", "kv_flat")}
+    return cache, specs
+
+
+def attention_decode(p: Params, x: jax.Array, cache_k: jax.Array,
+                     cache_v: jax.Array, pos: jax.Array, cfg: ModelConfig
+                     ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """One-token decode. x: (B, 1, D); cache_{k,v}: (B, S_max, KV*hd);
+    pos: scalar current position. Returns (out, new_k, new_v)."""
+    B, _, _ = x.shape
+    S_max = cache_k.shape[1]
+    KV, hd = cfg.n_kv_heads, cfg.head_dim_
+    H = cfg.n_heads
+    G = H // KV
+    positions = jnp.full((B, 1), pos)
+    q, k, v = _project_qkv(p, x, cfg, positions)
+    cache_k = jax.lax.dynamic_update_slice(
+        cache_k, k.reshape(B, 1, KV * hd), (0, pos, 0))
+    cache_v = jax.lax.dynamic_update_slice(
+        cache_v, v.reshape(B, 1, KV * hd), (0, pos, 0))
+    k4 = cache_k.reshape(B, S_max, KV, hd)
+    v4 = cache_v.reshape(B, S_max, KV, hd)
+    qg = q.reshape(B, KV, G, hd)
+    s = jnp.einsum("bkgd,bskd->bkgs", qg, k4,
+                   preferred_element_type=jnp.float32) / np.sqrt(hd)
+    valid = jnp.arange(S_max)[None, None, None, :] <= pos
+    s = jnp.where(valid, s, NEG_INF)
+    prob = jax.nn.softmax(s, axis=-1).astype(v4.dtype)
+    o = jnp.einsum("bkgs,bskd->bkgd", prob, v4)
+    out = jnp.einsum("bhk,hkd->bd", o.reshape(B, H, hd), p["wo"])[:, None, :]
+    return out, cache_k, cache_v
+
+
+# --------------------------------------------------------------------------
+# MLP (SwiGLU / GELU)
+# --------------------------------------------------------------------------
+
+def mlp_init(key, cfg: ModelConfig, d_ff: Optional[int] = None
+             ) -> Tuple[Params, Params]:
+    D, F = cfg.d_model, d_ff or cfg.d_ff
+    dt = _dtype(cfg)
+    k1, k2 = jax.random.split(key)
+    out_std = INIT_STD / np.sqrt(2 * max(cfg.n_layers, 1))
+    if cfg.mlp_kind == "swiglu":
+        # gate and up fused on the output dim: (D, 2, F)
+        p = {"wi": dense_init(k1, (D, 2, F), dt),
+             "wo": dense_init(k2, (F, D), dt, std=out_std)}
+        s = {"wi": ("fsdp", None, "mlp"), "wo": ("mlp", "fsdp")}
+    else:
+        p = {"wi": dense_init(k1, (D, F), dt),
+             "wo": dense_init(k2, (F, D), dt, std=out_std)}
+        s = {"wi": ("fsdp", "mlp"), "wo": ("mlp", "fsdp")}
+    return p, s
+
+
+def mlp(p: Params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    if cfg.mlp_kind == "swiglu":
+        h = jnp.einsum("bsd,dcf->bscf", x, p["wi"])
+        gate, up = h[:, :, 0], h[:, :, 1]
+        a = jax.nn.silu(gate.astype(jnp.float32)).astype(x.dtype) * up
+    else:
+        h = jnp.einsum("bsd,df->bsf", x, p["wi"])
+        a = jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype)
+    return jnp.einsum("bsf,fd->bsd", a, p["wo"])
+
+
+# --------------------------------------------------------------------------
+# Embedding / LM head / loss
+# --------------------------------------------------------------------------
+
+def embed_init(key, cfg: ModelConfig) -> Tuple[Params, Params]:
+    V, D = cfg.padded_vocab, cfg.d_model
+    dt = _dtype(cfg)
+    k1, k2 = jax.random.split(key)
+    p = {"tok": dense_init(k1, (V, D), dt),
+         "head": dense_init(k2, (D, V), dt)}
+    s = {"tok": ("vocab", "fsdp"), "head": ("fsdp", "vocab")}
+    return p, s
+
+
+def embed(p: Params, tokens: jax.Array) -> jax.Array:
+    return jnp.take(p["tok"], tokens, axis=0)
+
+
+def lm_logits(p: Params, x: jax.Array) -> jax.Array:
+    return jnp.einsum("bsd,dv->bsv", x, p["head"])
+
+
+def softmax_xent(logits: jax.Array, labels: jax.Array,
+                 mask: Optional[jax.Array] = None,
+                 z_loss: float = 1e-4) -> jax.Array:
+    """Mean cross-entropy over valid positions, f32, with z-loss."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    loss = lse - ll + z_loss * jnp.square(lse)
+    if mask is not None:
+        return (loss * mask).sum() / jnp.maximum(mask.sum(), 1)
+    return loss.mean()

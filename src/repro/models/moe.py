@@ -1,0 +1,140 @@
+"""Mixture-of-Experts FFN with top-k routing and capacity-based dispatch.
+
+Dispatch is the sort-based (MegaBlocks/MaxText-style "dropping") formulation:
+tokens are ranked within their expert group via a stable sort of the routed
+expert ids; tokens beyond `capacity_factor * T * k / E` per expert are dropped
+(their combine weight contribution is zero). Expert weights carry an
+("experts", ...) leading axis sharded over the mesh "model" axis (expert
+parallelism); token->expert scatter/gather across that axis lowers to
+all-to-all style collectives under GSPMD.
+
+An auxiliary load-balancing loss (Switch-style) is returned alongside the
+output so the trainer can add it to the LM loss.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.dist.sharding import constrain
+from repro.models.layers import dense_init, mlp, mlp_init, _dtype
+
+Params = Dict[str, Any]
+
+# Explicit dispatch-buffer sharding constraints. Perf-pass finding
+# (EXPERIMENTS.md §Perf): for architectures whose attention/GSPMD
+# propagation loses the expert sharding (llama4-maverick: 40 heads % 16 != 0
+# poisons downstream propagation -> expert einsums replicate, 11x waste),
+# forcing P(experts->model) recovers it; for kimi-k2 (64 heads, clean
+# propagation) the same constraint forces a worse scatter resharding. Hence
+# opt-in per cell plan rather than unconditional.
+import contextlib
+
+_MOE_CONSTRAIN = {"on": False}
+
+
+@contextlib.contextmanager
+def moe_constraints(enabled: bool = True):
+    prev = _MOE_CONSTRAIN["on"]
+    _MOE_CONSTRAIN["on"] = enabled
+    try:
+        yield
+    finally:
+        _MOE_CONSTRAIN["on"] = prev
+
+
+def _c(x, *names):
+    return constrain(x, *names) if _MOE_CONSTRAIN["on"] else x
+
+
+def moe_init(key, cfg: ModelConfig) -> Tuple[Params, Params]:
+    D, F, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    dt = _dtype(cfg)
+    ks = jax.random.split(key, 4)
+    out_std = 0.02 / np.sqrt(2 * max(cfg.n_layers, 1))
+    p = {
+        "router": dense_init(ks[0], (D, E), jnp.float32),
+        "wi": dense_init(ks[1], (E, D, 2, F), dt),          # fused gate+up
+        "wo": dense_init(ks[2], (E, F, D), dt, std=out_std),
+    }
+    s = {
+        "router": ("fsdp", None),
+        "wi": ("experts", "fsdp", None, "mlp"),
+        "wo": ("experts", "mlp", "fsdp"),
+    }
+    if cfg.n_shared_experts:
+        sp, ss = mlp_init(ks[3], cfg, d_ff=cfg.d_ff * cfg.n_shared_experts)
+        p["shared"] = sp
+        s["shared"] = ss
+    return p, s
+
+
+def expert_capacity(cfg: ModelConfig, n_tokens: int) -> int:
+    cap = int(cfg.capacity_factor * n_tokens * cfg.top_k / cfg.n_experts)
+    return max(8, (cap + 7) // 8 * 8)
+
+
+def moe_ffn(p: Params, x: jax.Array, cfg: ModelConfig
+            ) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, D) -> (y: (B, S, D), aux_loss scalar)."""
+    B, S, D = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    T = B * S
+    C = expert_capacity(cfg, T)
+    xt = x.reshape(T, D)
+
+    logits = jnp.einsum("td,de->te", xt.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)                  # (T, E)
+    gate, idx = jax.lax.top_k(probs, k)                      # (T, k)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    # Switch-style aux loss: E * sum_e f_e * p_e
+    me = probs.mean(axis=0)                                   # mean router prob
+    ce = jnp.zeros((E,), jnp.float32).at[idx.reshape(-1)].add(
+        1.0 / (T * k))                                        # routed fraction
+    aux = E * jnp.sum(me * ce)
+
+    # ---- capacity-based dispatch -------------------------------------
+    flat_e = idx.reshape(-1)                                  # (T*k,)
+    sort_i = jnp.argsort(flat_e, stable=True)                 # (T*k,)
+    sorted_e = flat_e[sort_i]
+    counts = jnp.zeros((E,), jnp.int32).at[flat_e].add(1)
+    starts = jnp.cumsum(counts) - counts
+    pos = jnp.arange(T * k) - starts[sorted_e]                # rank in expert
+    keep = pos < C
+    dest_c = jnp.where(keep, pos, C)                          # C = drop slot
+    src_tok = sort_i // k                                     # token of slot
+
+    buf = jnp.zeros((E, C + 1, D), x.dtype)
+    buf = buf.at[sorted_e, dest_c].set(xt[src_tok], mode="drop")
+    buf = buf[:, :C]
+
+    # ---- expert FFN (SwiGLU), experts axis model-sharded ---------------
+    # Explicit constraints: without them GSPMD loses the expert sharding
+    # through the scatter and REPLICATES the expert einsums on every chip
+    # (observed in the baseline dry-run: useful-flops ratio 0.004 on
+    # llama4-maverick prefill). See EXPERIMENTS.md §Perf iteration B1.
+    buf = _c(buf, "experts", None, None)
+    h = jnp.einsum("ecd,edgf->ecgf", buf, p["wi"])
+    h = _c(h, "experts", None, None, "mlp")
+    act = jax.nn.silu(h[:, :, 0].astype(jnp.float32)).astype(x.dtype) \
+        * h[:, :, 1]
+    yb = jnp.einsum("ecf,efd->ecd", act, p["wo"])
+    yb = _c(yb, "experts", None, None)
+    yb = jnp.concatenate([yb, jnp.zeros((E, 1, D), yb.dtype)], axis=1)
+
+    # ---- combine -------------------------------------------------------
+    y_sorted = yb[sorted_e, dest_c] * keep[:, None].astype(yb.dtype)
+    inv = jnp.argsort(sort_i)
+    y_flat = y_sorted[inv].reshape(T, k, D)
+    y = (y_flat * gate[..., None].astype(yb.dtype)).sum(axis=1)
+    y = y.reshape(B, S, D)
+    y = _c(y, "batch", "seq", "embed_act")
+
+    if cfg.n_shared_experts:
+        y = y + mlp(p["shared"], x, cfg)
+    return y, aux

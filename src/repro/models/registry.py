@@ -1,0 +1,207 @@
+"""Model registry: one uniform `ModelBundle` API over all assigned families.
+
+    bundle = build(cfg)
+    params = bundle.init(key)
+    loss, metrics = bundle.loss(params, batch)
+    logits, cache = bundle.prefill(params, batch)
+    logits, cache = bundle.decode_step(params, token, cache, pos)
+
+`bundle.abstract()` returns (ShapeDtypeStruct param tree, logical-spec tree)
+WITHOUT allocating — this is what the multi-pod dry-run lowers against.
+`input_specs(cfg, shape)` returns ShapeDtypeStruct stand-ins for every model
+input of a given (arch x shape) cell, including the stub modality frontends.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import encdec as ED
+from repro.models import hybrid as HY
+from repro.models import layers as L
+from repro.models import transformer as TF
+from repro.models import vision as VI
+
+Params = Dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelBundle:
+    cfg: ModelConfig
+    init: Callable            # key -> params
+    abstract: Callable        # () -> (ShapeDtypeStruct tree, logical specs)
+    loss: Callable            # (params, batch) -> (loss, metrics)
+    prefill: Callable         # (params, batch) -> (logits, cache)
+    decode_step: Callable     # (params, token, cache, pos) -> (logits, cache)
+    cache_init: Callable      # (batch, max_len) -> (cache, cache_specs)
+
+
+def _family_init(cfg: ModelConfig):
+    if cfg.family in ("dense", "moe"):
+        return TF.transformer_init
+    if cfg.family in ("ssm", "hybrid"):
+        return HY.hybrid_init
+    if cfg.family == "encdec":
+        return ED.encdec_init
+    if cfg.family == "vlm":
+        return VI.vlm_init
+    raise ValueError(cfg.family)
+
+
+def build(cfg: ModelConfig, remat: str = "block") -> ModelBundle:
+    init_raw = _family_init(cfg)
+
+    def init(key):
+        return init_raw(key, cfg)[0]
+
+    def abstract():
+        cap = {}
+
+        def f(key):
+            p, s = init_raw(key, cfg)
+            cap["specs"] = s
+            return p
+        shapes = jax.eval_shape(f, jax.random.PRNGKey(0))
+        return shapes, cap["specs"]
+
+    if cfg.family in ("dense", "moe"):
+        def loss(params, batch):
+            return TF.lm_loss(params, batch, cfg, remat=remat)
+
+        def prefill(params, batch):
+            return TF.transformer_prefill(params, batch["tokens"], cfg)
+
+        def decode_step(params, token, cache, pos):
+            return TF.transformer_decode_step(params, token, cache, pos, cfg)
+
+        def cache_init(batch, max_len):
+            return L.kv_cache_init(cfg, cfg.n_layers, batch, max_len)
+
+    elif cfg.family in ("ssm", "hybrid"):
+        def loss(params, batch):
+            return TF.lm_loss(params, batch, cfg, apply_fn=HY.hybrid_apply,
+                              remat=remat)
+
+        def prefill(params, batch):
+            return HY.hybrid_prefill(params, batch["tokens"], cfg)
+
+        def decode_step(params, token, cache, pos):
+            return HY.hybrid_decode_step(params, token, cache, pos, cfg)
+
+        def cache_init(batch, max_len):
+            return HY.hybrid_cache_init(cfg, batch, max_len)
+
+    elif cfg.family == "encdec":
+        def loss(params, batch):
+            def apply_fn(p, t, c, remat="block"):
+                return ED.encdec_apply(p, t, c, frames=batch["frames"],
+                                       remat=remat)
+            return TF.lm_loss(params, batch, cfg, apply_fn=apply_fn,
+                              remat=remat)
+
+        def prefill(params, batch):
+            return ED.encdec_prefill(params, batch["tokens"], cfg,
+                                     frames=batch["frames"])
+
+        def decode_step(params, token, cache, pos):
+            return ED.encdec_decode_step(params, token, cache, pos, cfg)
+
+        def cache_init(batch, max_len):
+            return ED.encdec_cache_init(cfg, batch, max_len)
+
+    elif cfg.family == "vlm":
+        def loss(params, batch):
+            def apply_fn(p, t, c, remat="block"):
+                return VI.vlm_apply(p, t, c, patches=batch["patches"],
+                                    remat=remat)
+            return TF.lm_loss(params, batch, cfg, apply_fn=apply_fn,
+                              remat=remat)
+
+        def prefill(params, batch):
+            return VI.vlm_prefill(params, batch["tokens"], cfg,
+                                  patches=batch["patches"])
+
+        def decode_step(params, token, cache, pos):
+            return VI.vlm_decode_step(params, token, cache, pos, cfg)
+
+        def cache_init(batch, max_len):
+            return VI.vlm_cache_init(cfg, batch, max_len)
+
+    return ModelBundle(cfg=cfg, init=init, abstract=abstract, loss=loss,
+                       prefill=prefill, decode_step=decode_step,
+                       cache_init=cache_init)
+
+
+# --------------------------------------------------------------------------
+# input specs (ShapeDtypeStruct stand-ins; no allocation)
+# --------------------------------------------------------------------------
+
+def _frontend_spec(cfg: ModelConfig, batch: int):
+    Df = ED._frontend_dim(cfg)
+    shape = (batch, cfg.n_frontend_tokens, Df)
+    name = "frames" if cfg.frontend == "audio" else "patches"
+    return name, jax.ShapeDtypeStruct(shape, jnp.dtype(cfg.dtype))
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig
+                ) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for the model inputs of one cell.
+
+    train  -> {tokens, labels, mask(, frames|patches)}
+    prefill-> {tokens(, frames|patches)}
+    decode -> {token, cache, pos}  (one new token, cache of length seq_len)
+    """
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    if shape.kind == "train":
+        out = {"tokens": jax.ShapeDtypeStruct((B, S), i32),
+               "labels": jax.ShapeDtypeStruct((B, S), i32),
+               "mask": jax.ShapeDtypeStruct((B, S), jnp.float32)}
+        if cfg.frontend:
+            name, spec = _frontend_spec(cfg, B)
+            out[name] = spec
+        return out
+    if shape.kind == "prefill":
+        out = {"tokens": jax.ShapeDtypeStruct((B, S), i32)}
+        if cfg.frontend:
+            name, spec = _frontend_spec(cfg, B)
+            out[name] = spec
+        return out
+    # decode: one token against a cache of size S
+    bundle = build(cfg)
+    cache = jax.eval_shape(lambda: bundle.cache_init(B, S)[0])
+    return {"token": jax.ShapeDtypeStruct((B,), i32),
+            "cache": cache,
+            "pos": jax.ShapeDtypeStruct((), i32)}
+
+
+def batch_logical_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """Logical sharding names for each input in input_specs."""
+    if shape.kind == "train":
+        out = {"tokens": ("batch", "seq"), "labels": ("batch", "seq"),
+               "mask": ("batch", "seq")}
+        if cfg.frontend:
+            name = "frames" if cfg.frontend == "audio" else "patches"
+            out[name] = ("batch", None, None)
+        return out
+    if shape.kind == "prefill":
+        out = {"tokens": ("batch", "seq")}
+        if cfg.frontend:
+            name = "frames" if cfg.frontend == "audio" else "patches"
+            out[name] = ("batch", None, None)
+        return out
+    bundle = build(cfg)
+    # cache specs come from cache_init's second return; get them statically:
+    cap = {}
+
+    def f():
+        c, s = bundle.cache_init(shape.global_batch, shape.seq_len)
+        cap["s"] = s
+        return c
+    jax.eval_shape(f)
+    return {"token": ("batch",), "cache": cap["s"], "pos": None}

@@ -1,0 +1,228 @@
+"""Mamba2 / SSD (state-space duality) mixer, pure JAX [arXiv:2405.21060].
+
+Training/prefill uses the chunked SSD algorithm: the sequence is split into
+chunks; within a chunk the recurrence is computed as a (masked, decayed)
+attention-like quadratic form, and chunk-final states are propagated by a
+`lax.scan` over chunks. This is O(S * chunk) instead of O(S^2) — the reason
+`long_500k` is runnable for the SSM/hybrid architectures.
+
+Decode is the O(1)-per-token linear recurrence over the cached state
+(B, H, head_dim, N) plus a rolling depthwise-conv cache.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense_init, rmsnorm, _dtype
+
+Params = Dict[str, Any]
+
+
+def ssm_init(key, cfg: ModelConfig) -> Tuple[Params, Params]:
+    D = cfg.d_model
+    Din, N, H = cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads
+    K = cfg.ssm_conv
+    dt = _dtype(cfg)
+    ks = jax.random.split(key, 4)
+    # in_proj emits [z (Din), x (Din), B (N), C (N), dt (H)]
+    p = {
+        "in_proj": dense_init(ks[0], (D, 2 * Din + 2 * N + H), dt),
+        "conv_w": dense_init(ks[1], (K, Din + 2 * N), dt, std=0.1),
+        "conv_b": jnp.zeros((Din + 2 * N,), dt),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, H)).astype(jnp.float32),
+        "d_skip": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "norm": jnp.ones((Din,), dt),
+        "out_proj": dense_init(ks[2], (Din, D), dt,
+                               std=0.02 / np.sqrt(2 * max(cfg.n_layers, 1))),
+    }
+    s = {
+        "in_proj": ("fsdp", "ssm_inner"),
+        "conv_w": (None, "ssm_inner"),
+        "conv_b": ("ssm_inner",),
+        "a_log": ("ssm_heads",),
+        "d_skip": ("ssm_heads",),
+        "dt_bias": ("ssm_heads",),
+        "norm": ("ssm_inner",),
+        "out_proj": ("ssm_inner", "fsdp"),
+    }
+    return p, s
+
+
+def _split_proj(cfg: ModelConfig, zxbcdt: jax.Array):
+    Din, N, H = cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads
+    z = zxbcdt[..., :Din]
+    xBC = zxbcdt[..., Din:2 * Din + 2 * N]
+    dt = zxbcdt[..., 2 * Din + 2 * N:]
+    return z, xBC, dt
+
+
+def _causal_conv(xBC: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv. xBC: (B, S, C); w: (K, C)."""
+    K, C = w.shape
+    x = jnp.pad(xBC, ((0, 0), (K - 1, 0), (0, 0)))
+    # windows via K shifted adds (K is 4: cheaper than conv_general for TPU)
+    S = xBC.shape[1]
+    out = jnp.zeros_like(xBC, dtype=jnp.float32)
+    for i in range(K):
+        out = out + x[:, i:i + S, :].astype(jnp.float32) * w[i].astype(jnp.float32)
+    return jax.nn.silu(out + b.astype(jnp.float32)).astype(xBC.dtype)
+
+
+def _segsum(dA: jax.Array) -> jax.Array:
+    """dA: (..., c) log-decays -> (..., c, c) lower-tri cumulative sums."""
+    c = dA.shape[-1]
+    cum = jnp.cumsum(dA, axis=-1)
+    seg = cum[..., :, None] - cum[..., None, :]   # sum over (j, i]
+    mask = jnp.tril(jnp.ones((c, c), bool))
+    return jnp.where(mask, seg, -jnp.inf)
+
+
+def ssd_chunked(x: jax.Array, dt: jax.Array, a_log: jax.Array,
+                Bm: jax.Array, Cm: jax.Array, chunk: int,
+                init_state: Optional[jax.Array] = None
+                ) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD scan.
+
+    x: (B, S, H, P); dt: (B, S, H) post-softplus; a_log: (H,) with A=-exp(a_log)
+    Bm, Cm: (B, S, N) (single B/C group, broadcast over heads)
+    Returns (y: (B, S, H, P), final_state: (B, H, P, N)).
+    """
+    Bsz, S, H, P = x.shape
+    N = Bm.shape[-1]
+    chunk = min(chunk, S)
+    S_orig = S
+    pad = (-S) % chunk
+    if pad:
+        # zero-pad the tail: dt=0 => decay exp(0)=1 and zero input, so the
+        # final state is untouched by padded positions; y tail is sliced off.
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+        S = S + pad
+    nc = S // chunk
+    A = -jnp.exp(a_log)                                     # (H,)
+    dA = dt * A                                             # (B, S, H) log-decay
+    xr = x.reshape(Bsz, nc, chunk, H, P)
+    dtr = dt.reshape(Bsz, nc, chunk, H)
+    dAr = dA.reshape(Bsz, nc, chunk, H).transpose(0, 1, 3, 2)  # (B,nc,H,c)
+    Br = Bm.reshape(Bsz, nc, chunk, N)
+    Cr = Cm.reshape(Bsz, nc, chunk, N)
+
+    cum = jnp.cumsum(dAr, axis=-1)                          # (B,nc,H,c)
+    # ---- intra-chunk (quadratic within chunk) ----
+    L = jnp.exp(_segsum(dAr))                               # (B,nc,H,c,c)
+    scores = jnp.einsum("bzin,bzjn->bzij", Cr, Br)          # (B,nc,c,c)
+    att = scores[:, :, None] * L * dtr.transpose(0, 1, 3, 2)[:, :, :, None, :]
+    y_intra = jnp.einsum("bzhij,bzjhp->bzihp", att.astype(x.dtype), xr)
+
+    # ---- chunk-final states ----
+    decay_to_end = jnp.exp(cum[..., -1:] - cum)             # (B,nc,H,c)
+    states = jnp.einsum("bzjn,bzhj,bzjh,bzjhp->bzhpn",
+                        Br, decay_to_end.astype(x.dtype), dtr.astype(x.dtype), xr)
+
+    # ---- inter-chunk recurrence over chunk states ----
+    chunk_decay = jnp.exp(cum[..., -1])                     # (B,nc,H)
+
+    def step(s, inputs):
+        st, dec = inputs                                    # (B,H,P,N), (B,H)
+        s_new = s * dec[..., None, None].astype(s.dtype) + st
+        return s_new, s                                     # emit state *before*
+
+    from repro.dist.sharding import match_vma
+    s0 = (jnp.zeros((Bsz, H, P, N), x.dtype) if init_state is None
+          else init_state.astype(x.dtype))
+    s0 = match_vma(s0, x)
+    final, prev_states = jax.lax.scan(
+        step, s0,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)      # (B,nc,H,P,N)
+
+    # ---- inter-chunk contribution ----
+    in_decay = jnp.exp(cum).transpose(0, 1, 3, 2)           # (B,nc,c,H)
+    y_inter = jnp.einsum("bzin,bzih,bzhpn->bzihp",
+                         Cr, in_decay.astype(x.dtype), prev_states)
+    y = (y_intra + y_inter).reshape(Bsz, S, H, P)[:, :S_orig]
+    return y, final.astype(jnp.float32)
+
+
+def ssm_forward(p: Params, x: jax.Array, cfg: ModelConfig,
+                init_state: Optional[jax.Array] = None,
+                return_cache: bool = False):
+    """Full-sequence Mamba2 mixer. x: (B, S, D) -> (y, final_state) or, with
+    return_cache, (y, (final_state, conv_tail)) for decode continuation."""
+    Din, N, H = cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads
+    P = cfg.ssm_head_dim
+    K = cfg.ssm_conv
+    z, xBC, dt_raw = _split_proj(cfg, jnp.einsum("bsd,de->bse", x, p["in_proj"]))
+    conv_tail = xBC[:, x.shape[1] - (K - 1):, :]   # raw pre-conv window tail
+    xBC = _causal_conv(xBC, p["conv_w"], p["conv_b"])
+    xs = xBC[..., :Din]
+    Bm = xBC[..., Din:Din + N]
+    Cm = xBC[..., Din + N:]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    xh = xs.reshape(*xs.shape[:-1], H, P)
+    y, state = ssd_chunked(xh, dt, p["a_log"], Bm, Cm, cfg.ssm_chunk,
+                           init_state)
+    y = y + xh * p["d_skip"][:, None].astype(x.dtype)
+    y = y.reshape(*xs.shape[:-1], Din)
+    y = rmsnorm(y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype),
+                p["norm"], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+    if return_cache:
+        return out, (state, conv_tail)
+    return out, state
+
+
+# --------------------------------------------------------------------------
+# Decode path (O(1) per token)
+# --------------------------------------------------------------------------
+
+def ssm_cache_init(cfg: ModelConfig, n_layers: int, batch: int
+                   ) -> Tuple[Params, Params]:
+    Din, N, H = cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads
+    P = cfg.ssm_head_dim
+    K = cfg.ssm_conv
+    dt = _dtype(cfg)
+    cache = {
+        "state": jnp.zeros((n_layers, batch, H, P, N), jnp.float32),
+        "conv": jnp.zeros((n_layers, batch, K - 1, Din + 2 * N), dt),
+    }
+    specs = {"state": ("layers", "batch", "ssm_heads", None, None),
+             "conv": ("layers", "batch", None, "ssm_inner")}
+    return cache, specs
+
+
+def ssm_decode_step(p: Params, x: jax.Array, state: jax.Array,
+                    conv_cache: jax.Array, cfg: ModelConfig
+                    ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """x: (B, 1, D); state: (B, H, P, N); conv_cache: (B, K-1, C).
+    Returns (y: (B, 1, D), new_state, new_conv_cache)."""
+    Din, N, H = cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads
+    P = cfg.ssm_head_dim
+    z, xBC, dt_raw = _split_proj(cfg, jnp.einsum("bsd,de->bse", x, p["in_proj"]))
+    xBC = xBC[:, 0]                                          # (B, C)
+    window = jnp.concatenate([conv_cache, xBC[:, None]], axis=1)  # (B, K, C)
+    conv = (window.astype(jnp.float32) * p["conv_w"].astype(jnp.float32)
+            ).sum(axis=1) + p["conv_b"].astype(jnp.float32)
+    xBC = jax.nn.silu(conv).astype(x.dtype)
+    xs, Bm, Cm = (xBC[..., :Din], xBC[..., Din:Din + N], xBC[..., Din + N:])
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    A = -jnp.exp(p["a_log"])
+    dA = jnp.exp(dt * A)                                     # (B, H)
+    xh = xs.reshape(-1, H, P).astype(jnp.float32)
+    dBx = jnp.einsum("bh,bn,bhp->bhpn", dt, Bm.astype(jnp.float32), xh)
+    state = state * dA[..., None, None] + dBx
+    y = jnp.einsum("bn,bhpn->bhp", Cm.astype(jnp.float32), state)
+    y = y + xh * p["d_skip"][:, None]
+    y = y.reshape(-1, 1, Din).astype(x.dtype)
+    y = rmsnorm(y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype),
+                p["norm"], cfg.norm_eps)
+    return (jnp.einsum("bse,ed->bsd", y, p["out_proj"]),
+            state, window[:, 1:].astype(conv_cache.dtype))

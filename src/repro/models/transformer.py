@@ -1,0 +1,330 @@
+"""Decoder-only transformer stack (dense + MoE families) and shared stack
+machinery (stacked-layer init, remat'd `lax.scan` over layers, LM loss).
+
+Layer topology is kept scan-homogeneous by grouping: a MoE model with
+`moe_every = k` scans over "super-layers" of (k-1 dense + 1 MoE) blocks, and
+leading `n_dense_layers` dense blocks are unrolled (they are few). This keeps
+the HLO O(1) in depth at 61-100 layers.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.dist.sharding import constrain
+from repro.models import layers as L
+from repro.models import moe as M
+
+Params = Dict[str, Any]
+
+
+# --------------------------------------------------------------------------
+# stacked init helper
+# --------------------------------------------------------------------------
+
+def init_stacked(key, n: int, init_fn: Callable) -> Tuple[Params, Params]:
+    """Stack `n` independently-initialized copies of init_fn's params along a
+    new leading 'layers' axis. init_fn: key -> (params, specs)."""
+    _, specs = init_fn(jax.random.PRNGKey(0))
+    keys = jax.random.split(key, n)
+    params = jax.vmap(lambda k: init_fn(k)[0])(keys)
+    specs = jax.tree.map(lambda s: ("layers",) + s, specs,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    return params, specs
+
+
+def remat_policy(name: str = "block"):
+    """Activation-checkpoint policy for the scanned layer body."""
+    if name == "full":            # save nothing; recompute everything
+        return jax.checkpoint_policies.nothing_saveable
+    if name == "dots":            # save matmul outputs with batch dims
+        return jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+    return jax.checkpoint_policies.nothing_saveable
+
+
+# --------------------------------------------------------------------------
+# dense / MoE block
+# --------------------------------------------------------------------------
+
+def dense_block_init(key, cfg: ModelConfig, d_ff: Optional[int] = None
+                     ) -> Tuple[Params, Params]:
+    k1, k2 = jax.random.split(key)
+    attn_p, attn_s = L.attn_init(k1, cfg)
+    mlp_p, mlp_s = L.mlp_init(k2, cfg, d_ff=d_ff)
+    p = {"ln1": jnp.ones((cfg.d_model,), L._dtype(cfg)), "attn": attn_p,
+         "ln2": jnp.ones((cfg.d_model,), L._dtype(cfg)), "mlp": mlp_p}
+    s = {"ln1": ("embed",), "attn": attn_s, "ln2": ("embed",), "mlp": mlp_s}
+    return p, s
+
+
+def dense_block(p: Params, x: jax.Array, cfg: ModelConfig,
+                q_chunk: int = 512, kv_chunk: int = 512) -> jax.Array:
+    x = constrain(x, "batch", "seq", "embed_act")
+    h = x + L.attention_train(p["attn"], L.rmsnorm(x, p["ln1"], cfg.norm_eps),
+                              cfg, q_chunk=q_chunk, kv_chunk=kv_chunk)
+    h = h + L.mlp(p["mlp"], L.rmsnorm(h, p["ln2"], cfg.norm_eps), cfg)
+    return h
+
+
+def moe_block_init(key, cfg: ModelConfig) -> Tuple[Params, Params]:
+    k1, k2 = jax.random.split(key)
+    attn_p, attn_s = L.attn_init(k1, cfg)
+    moe_p, moe_s = M.moe_init(k2, cfg)
+    p = {"ln1": jnp.ones((cfg.d_model,), L._dtype(cfg)), "attn": attn_p,
+         "ln2": jnp.ones((cfg.d_model,), L._dtype(cfg)), "moe": moe_p}
+    s = {"ln1": ("embed",), "attn": attn_s, "ln2": ("embed",), "moe": moe_s}
+    return p, s
+
+
+def moe_block(p: Params, x: jax.Array, cfg: ModelConfig,
+              q_chunk: int = 512, kv_chunk: int = 512
+              ) -> Tuple[jax.Array, jax.Array]:
+    x = constrain(x, "batch", "seq", "embed_act")
+    h = x + L.attention_train(p["attn"], L.rmsnorm(x, p["ln1"], cfg.norm_eps),
+                              cfg, q_chunk=q_chunk, kv_chunk=kv_chunk)
+    y, aux = M.moe_ffn(p["moe"], L.rmsnorm(h, p["ln2"], cfg.norm_eps), cfg)
+    return h + y, aux
+
+
+# --------------------------------------------------------------------------
+# decode blocks
+# --------------------------------------------------------------------------
+
+def dense_block_decode(p: Params, x: jax.Array, ck: jax.Array, cv: jax.Array,
+                       pos: jax.Array, cfg: ModelConfig):
+    a, ck, cv = L.attention_decode(
+        p["attn"], L.rmsnorm(x, p["ln1"], cfg.norm_eps), ck, cv, pos, cfg)
+    h = x + a
+    h = h + L.mlp(p["mlp"], L.rmsnorm(h, p["ln2"], cfg.norm_eps), cfg)
+    return h, ck, cv
+
+
+def moe_block_decode(p: Params, x: jax.Array, ck: jax.Array, cv: jax.Array,
+                     pos: jax.Array, cfg: ModelConfig):
+    a, ck, cv = L.attention_decode(
+        p["attn"], L.rmsnorm(x, p["ln1"], cfg.norm_eps), ck, cv, pos, cfg)
+    h = x + a
+    y, _ = M.moe_ffn(p["moe"], L.rmsnorm(h, p["ln2"], cfg.norm_eps), cfg)
+    return h + y, ck, cv
+
+
+# --------------------------------------------------------------------------
+# dense / MoE model
+# --------------------------------------------------------------------------
+
+def transformer_init(key, cfg: ModelConfig) -> Tuple[Params, Params]:
+    ks = jax.random.split(key, 4)
+    emb_p, emb_s = L.embed_init(ks[0], cfg)
+    p: Params = {"embed": emb_p,
+                 "final_norm": jnp.ones((cfg.d_model,), L._dtype(cfg))}
+    s: Params = {"embed": emb_s, "final_norm": ("embed",)}
+    if cfg.family == "moe":
+        n_lead = cfg.n_dense_layers
+        if n_lead:
+            lead_p, lead_s = init_stacked(
+                ks[1], n_lead,
+                lambda k: dense_block_init(k, cfg,
+                                           d_ff=cfg.dense_d_ff or cfg.d_ff))
+            p["lead"], s["lead"] = lead_p, lead_s
+        n_groups = (cfg.n_layers - n_lead) // cfg.moe_every
+        group_dense = cfg.moe_every - 1
+
+        def group_init(k):
+            kd, km = jax.random.split(k)
+            gp, gs = {}, {}
+            if group_dense:
+                dp, ds = init_stacked(
+                    kd, group_dense,
+                    lambda kk: dense_block_init(kk, cfg,
+                                                d_ff=cfg.dense_d_ff or cfg.d_ff))
+                gp["dense"], gs["dense"] = dp, ds
+            mp, ms = moe_block_init(km, cfg)
+            gp["moe"], gs["moe"] = mp, ms
+            return gp, gs
+
+        gp, gs = init_stacked(ks[2], n_groups, group_init)
+        p["groups"], s["groups"] = gp, gs
+    else:
+        lp, ls = init_stacked(ks[1], cfg.n_layers,
+                              lambda k: dense_block_init(k, cfg))
+        p["layers"], s["layers"] = lp, ls
+    return p, s
+
+
+def _chunks_for(cfg: ModelConfig, seq: int) -> Tuple[int, int]:
+    c = min(512, seq)
+    return c, c
+
+
+def transformer_apply(params: Params, tokens: jax.Array, cfg: ModelConfig,
+                      remat: str = "block") -> Tuple[jax.Array, jax.Array]:
+    """tokens: (B, S) -> (hidden (B, S, D), aux_loss)."""
+    qc, kc = _chunks_for(cfg, tokens.shape[1])
+    x = L.embed(params["embed"], tokens)
+    x = constrain(x, "batch", "seq", "embed_act")
+    aux = jnp.zeros((), jnp.float32)
+    policy = remat_policy(remat)
+    if cfg.family == "moe":
+        for i in range(cfg.n_dense_layers):
+            lead_i = jax.tree.map(lambda a: a[i], params["lead"])
+            x = dense_block(lead_i, x, cfg, qc, kc)
+
+        @functools.partial(jax.checkpoint, policy=policy)
+        def g_body(h, gp):
+            if "dense" in gp:
+                n_d = jax.tree.leaves(gp["dense"])[0].shape[0]
+                for j in range(n_d):
+                    dj = jax.tree.map(lambda a: a[j], gp["dense"])
+                    h = dense_block(dj, h, cfg, qc, kc)
+            h, a = moe_block(gp["moe"], h, cfg, qc, kc)
+            return h, a
+
+        x, auxs = jax.lax.scan(g_body, x, params["groups"])
+        aux = aux + auxs.sum()
+    else:
+        @functools.partial(jax.checkpoint, policy=policy)
+        def body(h, lp):
+            return dense_block(lp, h, cfg, qc, kc), None
+
+        x, _ = jax.lax.scan(body, x, params["layers"])
+    x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    return x, aux
+
+
+MOE_AUX_WEIGHT = 0.01
+
+
+def lm_loss(params: Params, batch: Dict[str, jax.Array], cfg: ModelConfig,
+            apply_fn=None, remat: str = "block"
+            ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    apply_fn = apply_fn or transformer_apply
+    x, aux = apply_fn(params, batch["tokens"], cfg, remat=remat)
+    logits = L.lm_logits(params["embed"], x)
+    logits = constrain(logits, "batch", "seq", "vocab")
+    xent = L.softmax_xent(logits, batch["labels"], batch.get("mask"))
+    loss = xent + MOE_AUX_WEIGHT * aux
+    return loss, {"xent": xent, "aux": aux}
+
+
+# --------------------------------------------------------------------------
+# serving: prefill + decode
+# --------------------------------------------------------------------------
+
+def transformer_prefill(params: Params, tokens: jax.Array, cfg: ModelConfig
+                        ) -> Tuple[jax.Array, Params]:
+    """Prefill run: returns (last-position logits (B, V), kv cache filled up
+    to S). Cache layout matches kv_cache_init (layer-major)."""
+    qc, kc = _chunks_for(cfg, tokens.shape[1])
+    B, S = tokens.shape
+    x = L.embed(params["embed"], tokens)
+    positions = jnp.arange(S)[None, :]
+
+    def run_block(p, h):
+        xn = L.rmsnorm(h, p["ln1"], cfg.norm_eps)
+        q, k, v = L._project_qkv(p["attn"], xn, cfg, positions)
+        o = L.chunked_attention(q, k, v, causal=True, q_chunk=qc, kv_chunk=kc)
+        h = h + jnp.einsum("bshk,hkd->bsd", o, p["attn"]["wo"])
+        if "moe" in p:
+            y, _ = M.moe_ffn(p["moe"], L.rmsnorm(h, p["ln2"], cfg.norm_eps),
+                             cfg)
+        else:
+            y = L.mlp(p["mlp"], L.rmsnorm(h, p["ln2"], cfg.norm_eps), cfg)
+        # flat (KV*hd) cache layout — see kv_cache_init
+        return h + y, k.reshape(B, S, -1), v.reshape(B, S, -1)
+
+    ks, vs = [], []
+    if cfg.family == "moe":
+        for i in range(cfg.n_dense_layers):
+            li = jax.tree.map(lambda a: a[i], params["lead"])
+            x, k, v = run_block(li, x)
+            ks.append(k); vs.append(v)
+
+        def g_body(h, gp):
+            outs_k, outs_v = [], []
+            if "dense" in gp:
+                n_d = jax.tree.leaves(gp["dense"])[0].shape[0]
+                for j in range(n_d):
+                    dj = jax.tree.map(lambda a: a[j], gp["dense"])
+                    h, k, v = run_block(dj, h)
+                    outs_k.append(k); outs_v.append(v)
+            h, k, v = run_block(gp["moe"], h)
+            outs_k.append(k); outs_v.append(v)
+            return h, (jnp.stack(outs_k), jnp.stack(outs_v))
+
+        x, (gk, gv) = jax.lax.scan(g_body, x, params["groups"])
+        # gk: (n_groups, per_group, B, S, KV, hd) -> (L', B, S, KV, hd)
+        gk = gk.reshape(-1, *gk.shape[2:])
+        gv = gv.reshape(-1, *gv.shape[2:])
+        cache_k = jnp.concatenate([jnp.stack(ks), gk]) if ks else gk
+        cache_v = jnp.concatenate([jnp.stack(vs), gv]) if vs else gv
+    else:
+        def body(h, lp):
+            h, k, v = run_block(lp, h)
+            return h, (k, v)
+
+        x, (cache_k, cache_v) = jax.lax.scan(body, x, params["layers"])
+    x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = L.lm_logits(params["embed"], x[:, -1:])[:, 0]
+    return logits, {"k": cache_k, "v": cache_v}
+
+
+def transformer_decode_step(params: Params, token: jax.Array, cache: Params,
+                            pos: jax.Array, cfg: ModelConfig
+                            ) -> Tuple[jax.Array, Params]:
+    """One greedy decode step. token: (B,) int32; cache: {"k","v"} stacked
+    (L, B, S_max, KV, hd); pos: scalar. Returns (logits (B, V), new cache)."""
+    x = L.embed(params["embed"], token[:, None])
+    x = constrain(x, "batch", None, "embed_act")
+
+    if cfg.family == "moe":
+        li = 0
+        ck, cv = cache["k"], cache["v"]
+        new_k, new_v = [], []
+        for i in range(cfg.n_dense_layers):
+            lp = jax.tree.map(lambda a: a[i], params["lead"])
+            x, k1, v1 = dense_block_decode(lp, x, ck[li], cv[li], pos, cfg)
+            new_k.append(k1); new_v.append(v1)
+            li += 1
+        n_groups = jax.tree.leaves(params["groups"])[0].shape[0]
+        per_group = cfg.moe_every
+        gk = ck[li:].reshape(n_groups, per_group, *ck.shape[1:])
+        gv = cv[li:].reshape(n_groups, per_group, *cv.shape[1:])
+
+        def g_body(h, xs):
+            gp, gck, gcv = xs
+            nk, nv = [], []
+            j = 0
+            if "dense" in gp:
+                n_d = jax.tree.leaves(gp["dense"])[0].shape[0]
+                for jj in range(n_d):
+                    dj = jax.tree.map(lambda a: a[jj], gp["dense"])
+                    h, k1, v1 = dense_block_decode(dj, h, gck[j], gcv[j],
+                                                   pos, cfg)
+                    nk.append(k1); nv.append(v1)
+                    j += 1
+            h, k1, v1 = moe_block_decode(gp["moe"], h, gck[j], gcv[j],
+                                         pos, cfg)
+            nk.append(k1); nv.append(v1)
+            return h, (jnp.stack(nk), jnp.stack(nv))
+
+        x, (gk2, gv2) = jax.lax.scan(g_body, x, (params["groups"], gk, gv))
+        gk2 = gk2.reshape(-1, *gk2.shape[2:])
+        gv2 = gv2.reshape(-1, *gv2.shape[2:])
+        cache_k = jnp.concatenate([jnp.stack(new_k), gk2]) if new_k else gk2
+        cache_v = jnp.concatenate([jnp.stack(new_v), gv2]) if new_v else gv2
+    else:
+        def body(h, xs):
+            lp, ck_l, cv_l = xs
+            h, k1, v1 = dense_block_decode(lp, h, ck_l, cv_l, pos, cfg)
+            return h, (k1, v1)
+
+        x, (cache_k, cache_v) = jax.lax.scan(
+            body, x, (params["layers"], cache["k"], cache["v"]))
+    x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = L.lm_logits(params["embed"], x)[:, 0]
+    return logits, {"k": cache_k, "v": cache_v}

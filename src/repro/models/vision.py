@@ -1,0 +1,192 @@
+"""VLM family (Llama-3.2-Vision backbone): decoder-only LM where every
+`cross_attn_every`-th layer carries an extra cross-attention sub-block over
+precomputed image patch embeddings (vision frontend is a STUB per the
+assignment — `input_specs()` provides the patches).
+
+Scan topology: groups of (cross_attn_every - 1) self-attention layers followed
+by 1 [self + cross + mlp] layer, so 100 layers lower as 20 scanned groups.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.dist.sharding import constrain
+from repro.models import layers as L
+from repro.models.encdec import _cross_decode, dec_block_init, _frontend_dim
+from repro.models.transformer import (dense_block, dense_block_decode,
+                                      dense_block_init, init_stacked,
+                                      remat_policy)
+
+Params = Dict[str, Any]
+
+
+def vlm_init(key, cfg: ModelConfig) -> Tuple[Params, Params]:
+    ks = jax.random.split(key, 4)
+    emb_p, emb_s = L.embed_init(ks[0], cfg)
+    Df = _frontend_dim(cfg)
+    p: Params = {
+        "embed": emb_p,
+        "frontend_proj": L.dense_init(ks[1], (Df, cfg.d_model), L._dtype(cfg)),
+        "final_norm": jnp.ones((cfg.d_model,), L._dtype(cfg)),
+    }
+    s: Params = {"embed": emb_s, "frontend_proj": (None, "embed"),
+                 "final_norm": ("embed",)}
+    n_groups = cfg.n_layers // cfg.cross_attn_every
+    n_self = cfg.cross_attn_every - 1
+
+    def group_init(k):
+        k1, k2 = jax.random.split(k)
+        gp, gs = {}, {}
+        if n_self:
+            sp, ss = init_stacked(k1, n_self,
+                                  lambda kk: dense_block_init(kk, cfg))
+            gp["self"], gs["self"] = sp, ss
+        cp, cs = dec_block_init(k2, cfg)      # self + cross + mlp
+        gp["cross"], gs["cross"] = cp, cs
+        return gp, gs
+
+    gp, gs = init_stacked(ks[2], n_groups, group_init)
+    p["groups"], s["groups"] = gp, gs
+    return p, s
+
+
+def vlm_apply(params: Params, tokens: jax.Array, cfg: ModelConfig,
+              patches: jax.Array = None, remat: str = "block"
+              ) -> Tuple[jax.Array, jax.Array]:
+    from repro.models.encdec import dec_block
+    memory = jnp.einsum("bsf,fd->bsd", patches.astype(L._dtype(cfg)),
+                        params["frontend_proj"])
+    x = L.embed(params["embed"], tokens)
+    x = constrain(x, "batch", "seq", "embed_act")
+    qc = min(512, tokens.shape[1])
+
+    @functools.partial(jax.checkpoint, policy=remat_policy(remat))
+    def g_body(h, gp):
+        if "self" in gp:
+            def s_body(hh, sp):
+                return dense_block(sp, hh, cfg, qc, qc), None
+            h, _ = jax.lax.scan(s_body, h, gp["self"])
+        h = dec_block(gp["cross"], h, memory, cfg, qc)
+        return h, None
+
+    x, _ = jax.lax.scan(g_body, x, params["groups"])
+    x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    return x, jnp.zeros((), jnp.float32)
+
+
+# --------------------------------------------------------------------------
+# serving
+# --------------------------------------------------------------------------
+
+def vlm_cache_init(cfg: ModelConfig, batch: int, max_len: int
+                   ) -> Tuple[Params, Params]:
+    selfc, selfs = L.kv_cache_init(cfg, cfg.n_layers, batch, max_len)
+    n_groups = cfg.n_layers // cfg.cross_attn_every
+    Sp = cfg.n_frontend_tokens
+    KV, hd = cfg.n_kv_heads, cfg.head_dim_
+    dt = L._dtype(cfg)
+    cache = {"self": selfc,
+             "cross_k": jnp.zeros((n_groups, batch, Sp, KV * hd), dt),
+             "cross_v": jnp.zeros((n_groups, batch, Sp, KV * hd), dt)}
+    specs = {"self": selfs,
+             "cross_k": ("layers", "batch", None, "kv_flat"),
+             "cross_v": ("layers", "batch", None, "kv_flat")}
+    return cache, specs
+
+
+def vlm_prefill(params: Params, tokens: jax.Array, cfg: ModelConfig,
+                patches: jax.Array = None) -> Tuple[jax.Array, Params]:
+    memory = jnp.einsum("bsf,fd->bsd", patches.astype(L._dtype(cfg)),
+                        params["frontend_proj"])
+    B, Sq = tokens.shape
+    x = L.embed(params["embed"], tokens)
+    positions = jnp.arange(Sq)[None, :]
+    qc = min(512, Sq)
+
+    def run_self(p, h):
+        xn = L.rmsnorm(h, p["ln1"], cfg.norm_eps)
+        q, k, v = L._project_qkv(p["attn"], xn, cfg, positions)
+        o = L.chunked_attention(q, k, v, causal=True, q_chunk=qc, kv_chunk=qc)
+        h = h + jnp.einsum("bshk,hkd->bsd", o, p["attn"]["wo"])
+        return h, k.reshape(B, Sq, -1), v.reshape(B, Sq, -1)
+
+    def g_body(h, gp):
+        sk, sv = [], []
+        if "self" in gp:
+            n_s = jax.tree.leaves(gp["self"])[0].shape[0]
+            for j in range(n_s):
+                sp = jax.tree.map(lambda a: a[j], gp["self"])
+                h, k, v = run_self(sp, h)
+                h = h + L.mlp(sp["mlp"],
+                              L.rmsnorm(h, sp["ln2"], cfg.norm_eps), cfg)
+                sk.append(k); sv.append(v)
+        cp = gp["cross"]
+        h, k, v = run_self(cp, h)
+        sk.append(k); sv.append(v)
+        xk = jnp.einsum("bsd,dhk->bshk", memory, cp["cross"]["wk"])
+        xv = jnp.einsum("bsd,dhk->bshk", memory, cp["cross"]["wv"])
+        Sm = xk.shape[1]
+        h = h + L.cross_attention(cp["cross"],
+                                  L.rmsnorm(h, cp["ln_x"], cfg.norm_eps),
+                                  memory, cfg)
+        h = h + L.mlp(cp["mlp"], L.rmsnorm(h, cp["ln2"], cfg.norm_eps), cfg)
+        return h, (jnp.stack(sk), jnp.stack(sv),
+                   xk.reshape(B, Sm, -1), xv.reshape(B, Sm, -1))
+
+    x, (gk, gv, xk, xv) = jax.lax.scan(g_body, x, params["groups"])
+    ck = gk.reshape(-1, *gk.shape[2:])
+    cv = gv.reshape(-1, *gv.shape[2:])
+    x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = L.lm_logits(params["embed"], x[:, -1:])[:, 0]
+    return logits, {"self": {"k": ck, "v": cv}, "cross_k": xk, "cross_v": xv}
+
+
+def vlm_decode_step(params: Params, token: jax.Array, cache: Params,
+                    pos: jax.Array, cfg: ModelConfig
+                    ) -> Tuple[jax.Array, Params]:
+    x = L.embed(params["embed"], token[:, None])
+    n_groups = cfg.n_layers // cfg.cross_attn_every
+    per_group = cfg.cross_attn_every
+    ck = cache["self"]["k"].reshape(n_groups, per_group,
+                                    *cache["self"]["k"].shape[1:])
+    cv = cache["self"]["v"].reshape(n_groups, per_group,
+                                    *cache["self"]["v"].shape[1:])
+
+    def g_body(h, xs):
+        gp, g_ck, g_cv, xk, xv = xs
+        nk, nv = [], []
+        j = 0
+        if "self" in gp:
+            n_s = jax.tree.leaves(gp["self"])[0].shape[0]
+            for jj in range(n_s):
+                sp = jax.tree.map(lambda a: a[jj], gp["self"])
+                h, k1, v1 = dense_block_decode(sp, h, g_ck[j], g_cv[j],
+                                               pos, cfg)
+                nk.append(k1); nv.append(v1)
+                j += 1
+        cp = gp["cross"]
+        a, k1, v1 = L.attention_decode(
+            cp["attn"], L.rmsnorm(h, cp["ln1"], cfg.norm_eps),
+            g_ck[j], g_cv[j], pos, cfg)
+        h = h + a
+        nk.append(k1); nv.append(v1)
+        h = h + _cross_decode(cp["cross"],
+                              L.rmsnorm(h, cp["ln_x"], cfg.norm_eps),
+                              xk, xv, cfg)
+        h = h + L.mlp(cp["mlp"], L.rmsnorm(h, cp["ln2"], cfg.norm_eps), cfg)
+        return h, (jnp.stack(nk), jnp.stack(nv))
+
+    x, (gk, gv) = jax.lax.scan(
+        g_body, x, (params["groups"], ck, cv,
+                    cache["cross_k"], cache["cross_v"]))
+    x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = L.lm_logits(params["embed"], x)[:, 0]
+    return logits, {"self": {"k": gk.reshape(-1, *gk.shape[2:]),
+                             "v": gv.reshape(-1, *gv.shape[2:])},
+                    "cross_k": cache["cross_k"],
+                    "cross_v": cache["cross_v"]}

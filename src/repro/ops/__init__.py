@@ -1,0 +1,11 @@
+"""TPU-native bulk bitwise operations — the deployable fast path."""
+from repro.ops.bitwise import (bitwise_and, bitwise_or, bitwise_xor,
+                               bitwise_not, bitwise_nand, bitwise_nor,
+                               bitwise_xnor, majority3, andnot)
+from repro.ops.popcount import popcount_words, popcount_u32
+from repro.ops.transpose import to_vertical, from_vertical
+from repro.ops.predicate import VerticalColumn, scan_count
+from repro.ops.setops import BitSet
+from repro.ops.masked_init import masked_init, masked_fill_constant, field_mask
+from repro.ops.bloom import BloomFilter
+from repro.ops.crypto import xor_encrypt, xor_decrypt, keystream

@@ -1,0 +1,72 @@
+"""Bulk bitwise operations on packed words — the deployable fast path.
+
+Dispatches to the fused Pallas kernel for large row-shaped operands and falls
+back to jnp elementwise ops otherwise. Semantics are identical to running the
+paper's AAP programs through `core.engine` (asserted by tests); latency/energy
+accounting comes from `core.timing` / `core.energy`.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+# Threshold below which kernel dispatch isn't worth it (and interpret-mode
+# Pallas on CPU is slow for tests anyway).
+_KERNEL_MIN_WORDS = 1 << 14
+
+
+def _use_kernel(x: jax.Array, force: Optional[bool]) -> bool:
+    if force is not None:
+        return force
+    return x.ndim == 2 and x.size >= _KERNEL_MIN_WORDS
+
+
+def _dispatch(op: str, *args: jax.Array, use_kernel: Optional[bool] = None):
+    args = tuple(jnp.asarray(a, jnp.uint32) for a in args)
+    if _use_kernel(args[0], use_kernel):
+        from repro.kernels import ops as kops
+
+        return kops.bitwise(op, *args)
+    from repro.kernels import ref
+
+    return ref.bitwise(op, *args)
+
+
+def bitwise_and(a, b, **kw):
+    return _dispatch("and", a, b, **kw)
+
+
+def bitwise_or(a, b, **kw):
+    return _dispatch("or", a, b, **kw)
+
+
+def bitwise_xor(a, b, **kw):
+    return _dispatch("xor", a, b, **kw)
+
+
+def bitwise_not(a, **kw):
+    return _dispatch("not", a, **kw)
+
+
+def bitwise_nand(a, b, **kw):
+    return _dispatch("nand", a, b, **kw)
+
+
+def bitwise_nor(a, b, **kw):
+    return _dispatch("nor", a, b, **kw)
+
+
+def bitwise_xnor(a, b, **kw):
+    return _dispatch("xnor", a, b, **kw)
+
+
+def majority3(a, b, c, **kw):
+    """Triple-row activation: the paper's native primitive."""
+    return _dispatch("maj3", a, b, c, **kw)
+
+
+def andnot(a, b, **kw):
+    """a & ~b (bitmap difference; one fused pass)."""
+    return _dispatch("andnot", a, b, **kw)

@@ -1,0 +1,65 @@
+"""Bloom filters on packed bitvectors (paper §8.4.4 approximate statistics).
+
+Batch insert/query are scatter/gather over one packed row; merging filters
+(the expensive distributed aggregation) is a bulk OR — a Buddy op. Used by
+the data pipeline for streaming dedup statistics.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.bitplane import BitVector, n_words
+from repro.ops.bitwise import bitwise_or
+
+
+def _hashes(keys: jax.Array, k: int, m_bits: int) -> jax.Array:
+    """k hash positions per key: double hashing h1 + i*h2 (Kirsch-Mitzenmacher)."""
+    keys = jnp.asarray(keys, jnp.uint32)
+    h1 = keys * jnp.uint32(0x9E3779B1)
+    h1 = (h1 ^ (h1 >> 15)) * jnp.uint32(0x85EBCA77)
+    h1 = h1 ^ (h1 >> 13)
+    h2 = keys * jnp.uint32(0xC2B2AE3D)
+    h2 = (h2 ^ (h2 >> 16)) | jnp.uint32(1)  # odd
+    i = jnp.arange(k, dtype=jnp.uint32)
+    return ((h1[:, None] + i[None, :] * h2[:, None]) % jnp.uint32(m_bits)
+            ).astype(jnp.int32)
+
+
+@dataclasses.dataclass
+class BloomFilter:
+    bits: BitVector
+    k: int
+
+    @classmethod
+    def create(cls, m_bits: int, k: int = 4) -> "BloomFilter":
+        return cls(BitVector.zeros(m_bits), k)
+
+    def insert(self, keys: jax.Array) -> "BloomFilter":
+        pos = _hashes(keys, self.k, self.bits.n_bits).reshape(-1)
+        flat = jnp.zeros((self.bits.n_bits,), jnp.uint8).at[pos].set(1)
+        from repro.core.bitplane import pack_bits
+
+        new = bitwise_or(self.bits.words, pack_bits(flat))
+        return BloomFilter(BitVector(new, self.bits.n_bits), self.k)
+
+    def query(self, keys: jax.Array) -> jax.Array:
+        """Possibly-present (True) vs definitely-absent (False) per key."""
+        pos = _hashes(keys, self.k, self.bits.n_bits)
+        w = self.bits.words[pos // 32]
+        present = (w >> (pos % 32).astype(jnp.uint32)) & 1
+        return present.all(axis=1)
+
+    def merge(self, *others: "BloomFilter") -> "BloomFilter":
+        """Union of filters — bulk OR (the Buddy-accelerated path)."""
+        words = self.bits.words
+        for o in others:
+            assert o.k == self.k and o.bits.n_bits == self.bits.n_bits
+            words = bitwise_or(words, o.bits.words)
+        return BloomFilter(BitVector(words, self.bits.n_bits), self.k)
+
+    def fill_ratio(self) -> jax.Array:
+        return self.bits.popcount() / self.bits.n_bits

@@ -1,0 +1,39 @@
+"""XOR-based encryption primitives (paper §8.4.2).
+
+One-time-pad / stream-cipher XOR is the canonical bandwidth-bound bitwise
+workload: ciphertext = plaintext ^ keystream, one fused pass. The keystream
+generator is a counter-mode xorshift PRF (not cryptographically strong — it
+demonstrates the data path the paper targets, where the XOR of multi-KB
+blocks dominates, e.g. optical XOR encryption [26] and visual crypto [66]).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.ops.bitwise import bitwise_xor
+
+
+def keystream(key: jax.Array, shape, dtype=jnp.uint32) -> jax.Array:
+    """Counter-mode xorshift* stream: words[i] = mix(key, i)."""
+    n = 1
+    for s in shape:
+        n *= s
+    ctr = jnp.arange(n, dtype=jnp.uint32)
+    k = jnp.asarray(key, jnp.uint32)
+    x = ctr + k * jnp.uint32(0x9E3779B9)
+    x ^= x >> 16
+    x *= jnp.uint32(0x21F0AAAD)
+    x ^= x >> 15
+    x *= jnp.uint32(0x735A2D97)
+    x ^= x >> 15
+    return x.reshape(shape).astype(dtype)
+
+
+def xor_encrypt(plaintext: jax.Array, key: jax.Array) -> jax.Array:
+    """plaintext: packed uint32 words; involution (decrypt == encrypt)."""
+    ks = keystream(key, plaintext.shape)
+    return bitwise_xor(plaintext, ks)
+
+
+xor_decrypt = xor_encrypt

@@ -1,0 +1,86 @@
+"""Bit-parallel DNA sequence matching (paper §8.4.3).
+
+Bases pack 2 bits/base into two parallel bit-planes (lo, hi). Exact-match
+read mapping a la bit-parallel filters (Shifted-Hamming-Distance family
+[15, 71]): a read of length L against a genome of length G evaluates
+
+    match[i] = AND_j  eq_j[i + j],   eq_j = (genome base == read[j])
+
+where each eq_j is one or two bulk bitwise ops over the whole genome plane
+and the AND-accumulation over shifted planes is L more — exactly the
+row-wide workload Buddy accelerates. Mismatch tolerance (<= t) accumulates
+eq-counts with the carry-save majority kernel instead of the AND chain.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.bitplane import BitVector, pack_bits
+from repro.kernels import ref
+
+# A=0 C=1 G=2 T=3
+_BASE = {"A": 0, "C": 1, "G": 2, "T": 3}
+
+
+def encode(seq) -> Tuple[jax.Array, jax.Array, int]:
+    """Sequence (str or int array) -> (lo_plane, hi_plane, n) packed."""
+    if isinstance(seq, str):
+        vals = jnp.asarray([_BASE[c] for c in seq], jnp.uint32)
+    else:
+        vals = jnp.asarray(seq, jnp.uint32)
+    lo = pack_bits((vals & 1).astype(bool))
+    hi = pack_bits(((vals >> 1) & 1).astype(bool))
+    return lo, hi, int(vals.shape[0])
+
+
+def shift_down(words: jax.Array, k: int) -> jax.Array:
+    """Packed funnel shift: out bit i = in bit (i + k)  (k >= 0)."""
+    nw = words.shape[-1]
+    wshift, bshift = divmod(k, 32)
+    w = jnp.roll(words, -wshift, axis=-1)
+    if wshift:
+        w = w.at[..., nw - wshift:].set(0)
+    if bshift:
+        hi = jnp.concatenate(
+            [w[..., 1:], jnp.zeros_like(w[..., :1])], axis=-1)
+        w = (w >> jnp.uint32(bshift)) | (hi << jnp.uint32(32 - bshift))
+    return w
+
+
+def base_equality(lo: jax.Array, hi: jax.Array, base: int) -> jax.Array:
+    """Packed eq-plane: genome[i] == base (2 bulk ops per plane)."""
+    l = lo if (base & 1) else ~lo
+    h = hi if (base >> 1) & 1 else ~hi
+    return l & h
+
+
+def find_matches(genome, read) -> BitVector:
+    """Exact-match start positions of `read` in `genome` (packed)."""
+    g_lo, g_hi, n = encode(genome)
+    read_vals = [_BASE[c] for c in read] if isinstance(read, str) else list(read)
+    L = len(read_vals)
+    acc = jnp.full_like(g_lo, 0xFFFFFFFF)
+    for j, b in enumerate(read_vals):
+        eq = base_equality(g_lo, g_hi, int(b))
+        acc = acc & shift_down(eq, j)
+    valid = n - L + 1
+    bv = BitVector(acc, max(valid, 0))
+    return BitVector(acc & bv._mask(), max(valid, 0))
+
+
+def find_matches_with_mismatches(genome, read, max_mismatch: int) -> BitVector:
+    """Start positions with <= max_mismatch mismatches: count eq-planes with
+    the generalized-TRA majority (threshold = L - max_mismatch)."""
+    g_lo, g_hi, n = encode(genome)
+    read_vals = [_BASE[c] for c in read] if isinstance(read, str) else list(read)
+    L = len(read_vals)
+    planes = jnp.stack([
+        shift_down(base_equality(g_lo, g_hi, int(b)), j)
+        for j, b in enumerate(read_vals)])
+    acc = ref.majority_k(planes, threshold=L - max_mismatch)
+    valid = n - L + 1
+    bv = BitVector(acc, max(valid, 0))
+    return BitVector(acc & bv._mask(), max(valid, 0))

@@ -1,0 +1,27 @@
+"""Population count on packed uint32 words (the CPU-side `bitcount` the
+paper keeps on the processor — here TPU-resident so results never leave HBM).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_M1 = jnp.uint32(0x55555555)
+_M2 = jnp.uint32(0x33333333)
+_M4 = jnp.uint32(0x0F0F0F0F)
+_H01 = jnp.uint32(0x01010101)
+
+
+def popcount_u32(w: jax.Array) -> jax.Array:
+    """SWAR popcount per word (Hacker's Delight 5-2). Returns uint32."""
+    w = w.astype(jnp.uint32)
+    w = w - ((w >> 1) & _M1)
+    w = (w & _M2) + ((w >> 2) & _M2)
+    w = (w + (w >> 4)) & _M4
+    return (w * _H01) >> 24
+
+
+def popcount_words(words: jax.Array, axis=None) -> jax.Array:
+    """Total set bits (sum over `axis`, default all)."""
+    per_word = popcount_u32(words).astype(jnp.int32)
+    return per_word.sum() if axis is None else per_word.sum(axis=axis)

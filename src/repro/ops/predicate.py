@@ -1,0 +1,64 @@
+"""BitWeaving-style predicate evaluation over integer columns (paper §8.2).
+
+`scan(column, lo, hi)` evaluates lo <= v <= hi for every value and returns a
+packed result bitvector — the core of the paper's database-scan workload.
+Columns are stored/cached in the vertical layout so repeated scans skip the
+transpose.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.bitplane import BitVector
+from repro.ops.transpose import to_vertical
+
+_KERNEL_MIN = 1 << 16
+
+
+@dataclasses.dataclass
+class VerticalColumn:
+    """An integer column in BitWeaving-V layout."""
+
+    planes: jax.Array   # (n_bits, n//32) uint32
+    n_bits: int
+    n_values: int
+
+    @classmethod
+    def encode(cls, values: jax.Array, n_bits: int) -> "VerticalColumn":
+        values = jnp.asarray(values, jnp.uint32)
+        n = values.shape[0]
+        pad = (-n) % 32
+        if pad:
+            # pad with sentinel > any real value so range predicates exclude it
+            values = jnp.concatenate(
+                [values, jnp.full((pad,), (1 << n_bits) - 1, jnp.uint32)])
+        return cls(to_vertical(values, n_bits), n_bits, n)
+
+    def scan(self, lo: int, hi: int, use_kernel: Optional[bool] = None
+             ) -> BitVector:
+        """Packed bitvector of lo <= v <= hi."""
+        big = (self.planes.size >= _KERNEL_MIN // 32 if use_kernel is None
+               else use_kernel)
+        if big:
+            from repro.kernels import ops as kops
+
+            words = kops.bitweaving_scan(self.planes, int(lo), int(hi),
+                                         self.n_bits)
+        else:
+            from repro.kernels import ref
+
+            words = ref.bitweaving_scan(self.planes, int(lo), int(hi),
+                                        self.n_bits)
+        bv = BitVector(words, self.n_values)
+        # mask tail padding
+        return BitVector(words & bv._mask(), self.n_values)
+
+
+def scan_count(values: jax.Array, n_bits: int, lo: int, hi: int) -> jax.Array:
+    """select count(*) from T where lo <= val <= hi (one-shot)."""
+    col = VerticalColumn.encode(values, n_bits)
+    return col.scan(lo, hi).popcount()

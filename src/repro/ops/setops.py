@@ -1,0 +1,67 @@
+"""Bitvector set data structure (paper §8.3): constant-time insert/lookup,
+bulk union/intersection/difference as row-wide bitwise ops."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.bitplane import BitVector, n_words
+
+
+@dataclasses.dataclass
+class BitSet:
+    """Set over domain [0, domain) as a packed bitvector."""
+
+    bits: BitVector
+
+    @classmethod
+    def empty(cls, domain: int) -> "BitSet":
+        return cls(BitVector.zeros(domain))
+
+    @classmethod
+    def from_elements(cls, elems: jax.Array, domain: int) -> "BitSet":
+        """Duplicate-safe: scatter 1s at bit granularity, then pack."""
+        elems = jnp.asarray(elems, jnp.int32)
+        bits = jnp.zeros((domain,), jnp.uint8).at[elems].set(1)
+        from repro.core.bitplane import pack_bits
+
+        return cls(BitVector(pack_bits(bits), domain))
+
+    @property
+    def domain(self) -> int:
+        return self.bits.n_bits
+
+    def insert(self, e) -> "BitSet":
+        w = self.bits.words.at[e // 32].set(
+            self.bits.words[e // 32] | (jnp.uint32(1) << (e % 32)))
+        return BitSet(BitVector(w, self.domain))
+
+    def contains(self, e) -> jax.Array:
+        return (self.bits.words[e // 32] >> (e % 32)) & 1
+
+    def union(self, *others: "BitSet") -> "BitSet":
+        out = self.bits
+        for o in others:
+            out = out | o.bits
+        return BitSet(out)
+
+    def intersection(self, *others: "BitSet") -> "BitSet":
+        out = self.bits
+        for o in others:
+            out = out & o.bits
+        return BitSet(out)
+
+    def difference(self, *others: "BitSet") -> "BitSet":
+        out = self.bits.words
+        for o in others:
+            out = out & ~o.bits.words
+        return BitSet(BitVector(out, self.domain))
+
+    def cardinality(self) -> jax.Array:
+        return self.bits.popcount()
+
+    def to_elements(self) -> jax.Array:
+        return jnp.nonzero(self.bits.to_bits())[0]

@@ -1,0 +1,32 @@
+"""Layout conversion between horizontal integers and BitWeaving-V planes."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_KERNEL_MIN_VALUES = 1 << 16
+
+
+def to_vertical(values: jax.Array, n_bits: int, use_kernel=None) -> jax.Array:
+    """(n,) integer column -> (n_bits, n//32) vertical bit planes (LSB first)."""
+    values = jnp.asarray(values, jnp.uint32)
+    big = values.size >= _KERNEL_MIN_VALUES if use_kernel is None else use_kernel
+    if big:
+        from repro.kernels import ops as kops
+
+        return kops.bit_transpose(values, n_bits)
+    from repro.kernels import ref
+
+    return ref.bit_transpose(values, n_bits)
+
+
+def from_vertical(planes: jax.Array, n_bits: int, use_kernel=None) -> jax.Array:
+    planes = jnp.asarray(planes, jnp.uint32)
+    big = planes.size >= _KERNEL_MIN_VALUES // 32 if use_kernel is None else use_kernel
+    if big:
+        from repro.kernels import ops as kops
+
+        return kops.bit_untranspose(planes, n_bits)
+    from repro.kernels import ref
+
+    return ref.bit_untranspose(planes, n_bits)

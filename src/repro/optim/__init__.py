@@ -1,0 +1,5 @@
+from repro.optim.optimizers import (Optimizer, adafactor, adamw,
+                                    clip_by_global_norm, sgd)
+from repro.optim.schedules import constant, warmup_cosine
+from repro.optim.signum import (majority_allreduce, pack_tree, signum,
+                                unpack_tree)

@@ -1,0 +1,149 @@
+"""Minimal optax-style optimizers (optax is not vendored in this container).
+
+An `Optimizer` is (init, update) where update returns (new_params, new_state).
+State trees are sharded like the params they mirror (the launcher derives
+their shardings from the param logical specs), so AdamW here is ZeRO-style:
+with FSDP-sharded params the moments are automatically FSDP-sharded too.
+
+`adafactor` provides factored second moments (row/col statistics) for the
+largest assigned architectures (kimi-k2 1T, llama4-maverick 400B), where
+full Adam moments cannot fit the single-pod HBM budget — see DESIGN.md.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable        # params -> state
+    update: Callable      # (grads, state, params, step) -> (params, state)
+    name: str = "opt"
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree.leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                      for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: (g * scale).astype(g.dtype), grads), gn
+
+
+def sgd(lr_fn, momentum: float = 0.9, weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        return {"mu": jax.tree.map(lambda p: jnp.zeros_like(p), params)}
+
+    def update(grads, state, params, step):
+        lr = lr_fn(step)
+        mu = jax.tree.map(lambda m, g: momentum * m + g.astype(m.dtype),
+                          state["mu"], grads)
+        params = jax.tree.map(
+            lambda p, m: (p - lr * (m + weight_decay * p.astype(m.dtype))
+                          .astype(p.dtype)).astype(p.dtype), params, mu)
+        return params, {"mu": mu}
+
+    return Optimizer(init, update, "sgd")
+
+
+def adamw(lr_fn, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.1) -> Optimizer:
+    def init(params):
+        z = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {"m": jax.tree.map(z, params), "v": jax.tree.map(z, params)}
+
+    def update(grads, state, params, step):
+        lr = lr_fn(step)
+        t = step.astype(jnp.float32) + 1.0
+        c1 = 1.0 - b1 ** t
+        c2 = 1.0 - b2 ** t
+
+        def upd(p, g, m, v):
+            g = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * g * g
+            u = (m / c1) / (jnp.sqrt(v / c2) + eps)
+            p32 = p.astype(jnp.float32)
+            return (p32 - lr * (u + weight_decay * p32)).astype(p.dtype), m, v
+
+        out = jax.tree.map(upd, params, grads, state["m"], state["v"])
+        params = jax.tree.map(lambda o: o[0], out,
+                              is_leaf=lambda x: isinstance(x, tuple))
+        m = jax.tree.map(lambda o: o[1], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+        v = jax.tree.map(lambda o: o[2], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+        return params, {"m": m, "v": v}
+
+    return Optimizer(init, update, "adamw")
+
+
+def adafactor(lr_fn, decay: float = 0.8, eps: float = 1e-30,
+              clip_threshold: float = 1.0, weight_decay: float = 0.0
+              ) -> Optimizer:
+    """Factored second moments: O(r+c) state for matrices, O(n) for vectors.
+    No first moment -> 1/6 the optimizer bytes of Adam(f32)."""
+
+    def _factored(p):
+        return p.ndim >= 2
+
+    def init(params):
+        def one(p):
+            if _factored(p):
+                r = jnp.zeros(p.shape[:-1], jnp.float32)
+                c = jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+                return {"r": r, "c": c}
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+        return {"f": jax.tree.map(one, params)}
+
+    def update(grads, state, params, step):
+        lr = lr_fn(step)
+        t = step.astype(jnp.float32) + 1.0
+        beta = 1.0 - t ** (-decay)
+
+        def upd(p, g, s):
+            g = g.astype(jnp.float32)
+            g2 = g * g + eps
+            if _factored(p):
+                r = beta * s["r"] + (1 - beta) * g2.mean(axis=-1)
+                c = beta * s["c"] + (1 - beta) * g2.mean(axis=-2)
+                denom = (r[..., None] * c[..., None, :]
+                         / jnp.maximum(r.mean(axis=-1)[..., None, None], eps))
+                u = g * jax.lax.rsqrt(denom + eps)
+                ns = {"r": r, "c": c}
+            else:
+                v = beta * s["v"] + (1 - beta) * g2
+                u = g * jax.lax.rsqrt(v + eps)
+                ns = {"v": v}
+            # update clipping (RMS <= clip_threshold)
+            rms = jnp.sqrt(jnp.mean(u * u))
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            p32 = p.astype(jnp.float32)
+            return (p32 - lr * (u + weight_decay * p32)).astype(p.dtype), ns
+
+        out = jax.tree.map(upd, params, grads, state["f"],
+                           is_leaf=lambda x: isinstance(x, dict) and
+                           set(x) <= {"r", "c", "v"})
+        params = jax.tree.map(lambda o: o[0], out,
+                              is_leaf=lambda x: isinstance(x, tuple))
+        f = jax.tree.map(lambda o: o[1], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+        return params, {"f": f}
+
+    return Optimizer(init, update, "adafactor")
+
+
+def get_optimizer(name: str, lr_fn, **kw) -> Optimizer:
+    if name == "adamw":
+        return adamw(lr_fn, **kw)
+    if name == "adafactor":
+        return adafactor(lr_fn, **kw)
+    if name == "sgd":
+        return sgd(lr_fn, **kw)
+    if name == "signum":
+        from repro.optim.signum import signum
+        return signum(lr_fn, **kw)
+    raise ValueError(name)

@@ -1,0 +1,149 @@
+"""Majority-vote 1-bit signSGD ("signum") — the paper's TRA primitive lifted
+to the data-parallel collective.
+
+Buddy-RAM's triple-row activation computes bitwise MAJ over rows sharing a
+sense amplifier. SignSGD with majority vote [Bernstein et al., 2018]
+aggregates worker gradients as the bitwise majority of their sign planes —
+the *same reduction operator*, applied across the mesh "data" axis instead of
+across DRAM rows. Our implementation:
+
+  1. per-worker: u = grad + error_feedback;  s = packed sign bits (32:1,
+     `kernels/signpack.py`);  scale = pmean(mean|u|)  (one scalar/tensor)
+  2. bandwidth-optimal compressed all-reduce (`majority_allreduce`):
+     all_to_all the packed planes (each worker owns 1/D of the words),
+     majority-of-D with the CSA bit-plane kernel (`kernels/majority.py` —
+     digital TRA), all_gather the result. Bytes on the wire per chip:
+     ~N/8 + N/8 vs 4N for an f32 ring all-reduce -> ~16x collective-byte cut.
+  3. update: p -= lr * (maj_sign * scale + wd * p); error feedback keeps the
+     quantization residual local: e = u - scale * sign(u).
+
+Used as the beyond-paper §Perf lever on the collective-bound hillclimb cell,
+inside a `jax.shard_map(axis_names={"data"})` region (model axis stays auto).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops as kops
+from repro.kernels import ref as kref
+from repro.optim.optimizers import Optimizer
+
+# --------------------------------------------------------------------------
+# pack/unpack a pytree into 2-D packed sign planes
+# --------------------------------------------------------------------------
+
+
+def _pad32(n: int) -> int:
+    return (n + 31) // 32 * 32
+
+
+def pack_tree(tree, use_kernel: bool = True):
+    """Tree of float arrays -> (packed (1, W) uint32, meta for unpack)."""
+    leaves, treedef = jax.tree.flatten(tree)
+    flat = [l.reshape(-1).astype(jnp.float32) for l in leaves]
+    sizes = [f.shape[0] for f in flat]
+    cat = jnp.concatenate(flat) if len(flat) > 1 else flat[0]
+    n = cat.shape[0]
+    npad = _pad32(n)
+    if npad != n:
+        cat = jnp.pad(cat, (0, npad - n))
+    packer = kops.pack_signs if use_kernel else kref.pack_signs
+    packed = packer(cat.reshape(1, npad))
+    meta = (treedef, sizes, [l.shape for l in leaves],
+            [l.dtype for l in leaves], n)
+    return packed, meta
+
+
+def unpack_tree(packed, meta, use_kernel: bool = True):
+    """(1, W) packed signs -> tree of {-1,+1} arrays shaped like original."""
+    treedef, sizes, shapes, dtypes, n = meta
+    unpacker = kops.unpack_signs if use_kernel else kref.unpack_signs
+    flat = unpacker(packed).reshape(-1)[:n]
+    out, off = [], 0
+    for sz, shp, dt in zip(sizes, shapes, dtypes):
+        out.append(flat[off:off + sz].reshape(shp).astype(dt))
+        off += sz
+    return jax.tree.unflatten(treedef, out)
+
+
+# --------------------------------------------------------------------------
+# compressed majority all-reduce (inside shard_map over `axis_name`)
+# --------------------------------------------------------------------------
+
+def majority_allreduce(packed: jax.Array, axis_name: str,
+                       use_kernel: bool = True) -> jax.Array:
+    """Bitwise-majority all-reduce of packed sign planes.
+
+    packed: (1, W) uint32 per worker. Phase 1: all_to_all so worker d owns
+    words [d*W/D:(d+1)*W/D] from every worker. Phase 2: majority-of-D via the
+    CSA bit-plane kernel (digital TRA). Phase 3: all_gather the reduced shard.
+    """
+    D = jax.lax.psum(1, axis_name)
+    W = packed.shape[-1]
+    Wp = (W + D - 1) // D * D
+    if Wp != W:
+        packed = jnp.pad(packed, ((0, 0), (0, Wp - W)))
+    shards = packed.reshape(D, Wp // D)
+    # worker d receives everyone's shard d: (D, Wp//D)
+    recv = jax.lax.all_to_all(shards[:, None, :], axis_name,
+                              split_axis=0, concat_axis=0)[:, 0, :]
+    # recv elements arrive as (D, Wp//D): axis 0 = source worker
+    maj_fn = kops.majority if use_kernel else kref.majority_k
+    mine = maj_fn(recv[:, None, :])            # (1, Wp//D) majority-of-D
+    full = jax.lax.all_gather(mine[0], axis_name, tiled=True)  # (Wp,)
+    return full[None, :W]
+
+
+# --------------------------------------------------------------------------
+# the optimizer
+# --------------------------------------------------------------------------
+
+def signum(lr_fn, momentum: float = 0.9, weight_decay: float = 0.0,
+           axis_name: Optional[str] = None, use_kernel: bool = True,
+           error_feedback: bool = True) -> Optimizer:
+    """Majority-vote signSGD. If axis_name is None the majority degenerates
+    to a local sign step (single worker); with axis_name set it must run
+    inside shard_map(axis_names={axis_name, ...})."""
+
+    def init(params):
+        z = lambda p: jnp.zeros(p.shape, jnp.float32)
+        st = {"mu": jax.tree.map(z, params)}
+        if error_feedback:
+            st["err"] = jax.tree.map(z, params)
+        return st
+
+    def update(grads, state, params, step):
+        lr = lr_fn(step)
+        g32 = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        if error_feedback:
+            u = jax.tree.map(lambda g, e: g + e, g32, state["err"])
+        else:
+            u = g32
+        scales = jax.tree.map(lambda x: jnp.mean(jnp.abs(x)), u)
+        if axis_name is not None:
+            scales = jax.tree.map(
+                lambda s: jax.lax.pmean(s, axis_name), scales)
+            packed, meta = pack_tree(u, use_kernel)
+            packed = majority_allreduce(packed, axis_name, use_kernel)
+            signs = unpack_tree(packed, meta, use_kernel)
+        else:
+            signs = jax.tree.map(
+                lambda x: jnp.where(x >= 0, 1.0, -1.0), u)
+        if error_feedback:
+            err = jax.tree.map(lambda x, s, sc: x - sc * s, u, signs, scales)
+            state = dict(state, err=err)
+        mu = jax.tree.map(lambda m, s, sc: momentum * m + sc * s,
+                          state["mu"], signs, scales)
+        params = jax.tree.map(
+            lambda p, m: (p.astype(jnp.float32) - lr *
+                          (m + weight_decay * p.astype(jnp.float32))
+                          ).astype(p.dtype), params, mu)
+        return params, dict(state, mu=mu)
+
+    return Optimizer(init, update, "signum")

@@ -1,0 +1,2 @@
+from repro.serve.kvcache import extend_cache
+from repro.serve.step import generate, make_serve_step

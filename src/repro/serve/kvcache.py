@@ -1,0 +1,28 @@
+"""KV/SSM cache utilities for serving."""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+
+def extend_cache(cache: Dict[str, Any], extra: int) -> Dict[str, Any]:
+    """Pad the sequence axis of attention KV sheets by `extra` slots so a
+    prefill-produced cache (length S) can absorb `extra` decoded tokens.
+    SSM state/conv caches and cross-attention caches are fixed-size and pass
+    through untouched."""
+    out: Dict[str, Any] = {}
+    for k, v in cache.items():
+        if isinstance(v, dict):
+            out[k] = extend_cache(v, extra)
+        elif k in ("k", "v"):
+            # (L, B, S, KV*hd): pad axis 2
+            out[k] = jnp.pad(v, [(0, 0), (0, 0), (0, extra), (0, 0)])
+        else:
+            out[k] = v
+    return out
+
+
+def cache_bytes(cache) -> int:
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(cache))

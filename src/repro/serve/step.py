@@ -1,0 +1,56 @@
+"""Serving: jit'd decode step + batched greedy/temperature generation loop."""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.serve.kvcache import extend_cache
+
+
+def make_serve_step(bundle) -> Callable:
+    """serve_step(params, token, cache, pos) -> (logits, cache). This is the
+    function the decode_* dry-run cells lower."""
+
+    def serve_step(params, token, cache, pos):
+        return bundle.decode_step(params, token, cache, pos)
+
+    return serve_step
+
+
+def generate(bundle, params, batch: Dict[str, Any], max_new: int,
+             temperature: float = 0.0, key: Optional[jax.Array] = None
+             ) -> jax.Array:
+    """Prefill + scan decode loop. batch holds 'tokens' (B, S) prompts (plus
+    frontend inputs where applicable). Returns (B, max_new) generated ids."""
+    S = batch["tokens"].shape[1]
+    logits, cache = jax.jit(bundle.prefill)(params, batch)
+    cache = extend_cache(cache, max_new)
+    if key is None:
+        key = jax.random.PRNGKey(0)
+
+    def pick(logits, k):
+        if temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return jax.random.categorical(k, logits / temperature, axis=-1
+                                      ).astype(jnp.int32)
+
+    tok0 = pick(logits, key)
+
+    @jax.jit
+    def loop(params, tok0, cache, key):
+        def body(carry, i):
+            tok, cache, key = carry
+            key, sub = jax.random.split(key)
+            logits, cache = bundle.decode_step(params, tok, cache, S + i)
+            nxt = pick(logits, sub)
+            return (nxt, cache, key), tok
+
+        (_, cache, _), toks = jax.lax.scan(
+            body, (tok0, cache, key), jnp.arange(max_new))
+        return toks
+
+    toks = loop(params, tok0, cache, key)      # (max_new, B)
+    return toks.T

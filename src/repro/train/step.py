@@ -1,0 +1,154 @@
+"""Training step: loss + grad (+ microbatch accumulation) + optimizer update.
+
+Two variants:
+
+* `make_train_step` — standard pjit path. Gradients are implicitly
+  reduce-scattered/all-reduced by GSPMD according to the param shardings
+  (FSDP: grads arrive sharded like params). Microbatch gradient accumulation
+  runs as a `lax.scan` so the dispatched MoE buffers and attention
+  activations are sized by the microbatch, not the global batch.
+
+* `make_train_step_compressed` — the beyond-paper variant: the whole step
+  runs inside `jax.shard_map(axis_names=dp_axes)` with params replicated
+  across the data axis, and gradient exchange is the 1-bit majority-vote
+  all-reduce (`optim/signum.py`) — the Buddy TRA primitive as the collective
+  reduction operator.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.dist.sharding import (axis_rules, current_mesh, current_rules,
+                                 match_vma, strip_axes)
+from repro.optim.optimizers import Optimizer, clip_by_global_norm
+
+
+def _accum_reshape(batch, accum: int):
+    def r(x):
+        assert x.shape[0] % accum == 0, (x.shape, accum)
+        return x.reshape(accum, x.shape[0] // accum, *x.shape[1:])
+    return jax.tree.map(r, batch)
+
+
+def make_train_step(bundle, optimizer: Optimizer, grad_accum: int = 1,
+                    clip: float = 1.0) -> Callable:
+    """Returns train_step(params, opt_state, step, batch) ->
+    (params, opt_state, metrics)."""
+
+    def loss_fn(p, mb):
+        loss, metrics = bundle.loss(p, mb)
+        return loss, metrics
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(params, opt_state, step, batch):
+        if grad_accum == 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+        else:
+            mbs = _accum_reshape(batch, grad_accum)
+
+            def body(carry, mb):
+                acc, lsum = carry
+                (l, _), g = grad_fn(params, mb)
+                acc = jax.tree.map(lambda a, gg: a + gg.astype(a.dtype),
+                                   acc, g)
+                return (acc, lsum + l), None
+
+            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                 params)
+            (grads, lsum), _ = jax.lax.scan(body, (zeros, 0.0), mbs)
+            grads = jax.tree.map(lambda g: g / grad_accum, grads)
+            loss = lsum / grad_accum
+            metrics = {}
+        grads, gnorm = clip_by_global_norm(grads, clip)
+        params, opt_state = optimizer.update(grads, opt_state, params, step)
+        out = {"loss": loss, "grad_norm": gnorm}
+        out.update({k: v for k, v in metrics.items()})
+        return params, opt_state, out
+
+    return train_step
+
+
+def make_train_step_compressed(bundle, optimizer: Optimizer, mesh: Mesh,
+                               dp_axes: Tuple[str, ...] = ("data",),
+                               batch_logical: Optional[Dict] = None,
+                               grad_accum: int = 1, clip: float = 1.0
+                               ) -> Callable:
+    """signum/majority-vote step inside shard_map over the DP axes.
+
+    Params must be replicated across dp_axes (DP_RULES resolution — the
+    model axis stays GSPMD-auto inside the shard_map region). The optimizer
+    should be `signum(..., axis_name=dp_axes)`.
+    """
+    dp_axes = tuple(a for a in dp_axes if a in mesh.axis_names)
+    dp_spec = dp_axes if len(dp_axes) > 1 else dp_axes[0]
+
+    def loss_fn(p, mb):
+        loss, metrics = bundle.loss(p, mb)
+        return loss, metrics
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def inner(params, opt_state, step, batch):
+        # Inside the manual region, with_sharding_constraint cannot be
+        # applied to values that vary over the manual dp axes (jax vma
+        # typing), so logical constraints are disabled; the model axis is
+        # still GSPMD-auto and propagates from the param shardings.
+        with axis_rules(None):
+            return _inner_body(params, opt_state, step, batch)
+
+    def _inner_body(params, opt_state, step, batch):
+        if grad_accum == 1:
+            (loss, _), grads = grad_fn(params, batch)
+        else:
+            mbs = _accum_reshape(batch, grad_accum)
+
+            def body(carry, mb):
+                acc, lsum = carry
+                (l, _), g = grad_fn(params, mb)
+                return (jax.tree.map(lambda a, gg: a + gg.astype(a.dtype),
+                                     acc, g), lsum + l), None
+
+            # seed the accumulator from microbatch 0 (a pcast'd zeros carry
+            # trips an XLA:CPU AllReducePromotion bug), scan the rest.
+            mb0 = jax.tree.map(lambda x: x[0], mbs)
+            rest = jax.tree.map(lambda x: x[1:], mbs)
+            (l0, _), g0 = grad_fn(params, mb0)
+            g0 = jax.tree.map(lambda g: g.astype(jnp.float32), g0)
+            (grads, lsum), _ = jax.lax.scan(body, (g0, l0), rest)
+            grads = jax.tree.map(lambda g: g / grad_accum, grads)
+            loss = lsum / grad_accum
+        # NOTE: no psum of grads — the 1-bit majority exchange inside
+        # optimizer.update is the only cross-DP gradient communication.
+        grads, gnorm = clip_by_global_norm(grads, clip)
+        params, opt_state = optimizer.update(grads, opt_state, params, step)
+        loss = jax.lax.pmean(loss, dp_spec)
+        return params, opt_state, {"loss": loss, "grad_norm": gnorm}
+
+    def train_step(params, opt_state, step, batch):
+        batch_specs = jax.tree.map(lambda _: P(dp_spec), batch)
+        rep = P()
+        f = jax.shard_map(
+            functools.partial(inner),
+            mesh=mesh,
+            in_specs=(jax.tree.map(lambda _: rep, params),
+                      jax.tree.map(lambda _: rep, opt_state),
+                      rep, batch_specs),
+            out_specs=(jax.tree.map(lambda _: rep, params),
+                       jax.tree.map(lambda _: rep, opt_state),
+                       {"loss": rep, "grad_norm": rep}),
+            # check_vma=False: the majority-vote result is replicated across
+            # dp axes by construction (all_gather), which the vma type
+            # system cannot express (no varying->invariant cast). The eager
+            # check_vma=False dispatch path has a jax-0.8 bug (_unmatch dst
+            # names every mesh axis), so train_step must stay jit-wrapped.
+            axis_names=set(dp_axes), check_vma=False)
+        return f(params, opt_state, step, batch)
+
+    # shard_map with inner closed_call (remat/scan) requires a jit wrapper
+    return jax.jit(train_step)

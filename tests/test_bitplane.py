@@ -1,0 +1,67 @@
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.bitplane import (BitVector, pack_bits, unpack_bits, n_words,
+                                 tail_mask, WORD_BITS)
+
+
+@pytest.mark.parametrize("n", [1, 31, 32, 33, 64, 100, 4096])
+def test_pack_unpack_roundtrip(n):
+    rng = np.random.default_rng(n)
+    bits = rng.integers(0, 2, n).astype(bool)
+    packed = pack_bits(jnp.asarray(bits))
+    assert packed.shape == (n_words(n),)
+    assert packed.dtype == jnp.uint32
+    out = np.asarray(unpack_bits(packed, n))
+    np.testing.assert_array_equal(out, bits)
+
+
+def test_pack_batched():
+    rng = np.random.default_rng(0)
+    bits = rng.integers(0, 2, (4, 7, 65)).astype(bool)
+    packed = pack_bits(jnp.asarray(bits))
+    assert packed.shape == (4, 7, 3)
+    np.testing.assert_array_equal(np.asarray(unpack_bits(packed, 65)), bits)
+
+
+def test_lsb_first_order():
+    bits = np.zeros(32, bool)
+    bits[0] = True  # logical element 0 -> LSB
+    assert int(pack_bits(jnp.asarray(bits))[0]) == 1
+    bits = np.zeros(33, bool)
+    bits[32] = True
+    packed = pack_bits(jnp.asarray(bits))
+    assert int(packed[0]) == 0 and int(packed[1]) == 1
+
+
+def test_tail_mask():
+    m = tail_mask(33)
+    assert m[0] == 0xFFFFFFFF and m[1] == 1
+
+
+def test_bitvector_logic_matches_numpy():
+    rng = np.random.default_rng(1)
+    a = rng.integers(0, 2, 100).astype(bool)
+    b = rng.integers(0, 2, 100).astype(bool)
+    c = rng.integers(0, 2, 100).astype(bool)
+    va, vb, vc = (BitVector.from_bits(jnp.asarray(x)) for x in (a, b, c))
+    np.testing.assert_array_equal(np.asarray((va & vb).to_bits()), a & b)
+    np.testing.assert_array_equal(np.asarray((va | vb).to_bits()), a | b)
+    np.testing.assert_array_equal(np.asarray((va ^ vb).to_bits()), a ^ b)
+    np.testing.assert_array_equal(np.asarray((~va).to_bits()), ~a)
+    maj = (a & b) | (b & c) | (c & a)
+    np.testing.assert_array_equal(np.asarray(va.majority(vb, vc).to_bits()), maj)
+
+
+def test_bitvector_invert_keeps_padding_zero():
+    v = BitVector.from_bits(jnp.asarray(np.ones(33, bool)))
+    inv = ~v
+    # bits beyond n_bits must stay zero so popcounts are exact
+    assert int(inv.words[1]) == 0
+    assert int(inv.popcount()) == 0
+
+
+def test_zeros_ones_popcount():
+    assert int(BitVector.zeros(100).popcount()) == 0
+    assert int(BitVector.ones(100).popcount()) == 100

@@ -1,0 +1,132 @@
+"""Engine semantics: every Fig. 8 program must match its jnp oracle, and the
+hardware's destructive/TRA/DCC side effects must hold exactly."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import compiler, engine
+from repro.core.commands import AAP, AP, Program
+
+RNG = np.random.default_rng(42)
+W = 32  # words per row in tests
+
+
+def rand_row():
+    return RNG.integers(0, 2**32, W, dtype=np.uint32)
+
+
+A, B, C = rand_row(), rand_row(), rand_row()
+
+ORACLES = {
+    "and": lambda a, b: a & b,
+    "or": lambda a, b: a | b,
+    "nand": lambda a, b: ~(a & b),
+    "nor": lambda a, b: ~(a | b),
+    "xor": lambda a, b: a ^ b,
+    "xnor": lambda a, b: ~(a ^ b),
+}
+
+
+@pytest.mark.parametrize("op", sorted(ORACLES))
+def test_binary_programs(op):
+    prog = compiler.op_program(op, ["D0", "D1"], "D2")
+    out = engine.execute(prog, {"D0": A, "D1": B}, outputs=["D2"])["D2"]
+    np.testing.assert_array_equal(np.asarray(out), ORACLES[op](A, B))
+
+
+def test_not_program():
+    prog = compiler.op_program("not", ["D0"], "D1")
+    out = engine.execute(prog, {"D0": A}, outputs=["D1"])["D1"]
+    np.testing.assert_array_equal(np.asarray(out), ~A)
+
+
+def test_maj3_program():
+    prog = compiler.op_program("maj3", ["D0", "D1", "D2"], "D3")
+    out = engine.execute(prog, {"D0": A, "D1": B, "D2": C}, outputs=["D3"])["D3"]
+    np.testing.assert_array_equal(np.asarray(out), (A & B) | (B & C) | (C & A))
+
+
+def test_copy_and_init():
+    prog = compiler.copy_program("D0", "D5")
+    out = engine.execute(prog, {"D0": A}, outputs=["D5"])["D5"]
+    np.testing.assert_array_equal(np.asarray(out), A)
+    prog = compiler.zero_program("D0")
+    out = engine.execute(prog, {"D0": A}, outputs=["D0"])["D0"]
+    assert not np.asarray(out).any()
+    prog = compiler.one_program("D0")
+    out = engine.execute(prog, {"D0": A}, outputs=["D0"])["D0"]
+    assert (np.asarray(out) == 0xFFFFFFFF).all()
+
+
+def test_source_rows_not_modified():
+    """§3.2 issue 3: staging through designated rows preserves sources."""
+    for op in ("and", "xor", "nand"):
+        prog = compiler.op_program(op, ["D0", "D1"], "D2")
+        rows = engine.execute(prog, {"D0": A, "D1": B})
+        np.testing.assert_array_equal(np.asarray(rows["D0"]), A)
+        np.testing.assert_array_equal(np.asarray(rows["D1"]), B)
+
+
+def test_tra_is_destructive():
+    """Fig. 4 state 3: a raw TRA overwrites all three designated rows."""
+    sub = engine.Subarray.create(W, {"D0": A, "D1": B, "D2": C})
+    prog = Program([AAP("D0", "B0"), AAP("D1", "B1"), AAP("D2", "B2"),
+                    AP("B12")])
+    out = sub.run(prog)
+    maj = (A & B) | (B & C) | (C & A)
+    for t in ("T0", "T1", "T2"):
+        np.testing.assert_array_equal(np.asarray(out.rows[t]), maj)
+
+
+def test_dcc_captures_negation():
+    """Fig. 6: activating the n-wordline while the bank is active stores the
+    complement of the sensed value into the DCC."""
+    sub = engine.Subarray.create(W, {"D0": A, "D9": np.zeros(W, np.uint32)})
+    out = sub.run(Program([AAP("D0", "B5")]))
+    np.testing.assert_array_equal(np.asarray(out.rows["DCC0"]), ~A)
+    # and activating B4 afterwards senses the stored (negated) value
+    out2 = out.run(Program([AAP("B4", "D9" )]))
+    np.testing.assert_array_equal(np.asarray(out2.rows["D9"]), ~A)
+
+
+def test_n_wordline_first_activation_senses_complement():
+    sub = engine.Subarray.create(W, {"D0": A, "D7": np.zeros(W, np.uint32)})
+    sub = sub.run(Program([AAP("D0", "B4")]))  # DCC0 = A
+    out = sub.run(Program([AAP("B5", "D7")]))  # sense via n-wordline
+    np.testing.assert_array_equal(np.asarray(out.rows["D7"]), ~A)
+    # the DCC cell itself must be *restored*, not corrupted
+    np.testing.assert_array_equal(np.asarray(out.rows["DCC0"]), A)
+
+
+def test_dual_address_copies_to_two_rows():
+    """B10 zeroes T2 and T3 simultaneously (paper: 'zero out two rows')."""
+    sub = engine.Subarray.create(W, {"D0": A})
+    out = sub.run(Program([AAP("C0", "B10")]))
+    assert not np.asarray(out.rows["T2"]).any()
+    assert not np.asarray(out.rows["T3"]).any()
+
+
+def test_dual_address_first_activation_rejected():
+    sub = engine.Subarray.create(W, {"D0": A})
+    with pytest.raises(engine.BuddyError):
+        sub.run(Program([AP("B10")]))
+
+
+def test_batched_rows():
+    a = RNG.integers(0, 2**32, (4, W), dtype=np.uint32)
+    b = RNG.integers(0, 2**32, (4, W), dtype=np.uint32)
+    prog = compiler.op_program("xor", ["D0", "D1"], "D2")
+    out = engine.execute(prog, {"D0": a, "D1": b}, outputs=["D2"])["D2"]
+    np.testing.assert_array_equal(np.asarray(out), a ^ b)
+
+
+def test_engine_is_jittable():
+    import jax
+
+    prog = compiler.op_program("xor", ["D0", "D1"], "D2")
+
+    @jax.jit
+    def f(a, b):
+        return engine.execute(prog, {"D0": a, "D1": b}, outputs=["D2"])["D2"]
+
+    np.testing.assert_array_equal(np.asarray(f(A, B)), A ^ B)

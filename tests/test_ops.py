@@ -1,0 +1,182 @@
+"""ops layer: functional correctness vs numpy/python oracles."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.bitplane import BitVector, pack_bits, unpack_bits
+from repro.ops import (BitSet, BloomFilter, VerticalColumn, field_mask,
+                       masked_fill_constant, masked_init, scan_count,
+                       xor_decrypt, xor_encrypt)
+from repro.ops import dna
+
+RNG = np.random.default_rng(99)
+
+
+# -- predicate scans --------------------------------------------------------
+
+
+@pytest.mark.parametrize("n,nbits", [(100, 8), (1000, 12), (4096, 16)])
+def test_scan_count(n, nbits):
+    vals = RNG.integers(0, 2**nbits, n, dtype=np.uint64).astype(np.uint32)
+    lo, hi = int(2**nbits * 0.2), int(2**nbits * 0.7)
+    got = int(scan_count(jnp.asarray(vals), nbits, lo, hi))
+    assert got == int(((vals >= lo) & (vals <= hi)).sum())
+
+
+def test_vertical_column_padding_excluded():
+    vals = np.array([5, 10, 3], np.uint32)  # padded to 32 with sentinel
+    col = VerticalColumn.encode(jnp.asarray(vals), 8)
+    bv = col.scan(0, 255)  # all real values match; padding must not
+    assert int(bv.popcount()) == 3
+
+
+# -- set ops ----------------------------------------------------------------
+
+
+def test_bitset_matches_python_sets():
+    domain = 1 << 12
+    sets_np = [set(RNG.integers(0, domain, 200).tolist()) for _ in range(4)]
+    sets = [BitSet.from_elements(jnp.asarray(sorted(s)), domain)
+            for s in sets_np]
+    u = sets[0].union(*sets[1:])
+    i = sets[0].intersection(*sets[1:])
+    d = sets[0].difference(*sets[1:])
+    assert set(np.asarray(u.to_elements()).tolist()) == set.union(*sets_np)
+    assert set(np.asarray(i.to_elements()).tolist()) == set.intersection(*sets_np)
+    assert set(np.asarray(d.to_elements()).tolist()) == \
+        sets_np[0] - sets_np[1] - sets_np[2] - sets_np[3]
+    assert int(u.cardinality()) == len(set.union(*sets_np))
+
+
+def test_bitset_insert_contains():
+    s = BitSet.empty(256).insert(7).insert(255).insert(7)
+    assert int(s.contains(7)) and int(s.contains(255))
+    assert not int(s.contains(8))
+    assert int(s.cardinality()) == 2
+
+
+# -- masked init ------------------------------------------------------------
+
+
+def test_masked_init_field():
+    """Clear the 'alpha' byte of 32-bit RGBA pixels, in-memory."""
+    n = 64
+    pixels = RNG.integers(0, 2**32, n, dtype=np.uint32)
+    mask = field_mask(record_bits=32, offset=24, width=8, n_records=n)
+    out = masked_fill_constant(jnp.asarray(pixels), mask, 0)
+    np.testing.assert_array_equal(np.asarray(out), pixels & 0x00FFFFFF)
+    out1 = masked_fill_constant(jnp.asarray(pixels), mask, 1)
+    np.testing.assert_array_equal(np.asarray(out1), pixels | 0xFF000000)
+
+
+def test_masked_init_value():
+    n = 32
+    data = RNG.integers(0, 2**32, n, dtype=np.uint32)
+    value = RNG.integers(0, 2**32, n, dtype=np.uint32)
+    mask = field_mask(32, 8, 16, n)
+    out = np.asarray(masked_init(jnp.asarray(data), mask, jnp.asarray(value)))
+    m = np.uint32(0x00FFFF00)
+    np.testing.assert_array_equal(out, (data & ~m) | (value & m))
+
+
+# -- bloom filter -----------------------------------------------------------
+
+
+def test_bloom_no_false_negatives():
+    bf = BloomFilter.create(1 << 14, k=4)
+    keys = jnp.asarray(RNG.integers(0, 2**31, 300, dtype=np.int64), jnp.uint32)
+    bf = bf.insert(keys)
+    assert bool(bf.query(keys).all())
+
+
+def test_bloom_false_positive_rate_reasonable():
+    m, k, n = 1 << 16, 4, 2000
+    bf = BloomFilter.create(m, k=k).insert(
+        jnp.arange(n, dtype=jnp.uint32) * jnp.uint32(2654435761))
+    probe = jnp.arange(10_000, dtype=jnp.uint32) + jnp.uint32(1 << 20)
+    fp = float(bf.query(probe).mean())
+    theo = (1 - np.exp(-k * n / m)) ** k
+    assert fp < 4 * theo + 0.01, (fp, theo)
+
+
+def test_bloom_merge_is_union():
+    a = BloomFilter.create(1 << 12).insert(jnp.arange(0, 100, dtype=jnp.uint32))
+    b = BloomFilter.create(1 << 12).insert(jnp.arange(100, 200, dtype=jnp.uint32))
+    m = a.merge(b)
+    assert bool(m.query(jnp.arange(200, dtype=jnp.uint32)).all())
+
+
+# -- crypto -----------------------------------------------------------------
+
+
+def test_xor_encrypt_roundtrip_and_diffusion():
+    pt = RNG.integers(0, 2**32, 512, dtype=np.uint32)
+    ct = xor_encrypt(jnp.asarray(pt), 0xDEADBEEF)
+    assert not np.array_equal(np.asarray(ct), pt)
+    back = xor_decrypt(ct, 0xDEADBEEF)
+    np.testing.assert_array_equal(np.asarray(back), pt)
+    # wrong key fails
+    bad = xor_decrypt(ct, 0xDEADBEEE)
+    assert not np.array_equal(np.asarray(bad), pt)
+    # keystream is balanced-ish
+    from repro.ops.popcount import popcount_words
+    from repro.ops.crypto import keystream
+
+    ks = keystream(1, (4096,))
+    density = int(popcount_words(ks)) / (4096 * 32)
+    assert 0.48 < density < 0.52
+
+
+# -- DNA matching -----------------------------------------------------------
+
+
+def _rand_seq(n):
+    return "".join(RNG.choice(list("ACGT"), n))
+
+
+def test_dna_exact_match_vs_python():
+    genome = _rand_seq(2000)
+    read = genome[777:777 + 12]
+    got = set(np.nonzero(np.asarray(
+        dna.find_matches(genome, read).to_bits()))[0].tolist())
+    exp = {i for i in range(len(genome) - len(read) + 1)
+           if genome[i:i + len(read)] == read}
+    assert got == exp and 777 in got
+
+
+def test_dna_no_match():
+    genome = "ACGT" * 100
+    assert int(dna.find_matches(genome, "AAAAAAAAAA").popcount()) == 0
+
+
+def test_dna_with_mismatches():
+    genome = _rand_seq(3000)
+    read = list(genome[1500:1516])
+    mutated = read.copy()
+    mutated[5] = "A" if read[5] != "A" else "C"
+    mutated = "".join(mutated)
+    exact = dna.find_matches(genome, mutated)
+    approx = dna.find_matches_with_mismatches(genome, mutated, max_mismatch=1)
+    bits = np.asarray(approx.to_bits())
+    assert bits[1500]  # found despite 1 mismatch
+    # oracle check of the full approximate-match set
+    g = np.asarray([{"A": 0, "C": 1, "G": 2, "T": 3}[c] for c in genome])
+    r = np.asarray([{"A": 0, "C": 1, "G": 2, "T": 3}[c] for c in mutated])
+    L = len(r)
+    exp = np.asarray([(g[i:i + L] != r).sum() <= 1
+                      for i in range(len(g) - L + 1)])
+    np.testing.assert_array_equal(bits, exp)
+
+
+def test_dna_shift_down():
+    from repro.core.bitplane import pack_bits
+
+    bits = RNG.integers(0, 2, 200).astype(bool)
+    w = pack_bits(jnp.asarray(bits))
+    for k in (0, 1, 31, 32, 33, 64, 150):
+        shifted = dna.shift_down(w, k)
+        exp = np.zeros(224, bool)
+        exp[:200 - k] = bits[k:]
+        np.testing.assert_array_equal(
+            np.asarray(unpack_bits(shifted, 224)), exp, err_msg=f"k={k}")

@@ -1,0 +1,122 @@
+"""Hypothesis property tests on the system's core invariants."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import compiler, engine
+from repro.core.bitplane import pack_bits, unpack_bits
+from repro.core.compiler import Expr, maj
+from repro.kernels import ref
+
+words_st = st.integers(min_value=0, max_value=2**32 - 1)
+
+
+def row_st(n=8):
+    return st.lists(words_st, min_size=n, max_size=n).map(
+        lambda xs: np.asarray(xs, np.uint32))
+
+
+@settings(max_examples=30, deadline=None)
+@given(row_st(), row_st())
+def test_engine_equals_jnp_all_ops(a, b):
+    """Every Fig. 8 AAP program == the corresponding word-level op."""
+    oracles = {"and": a & b, "or": a | b, "xor": a ^ b,
+               "nand": ~(a & b), "nor": ~(a | b), "xnor": ~(a ^ b)}
+    for op, exp in oracles.items():
+        prog = compiler.op_program(op, ["D0", "D1"], "D2")
+        out = engine.execute(prog, {"D0": a, "D1": b}, outputs=["D2"])["D2"]
+        np.testing.assert_array_equal(np.asarray(out), exp, err_msg=op)
+
+
+@settings(max_examples=30, deadline=None)
+@given(row_st(), row_st(), row_st())
+def test_tra_majority_identity(a, b, c):
+    """TRA's defining identity: MAJ(A,B,C) = C(A+B) + notC(AB) (paper §3.1)."""
+    maj_ = (a & b) | (b & c) | (c & a)
+    rewritten = (c & (a | b)) | (~c & (a & b))
+    np.testing.assert_array_equal(maj_, rewritten)
+    prog = compiler.op_program("maj3", ["D0", "D1", "D2"], "D3")
+    out = engine.execute(prog, {"D0": a, "D1": b, "D2": c}, outputs=["D3"])["D3"]
+    np.testing.assert_array_equal(np.asarray(out), maj_)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.data())
+def test_compiled_expression_equals_numpy(data):
+    """Random expression DAGs: compiler+engine == direct numpy evaluation."""
+    n_leaves = data.draw(st.integers(2, 5))
+    leaves = {f"D{i}": data.draw(row_st()) for i in range(n_leaves)}
+
+    def gen_expr(depth):
+        if depth == 0 or data.draw(st.booleans()):
+            name = data.draw(st.sampled_from(sorted(leaves)))
+            return Expr.of(name), leaves[name]
+        op = data.draw(st.sampled_from(["and", "or", "xor", "not", "maj"]))
+        if op == "not":
+            e, v = gen_expr(depth - 1)
+            return ~e, ~v
+        if op == "maj":
+            e1, v1 = gen_expr(depth - 1)
+            e2, v2 = gen_expr(depth - 1)
+            e3, v3 = gen_expr(depth - 1)
+            return maj(e1, e2, e3), (v1 & v2) | (v2 & v3) | (v3 & v1)
+        e1, v1 = gen_expr(depth - 1)
+        e2, v2 = gen_expr(depth - 1)
+        if op == "and":
+            return e1 & e2, v1 & v2
+        if op == "or":
+            return e1 | e2, v1 | v2
+        return e1 ^ e2, v1 ^ v2
+
+    expr, expected = gen_expr(3)
+    res = compiler.compile_expr(expr, "OUT")
+    out = engine.execute(res.program, leaves, outputs=["OUT"])["OUT"]
+    np.testing.assert_array_equal(np.asarray(out), expected)
+    # sources never modified
+    post = engine.execute(res.program, leaves)
+    for name, val in leaves.items():
+        np.testing.assert_array_equal(np.asarray(post[name]), val)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.booleans(), min_size=1, max_size=200))
+def test_pack_unpack_roundtrip_property(bits):
+    arr = np.asarray(bits, bool)
+    packed = pack_bits(jnp.asarray(arr))
+    np.testing.assert_array_equal(
+        np.asarray(unpack_bits(packed, len(bits))), arr)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(1, 9), st.integers(0, 2**32 - 1))
+def test_majority_k_threshold_properties(k, seed):
+    """majority(planes, t) is monotone in t; t=1 == OR; t=k == AND."""
+    rng = np.random.default_rng(seed)
+    planes = jnp.asarray(rng.integers(0, 2**32, (k, 4), dtype=np.uint32))
+    all_or = np.asarray(ref.majority_k(planes, threshold=1))
+    all_and = np.asarray(ref.majority_k(planes, threshold=k))
+    acc_or = np.zeros(4, np.uint32)
+    acc_and = np.full(4, 0xFFFFFFFF, np.uint32)
+    for p in np.asarray(planes):
+        acc_or |= p
+        acc_and &= p
+    np.testing.assert_array_equal(all_or, acc_or)
+    np.testing.assert_array_equal(all_and, acc_and)
+    prev = all_or
+    for t in range(2, k + 1):
+        cur = np.asarray(ref.majority_k(planes, threshold=t))
+        assert (cur & ~prev).sum() == 0  # monotone: t up -> bits only drop
+        prev = cur
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(2, 16), st.integers(0, 2**31 - 1))
+def test_bitweaving_scan_property(n_bits, seed):
+    rng = np.random.default_rng(seed)
+    vals = rng.integers(0, 2**n_bits, 64, dtype=np.uint64).astype(np.uint32)
+    lo = int(rng.integers(0, 2**n_bits))
+    hi = int(rng.integers(0, 2**n_bits))
+    planes = ref.bit_transpose(jnp.asarray(vals), n_bits)
+    got = np.asarray(unpack_bits(
+        ref.bitweaving_scan(planes, lo, hi, n_bits), 64))
+    np.testing.assert_array_equal(got, (vals >= lo) & (vals <= hi))

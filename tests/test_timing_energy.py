@@ -1,0 +1,95 @@
+"""Timing/energy models must reproduce the paper's §5.3/§7 headline numbers."""
+import pytest
+
+from repro.core import compiler, energy, timing
+
+
+def test_aap_latencies():
+    t = timing.DDR3_1600
+    assert t.aap_ns == pytest.approx(49.0)
+    assert t.ap_ns == pytest.approx(45.0)
+    naive = timing.DramTiming(split_decoder=False)
+    assert naive.aap_ns == pytest.approx(80.0)
+
+
+def test_throughput_ratios_match_paper():
+    """§7: Buddy-1-bank is 3.8-9.1x Skylake and 2.7-6.4x GTX745;
+    abstract: 10.9-25.6x (4 banks vs best baseline)."""
+    table = timing.throughput_table()
+    r_sky = [row["buddy_1bank"] / row["skylake"] for row in table.values()]
+    r_gtx = [row["buddy_1bank"] / row["gtx745"] for row in table.values()]
+    r4_gtx = [row["buddy_4bank"] / row["gtx745"] for row in table.values()]
+    assert 3.5 <= min(r_sky) and max(r_sky) <= 9.5, r_sky
+    assert 2.5 <= min(r_gtx) and max(r_gtx) <= 6.8, r_gtx
+    assert 10.4 <= min(r4_gtx) and max(r4_gtx) <= 26.5, r4_gtx
+
+
+def test_buddy_scales_linearly_with_banks():
+    table = timing.throughput_table(banks_list=(1, 2, 4, 8))
+    for row in table.values():
+        assert row["buddy_2bank"] == pytest.approx(2 * row["buddy_1bank"])
+        assert row["buddy_8bank"] == pytest.approx(8 * row["buddy_1bank"])
+
+
+def test_tfaw_throttles_many_banks():
+    prog = compiler.op_program("and", ["D0", "D1"], "D2")
+    free = timing.buddy_throughput_gbps(prog, banks=8, respect_tfaw=False)
+    thr = timing.buddy_throughput_gbps(prog, banks=8, respect_tfaw=True)
+    assert thr < free
+    # 1 bank is never tFAW limited
+    assert timing.buddy_throughput_gbps(prog, 1, respect_tfaw=True) == \
+        pytest.approx(timing.buddy_throughput_gbps(prog, 1))
+
+
+PAPER_TABLE3 = {  # nJ/KB
+    "not": (93.7, 1.6), "and": (137.9, 3.2), "or": (137.9, 3.2),
+    "nand": (137.9, 4.0), "nor": (137.9, 4.0),
+    "xor": (137.9, 5.5), "xnor": (137.9, 5.5),
+}
+
+
+@pytest.mark.parametrize("op", sorted(PAPER_TABLE3))
+def test_energy_matches_table3(op):
+    ddr3_paper, buddy_paper = PAPER_TABLE3[op]
+    assert energy.ddr3_energy_nj_per_kb(op) == pytest.approx(ddr3_paper, rel=0.10)
+    assert energy.buddy_energy_nj_per_kb(op) == pytest.approx(buddy_paper, rel=0.10)
+
+
+def test_energy_reduction_range():
+    """Abstract: 25.1x - 59.5x reduction."""
+    t = energy.energy_table()
+    reds = [row["reduction"] for row in t.values()]
+    assert min(reds) > 22 and max(reds) < 62
+
+
+def test_capacity_cost_is_one_percent():
+    from repro.core.addressing import SubarrayGeometry
+
+    g = SubarrayGeometry()
+    assert g.capacity_loss == pytest.approx(0.01, abs=0.002)  # §5.4
+
+
+def test_rowclone_psm_dispatch():
+    """§6.2.2: ops needing 3 PSM copies run on the CPU instead."""
+    import numpy as np
+
+    from repro.core.isa import BuddyDevice
+
+    dev = BuddyDevice(row_bits=1024)
+    rng = np.random.default_rng(0)
+    rows = {n: rng.integers(0, 2**32, 32, dtype=np.uint32) for n in "abcd"}
+    # same affinity group: all in one subarray -> buddy path
+    dev.store("a", rows["a"], group="g0")
+    dev.store("b", rows["b"], group="g0")
+    r = dev.bop("and", "out", ["a", "b"], group="g0")
+    assert r.path == "buddy" and r.n_psm == 0
+    np.testing.assert_array_equal(np.asarray(r.value), rows["a"] & rows["b"])
+    # scattered operands: 2 PSM copies -> still buddy but slower
+    dev2 = BuddyDevice(row_bits=1024)
+    dev2.store("a", rows["a"], group="g0")
+    dev2.store("b", rows["b"], group="g1")
+    dev2.store("out2", rows["c"], group="g2")
+    r2 = dev2.bop("and", "out2", ["a", "b"])
+    assert r2.n_psm == 2 and r2.path == "buddy"
+    assert r2.latency_ns > r.latency_ns
+    np.testing.assert_array_equal(np.asarray(r2.value), rows["a"] & rows["b"])
