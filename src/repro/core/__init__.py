@@ -2,11 +2,16 @@
 from repro.core.bitplane import (BitVector, pack_bits, unpack_bits, n_words,
                                  WORD_BITS, ROW_BITS, ROW_WORDS)
 from repro.core.commands import AAP, AP, Program
-from repro.core.compiler import (Expr, maj, compile_expr, op_program,
+from repro.core.compiler import (Expr, maj, compile_expr, compile_expr_fused,
+                                 fuse_expr, optimize_program, op_program,
                                  and_program, or_program, not_program,
                                  nand_program, nor_program, xor_program,
-                                 xnor_program, maj3_program, copy_program)
+                                 xnor_program, maj3_program, andnot_program,
+                                 copy_program)
 from repro.core.engine import Subarray, execute
+from repro.core.bankgroup import (BankGroup, BankSchedule, execute_banked,
+                                  pipeline_latency_ns, banked_throughput_gbps,
+                                  shard_words, unshard_words)
 from repro.core.timing import (DDR3_1600, DramTiming, program_latency_ns,
                                buddy_throughput_gbps, baseline_throughput_gbps,
                                throughput_table, SKYLAKE, GTX745)

@@ -1,0 +1,238 @@
+"""Multi-bank parallel execution of AAP programs (paper §1, §5.4, §7).
+
+A Buddy operation is contained entirely inside one subarray, so every bank
+(and every subarray within a bank) can run its own program concurrently —
+this internal parallelism is where the paper's 10.9x-25.6x 4-bank numbers
+come from. This module is the software seam for that scaling lever:
+
+  * `BankGroup` holds N independent `Subarray` states as ONE stacked pytree
+    (every named row gains a leading bank axis) and dispatches a compiled
+    program across all banks with `jax.vmap` — one traced execution, N banks
+    of data, exactly the SIMD-across-banks shape of the hardware.
+  * `shard_words` / `unshard_words` partition a bulk operand's row-blocks
+    across banks (pad-to-even split on the word axis) and reassemble
+    results.
+  * `pipeline_latency_ns` models the controller schedule: per-block operand
+    placement ("inter-bank copy" over the shared internal bus, serialized)
+    overlapped with per-bank AAP compute (parallel) — a classic software
+    pipeline whose makespan the benchmark (benchmarks/fig9_throughput.py)
+    reports for 1 vs N banks.
+
+The functional result of banked execution is bit-identical to single-bank
+execution (asserted by tests/test_bankgroup.py); only the schedule differs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import addressing
+from repro.core.commands import Program
+from repro.core.engine import RowState, Subarray
+from repro.core.timing import DDR3_1600, DramTiming, program_latency_ns
+
+
+def shard_words(x: jax.Array, n_banks: int) -> jax.Array:
+    """Split a (..., W) operand into per-bank word slices: (B, ..., W/B).
+
+    W is zero-padded up to a multiple of `n_banks` — zero words are inert
+    for every bitwise program and `unshard_words` strips them back off.
+    """
+    x = jnp.asarray(x, jnp.uint32)
+    w = x.shape[-1]
+    pad = (-w) % n_banks
+    if pad:
+        x = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)])
+    per = x.shape[-1] // n_banks
+    split = x.reshape(x.shape[:-1] + (n_banks, per))
+    # bank axis leads: (B, ..., W/B)
+    return jnp.moveaxis(split, -2, 0)
+
+
+def unshard_words(x: jax.Array, n_words: int) -> jax.Array:
+    """Inverse of `shard_words`: (B, ..., W/B) -> (..., n_words)."""
+    merged = jnp.moveaxis(x, 0, -2)
+    flat = merged.reshape(merged.shape[:-2] + (-1,))
+    return flat[..., :n_words]
+
+
+@dataclasses.dataclass
+class BankGroup:
+    """N subarrays (one per bank) as a single stacked row-state pytree.
+
+    `rows[name]` has shape (n_banks, ..., row_words): bank b's subarray is
+    the slice `rows[name][b]`. All banks share one program counter — the
+    memory controller broadcasts the same AAP sequence and each bank applies
+    it to its own data (how bulk ops actually scale across banks; per-bank
+    distinct programs would just be a second `BankGroup`).
+    """
+
+    rows: RowState
+    n_banks: int
+    row_words: int
+
+    @classmethod
+    def create(cls, n_banks: int, row_words: int,
+               data: Optional[RowState] = None) -> "BankGroup":
+        """Build a group whose per-bank rows are already bank-sliced.
+
+        `data` values must carry the leading bank axis (use `shard_words`
+        to produce them from flat operands).
+        """
+        sub = Subarray.create(row_words, None, batch=(n_banks,))
+        rows = dict(sub.rows)
+        if data:
+            for k, v in data.items():
+                v = jnp.asarray(v, jnp.uint32)
+                if v.shape[0] != n_banks:
+                    raise ValueError(
+                        f"row {k!r}: leading axis {v.shape[0]} != n_banks "
+                        f"{n_banks}; shard operands with shard_words()")
+                rows[k] = v
+        return cls(rows=rows, n_banks=n_banks, row_words=row_words)
+
+    @classmethod
+    def from_flat(cls, n_banks: int, data: RowState) -> "BankGroup":
+        """Partition flat (..., W) operand rows across banks and build."""
+        sharded = {k: shard_words(v, n_banks) for k, v in data.items()}
+        row_words = next(iter(sharded.values())).shape[-1]
+        return cls.create(n_banks, row_words, sharded)
+
+    def run(self, program: Program) -> "BankGroup":
+        """Execute one program on every bank concurrently via vmap.
+
+        D-group rows the program references but no bank holds yet
+        (destinations, temps) are created as zero rows, as in
+        `engine.execute`.
+        """
+        stacked = dict(self.rows)
+        # widest row shape wins: batched operands are (B, ..., W) while the
+        # built-in B/C rows are (B, W)
+        shape = max((v.shape for v in stacked.values()), key=len)
+        for a in program.activates():
+            for r, _ in addressing.resolve(a):
+                if r not in stacked:
+                    stacked[r] = jnp.zeros(shape, jnp.uint32)
+
+        def one_bank(rows: RowState) -> RowState:
+            sub = Subarray(rows=rows, row_words=self.row_words)
+            return sub.run(program).rows
+
+        rows = jax.vmap(one_bank)(stacked)
+        return BankGroup(rows=rows, n_banks=self.n_banks,
+                         row_words=self.row_words)
+
+    def read(self, addr: str) -> jax.Array:
+        """Per-bank view of a row: (n_banks, ..., row_words)."""
+        return self.rows[addr]
+
+    def gather(self, addr: str, n_words: Optional[int] = None) -> jax.Array:
+        """Reassemble a row's bank slices into one flat (..., W) vector."""
+        v = self.rows[addr]
+        if n_words is None:
+            n_words = v.shape[0] * v.shape[-1]
+        return unshard_words(v, n_words)
+
+
+def execute_banked(program: Program, data: RowState, n_banks: int,
+                   outputs: Optional[List[str]] = None) -> RowState:
+    """Bank-parallel analog of `engine.execute`.
+
+    Flat (..., W) operand rows are partitioned word-wise across `n_banks`
+    banks, the program runs on all banks in one vmapped dispatch, and the
+    requested output rows come back reassembled to their original width.
+    Bit-identical to `engine.execute(program, data)` for every program.
+    """
+    n_words = next(iter(data.values())).shape[-1]
+    sharded = {k: shard_words(jnp.asarray(v, jnp.uint32), n_banks)
+               for k, v in data.items()}
+    row_words = next(iter(sharded.values())).shape[-1]
+    group = BankGroup.create(n_banks, row_words, sharded)
+    out = group.run(program)  # creates missing destination/temp rows
+    names = outputs if outputs is not None else list(out.rows)
+    return {k: unshard_words(out.rows[k], n_words) for k in names}
+
+
+# ---------------------------------------------------------------------------
+# Controller schedule: overlap inter-bank operand copy with compute
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class BankSchedule:
+    """Makespan of a bulk op split into row-blocks across banks.
+
+    `copy_ns` is the serialized inter-bank transfer (the shared internal
+    bus moves one row-block at a time); `compute_ns` sums per-bank program
+    time; `total_ns` is the pipelined makespan with copy overlapped under
+    compute of other banks.
+    """
+
+    n_blocks: int
+    n_banks: int
+    copy_ns: float
+    compute_ns: float
+    total_ns: float
+
+    @property
+    def serial_ns(self) -> float:
+        """The no-overlap baseline: every block pays copy then compute."""
+        return self.copy_ns + self.compute_ns
+
+
+def partition_blocks(n_blocks: int, n_banks: int) -> List[range]:
+    """Round-robin-balanced contiguous assignment of row-blocks to banks."""
+    base, extra = divmod(n_blocks, n_banks)
+    out: List[range] = []
+    start = 0
+    for b in range(n_banks):
+        size = base + (1 if b < extra else 0)
+        out.append(range(start, start + size))
+        start += size
+    return out
+
+
+def pipeline_latency_ns(n_blocks: int, n_banks: int, program: Program,
+                        timing: DramTiming = DDR3_1600,
+                        xfer_ns_per_block: Optional[float] = None
+                        ) -> BankSchedule:
+    """Event-driven makespan of `n_blocks` row-block ops over `n_banks`.
+
+    Model: placing one row-block's operands in its bank costs one
+    inter-bank RowClone-PSM-ish transfer (`xfer_ns_per_block`, default one
+    serialized AAP) on the shared bus; the bank then executes the compiled
+    program (`program_latency_ns`) independently. Transfers serialize,
+    compute overlaps — so N banks hide compute behind the transfer stream
+    and the makespan drops from n*(x+c) toward n*x + c.
+    """
+    if xfer_ns_per_block is None:
+        xfer_ns_per_block = timing.aap_ns
+    exec_ns = program_latency_ns(program, timing)
+    bus_free = 0.0
+    bank_free = [0.0] * n_banks
+    makespan = 0.0
+    for blk in range(n_blocks):
+        b = blk % n_banks
+        start_xfer = max(bus_free, bank_free[b])
+        bus_free = start_xfer + xfer_ns_per_block
+        done = bus_free + exec_ns
+        bank_free[b] = done
+        makespan = max(makespan, done)
+    return BankSchedule(
+        n_blocks=n_blocks, n_banks=n_banks,
+        copy_ns=n_blocks * xfer_ns_per_block,
+        compute_ns=n_blocks * exec_ns,
+        total_ns=makespan,
+    )
+
+
+def banked_throughput_gbps(n_blocks: int, n_banks: int, program: Program,
+                           timing: DramTiming = DDR3_1600) -> float:
+    """End-to-end GB/s of output for a multi-block bulk op (Fig. 9 e2e)."""
+    sched = pipeline_latency_ns(n_blocks, n_banks, program, timing)
+    if sched.total_ns == 0.0:
+        return 0.0
+    return n_blocks * timing.row_bytes / sched.total_ns

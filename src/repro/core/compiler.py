@@ -4,12 +4,25 @@ Primitive op programs are the paper's exact command sequences. The expression
 compiler lowers arbitrary boolean expression DAGs over D-group rows to AAP
 sequences through temporary D-rows, with common-subexpression and dead-store
 elimination (the "standard compiler techniques" of §5.2).
+
+On top of that sits the **fusion pass** (`compile_expr_fused`): a
+SIMDRAM-style minimizer that (a) rewrites composite sub-DAGs into the
+cheapest native primitive (`~(a^b)` -> one XNOR program instead of XOR+NOT,
+the 3-AND/2-OR majority form -> one TRA, `a & ~b` -> a fused ANDNOT that
+rides the dual-contact negation) and (b) runs a peephole pass over the
+emitted command stream that forwards values through dead temporary D-rows so
+intermediates stay in the B-group designated rows instead of bouncing
+through D-group scratch. Fused programs compute bit-identical results and
+are never longer than unfused ones (shorter-of-both by construction), with
+strictly fewer AAPs whenever a rewrite or forwarding applies (asserted by
+tests/test_compiler.py).
 """
 from __future__ import annotations
 
 import dataclasses
 from typing import Dict, List, Optional, Sequence, Tuple, Union
 
+from repro.core import addressing
 from repro.core.commands import AAP, AP, Command, Program
 
 # ---------------------------------------------------------------------------
@@ -117,6 +130,23 @@ def maj3_program(da: str, db: str, dc: str, dk: str) -> Program:
     )
 
 
+def andnot_program(di: str, dj: str, dk: str) -> Program:
+    """Dk = Di & !Dj in one program — the bitmap-difference workhorse.
+
+    Not a Fig. 8 entry, but free given the same address map: the DCC
+    n-wordline captures !Dj on the way in, so the whole op is 5 AAPs versus
+    the 6 (NOT then AND) an unfused compiler emits.
+    """
+    return Program(
+        [AAP(di, "B0"),    # T0 = Di
+         AAP(dj, "B5"),    # DCC0 = !Dj
+         AAP("B4", "B1"),  # T1 = DCC0 = !Dj
+         AAP("C0", "B2"),  # T2 = 0
+         AAP("B12", dk)],  # Dk = TRA(Di, !Dj, 0) = Di & !Dj
+        f"{dk} = {di} andnot {dj}",
+    )
+
+
 BINARY_PROGRAMS = {
     "and": and_program,
     "or": or_program,
@@ -124,6 +154,7 @@ BINARY_PROGRAMS = {
     "nor": nor_program,
     "xor": xor_program,
     "xnor": xnor_program,
+    "andnot": andnot_program,
 }
 
 
@@ -177,7 +208,176 @@ class CompileResult:
     n_temp_rows: int
 
 
-def compile_expr(expr: Expr, dst: str, temp_prefix: str = "TMP") -> CompileResult:
+def expr_key(e: Expr) -> Tuple:
+    """Structural identity of an expression node (hash-consing key)."""
+    if e.op == "row":
+        return ("row", e.row)
+    return (e.op,) + tuple(expr_key(a) for a in e.args)
+
+
+# not(X) folds into X's dual primitive — one program instead of two.
+_NOT_DUAL = {"and": "nand", "or": "nor", "xor": "xnor",
+             "nand": "and", "nor": "or", "xnor": "xor"}
+
+
+def _or_leaves(e: Expr) -> List[Expr]:
+    if e.op == "or":
+        return _or_leaves(e.args[0]) + _or_leaves(e.args[1])
+    return [e]
+
+
+def _match_or_patterns(e: Expr) -> Optional[Expr]:
+    """Recognize composite or-trees that collapse to one primitive program.
+
+    (a&b)|(b&c)|(c&a)   -> maj3(a,b,c)      (native TRA, 4 AAPs vs 20)
+    andnot(a,b)|andnot(b,a) -> xor(a,b)     (sum-of-products form)
+    (a&b)|nor(a,b)      -> xnor(a,b)
+    Leaves arrive already fused bottom-up, so the SOP forms appear as
+    andnot/nor nodes here.
+    """
+    leaves = _or_leaves(e)
+    if len(leaves) == 3 and all(l.op == "and" for l in leaves):
+        by_key: Dict[Tuple, Expr] = {}
+        pair_sets = []
+        for l in leaves:
+            ka, kb = expr_key(l.args[0]), expr_key(l.args[1])
+            if ka == kb:
+                return None
+            by_key[ka], by_key[kb] = l.args[0], l.args[1]
+            pair_sets.append(frozenset((ka, kb)))
+        keys = sorted(set().union(*pair_sets))
+        if len(keys) == 3 and len(set(pair_sets)) == 3:
+            x, y, z = (by_key[k] for k in keys)
+            return Expr("maj3", (x, y, z))
+    if len(leaves) == 2:
+        p, q = leaves
+        if p.op == q.op == "andnot":
+            if (expr_key(p.args[0]) == expr_key(q.args[1])
+                    and expr_key(p.args[1]) == expr_key(q.args[0])):
+                return Expr("xor", p.args)
+        if {p.op, q.op} == {"and", "nor"}:
+            a, n = (p, q) if p.op == "and" else (q, p)
+            if ({expr_key(a.args[0]), expr_key(a.args[1])}
+                    == {expr_key(n.args[0]), expr_key(n.args[1])}):
+                return Expr("xnor", a.args)
+    return None
+
+
+def _rewrite_node(e: Expr) -> Expr:
+    """One rewriting step at a node whose children are already fused."""
+    if e.op == "not":
+        (a,) = e.args
+        if a.op == "not":
+            return a.args[0]
+        if a.op in _NOT_DUAL:
+            return Expr(_NOT_DUAL[a.op], a.args)
+    elif e.op == "and":
+        x, y = e.args
+        if x.op == "not" and y.op == "not":      # De Morgan beats 2x NOT
+            return Expr("nor", (x.args[0], y.args[0]))
+        if y.op == "not":
+            return Expr("andnot", (x, y.args[0]))
+        if x.op == "not":
+            return Expr("andnot", (y, x.args[0]))
+    elif e.op == "or":
+        m = _match_or_patterns(e)
+        if m is not None:
+            return m
+        x, y = e.args
+        if x.op == "not" and y.op == "not":
+            return Expr("nand", (x.args[0], y.args[0]))
+    return e
+
+
+def fuse_expr(expr: Expr) -> Expr:
+    """Fusion rewriting: collapse composite sub-DAGs into native primitives.
+
+    Bottom-up, memoized on structural keys so shared subexpressions stay
+    shared (CSE in `compile_expr` keys on the same structure). Pure DAG ->
+    DAG; semantics preserved (tests assert equality on random inputs).
+    """
+    memo: Dict[Tuple, Expr] = {}
+
+    def go(e: Expr) -> Expr:
+        k = expr_key(e)
+        if k in memo:
+            return memo[k]
+        if e.op != "row":
+            e = Expr(e.op, tuple(go(a) for a in e.args))
+            while True:
+                nxt = _rewrite_node(e)
+                if expr_key(nxt) == expr_key(e):
+                    break
+                e = nxt
+        memo[k] = e
+        return e
+
+    return go(expr)
+
+
+def _cmd_addrs(c: Command) -> Tuple[str, ...]:
+    return (c.addr1, c.addr2) if isinstance(c, AAP) else (c.addr,)
+
+
+def _addr_rows(addr: str) -> frozenset:
+    return frozenset(r for r, _ in addressing.resolve(addr))
+
+
+def _cmd_reads(c: Command) -> frozenset:
+    # rows whose stored value feeds the sense amps (first ACTIVATE)
+    return _addr_rows(c.addr1 if isinstance(c, AAP) else c.addr)
+
+
+def _cmd_writes(c: Command) -> frozenset:
+    # every raised wordline is overwritten with the (polarity-adjusted)
+    # sensed value — the first ACTIVATE restores, the second forces
+    if isinstance(c, AAP):
+        return _addr_rows(c.addr1) | _addr_rows(c.addr2)
+    return _addr_rows(c.addr)
+
+
+def optimize_program(program: Program, temp_prefix: str = "TMP") -> Program:
+    """Peephole pass: forward values through dead temporary D-rows.
+
+    AAP(x, t) ... AAP(t, y) with t a temp row used nowhere else becomes
+    AAP(x, y) — the sensed value lands in its consumer directly and the
+    D-group round-trip (one full AAP, ~49ns) disappears. Safe iff no command
+    in between reads or writes any wordline-row of y: the first ACTIVATE
+    restores x's rows identically in both versions, t is dead by
+    construction, and y's rows were untouched on the gap. Iterates to
+    fixpoint so chains of temps collapse.
+    """
+    cmds: List[Command] = list(program.commands)
+    changed = True
+    while changed:
+        changed = False
+        occ: Dict[str, List[int]] = {}
+        for idx, c in enumerate(cmds):
+            for a in _cmd_addrs(c):
+                if a.startswith(temp_prefix):
+                    occ.setdefault(a, []).append(idx)
+        for t, idxs in occ.items():
+            if len(idxs) != 2:
+                continue
+            i, j = idxs
+            ci, cj = cmds[i], cmds[j]
+            if not (isinstance(ci, AAP) and isinstance(cj, AAP)):
+                continue
+            if ci.addr2 != t or cj.addr1 != t:
+                continue
+            y_rows = _addr_rows(cj.addr2)
+            if any(y_rows & (_cmd_reads(c) | _cmd_writes(c))
+                   for c in cmds[i + 1:j]):
+                continue
+            cmds[i] = AAP(ci.addr1, cj.addr2)
+            del cmds[j]
+            changed = True
+            break
+    return Program(cmds, program.comment)
+
+
+def compile_expr(expr: Expr, dst: str, temp_prefix: str = "TMP",
+                 fuse: bool = False) -> CompileResult:
     """Lower an expression DAG to an AAP program.
 
     Strategy: post-order walk with hash-consing (CSE). Each interior node is
@@ -185,17 +385,31 @@ def compile_expr(expr: Expr, dst: str, temp_prefix: str = "TMP") -> CompileResul
     root is materialized directly into `dst` (dead-store elimination — no
     final copy). Temp rows are reference-counted and recycled so the peak
     temp-row footprint is reported (these consume D-group capacity).
+
+    With `fuse=True` the DAG first goes through `fuse_expr` and the emitted
+    command stream through `optimize_program` (see `compile_expr_fused`).
+    Both the rewritten and the original DAG are compiled and the shorter
+    program wins: a rewrite that breaks CSE sharing (e.g. a subexpression
+    consumed both plain and negated) can otherwise pessimize, so the
+    fused result is never longer than the unfused one by construction.
     """
+    if fuse:
+        fused_c = _compile_one(fuse_expr(expr), dst, temp_prefix, True)
+        plain_c = _compile_one(expr, dst, temp_prefix, True)
+        return fused_c if len(fused_c.program.commands) <= \
+            len(plain_c.program.commands) else plain_c
+    return _compile_one(expr, dst, temp_prefix, False)
+
+
+def _compile_one(expr: Expr, dst: str, temp_prefix: str,
+                 peephole: bool) -> CompileResult:
     commands: List[Command] = []
     memo: Dict[Tuple, str] = {}
     free_temps: List[str] = []
     n_temps = 0
     refcounts: Dict[Tuple, int] = {}
 
-    def key(e: Expr) -> Tuple:
-        if e.op == "row":
-            return ("row", e.row)
-        return (e.op,) + tuple(key(a) for a in e.args)
+    key = expr_key
 
     def count(e: Expr):
         k = key(e)
@@ -249,4 +463,21 @@ def compile_expr(expr: Expr, dst: str, temp_prefix: str = "TMP") -> CompileResul
         return dst_row
 
     emit(expr, dst)
-    return CompileResult(Program(commands, f"{dst} = <expr>"), n_temps)
+    prog = Program(commands, f"{dst} = <expr>")
+    if peephole:
+        prog = optimize_program(prog, temp_prefix)
+        n_temps = len({a for c in prog.commands for a in _cmd_addrs(c)
+                       if a.startswith(temp_prefix)})
+    return CompileResult(prog, n_temps)
+
+
+def compile_expr_fused(expr: Expr, dst: str,
+                       temp_prefix: str = "TMP") -> CompileResult:
+    """Fusing compiler: `compile_expr` plus DAG rewriting + peephole.
+
+    Never emits more commands than the unfused path (shorter-of-both by
+    construction) and strictly fewer whenever a rewrite or dead-temp
+    forwarding applies (e.g. `~(a^b)`: 9 -> 7, the 5-op majority form:
+    20 -> 4), computing bit-identical results throughout.
+    """
+    return compile_expr(expr, dst, temp_prefix, fuse=True)

@@ -121,12 +121,21 @@ class Subarray:
 
 
 def execute(program: Program, data: RowState, row_words: Optional[int] = None,
-            outputs: Optional[List[str]] = None) -> RowState:
+            outputs: Optional[List[str]] = None, n_banks: int = 1) -> RowState:
     """One-shot helper: run `program` over `data` rows, return named rows.
 
     Rows referenced by the program but missing from `data` (e.g. destination
     or temp rows) are implicitly created as zero rows.
+
+    `n_banks > 1` partitions each operand row word-wise across that many
+    independent subarray states and executes the program on all of them in
+    one vmapped dispatch (see `core.bankgroup`) — bit-identical results,
+    bank-parallel schedule.
     """
+    if n_banks > 1:
+        from repro.core import bankgroup
+
+        return bankgroup.execute_banked(program, data, n_banks, outputs)
     if row_words is None:
         row_words = next(iter(data.values())).shape[-1]
     sample = jnp.asarray(next(iter(data.values())))

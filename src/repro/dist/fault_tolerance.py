@@ -1,0 +1,124 @@
+"""Fault-tolerant training loop: checkpointed execution with failure
+recovery, plus an EMA-based straggler detector.
+
+`ResilientRunner` wraps a step function with periodic checkpointing and
+replay-from-last-checkpoint on (simulated or real) failures; a fresh runner
+pointed at the same checkpoint directory resumes where the previous job
+stopped — the crash/preemption story for long training runs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, List, Optional, Tuple
+
+from repro.checkpoint.checkpointer import Checkpointer
+
+
+class SimulatedFailure(RuntimeError):
+    """Injected failure (chaos testing); treated exactly like a real one."""
+
+
+@dataclasses.dataclass
+class RunReport:
+    """What happened during one `ResilientRunner.run`."""
+
+    steps_run: int = 0      # steps executed by THIS run (incl. replays)
+    failures: int = 0
+    restores: int = 0
+    checkpoints: int = 0
+    timeline: List[str] = dataclasses.field(default_factory=list)
+
+
+class ResilientRunner:
+    """Run `step_fn(state, step, data_fn(step))` to `total_steps` with
+    checkpoints every `ckpt_every` steps and recovery on failure.
+
+    On failure: restore the last checkpoint (or the initial state if none
+    exists yet) and replay from there. On start: resume from the latest
+    checkpoint in the directory if present (`timeline[0] == "resume@N"`).
+    A final checkpoint is always written at `total_steps` so a subsequent
+    job resumes exactly at the end of this one.
+    """
+
+    def __init__(self, step_fn: Callable, data_fn: Callable,
+                 checkpointer: Checkpointer, ckpt_every: int = 100,
+                 max_restores: int = 16):
+        self.step_fn = step_fn
+        self.data_fn = data_fn
+        self.ck = checkpointer
+        self.ckpt_every = ckpt_every
+        self.max_restores = max_restores
+
+    def _restore(self, init_state, rep: RunReport, event: str
+                 ) -> Tuple[int, Any]:
+        latest = self.ck.latest_step()
+        if latest is None:
+            rep.timeline.append(f"{event}@start")
+            return 0, init_state
+        step, state, _ = self.ck.restore(init_state)
+        rep.timeline.append(f"{event}@{step}")
+        return step, state
+
+    def run(self, init_state: Any, total_steps: int,
+            failure_injector: Optional[Callable[[int], None]] = None
+            ) -> Tuple[Any, RunReport]:
+        rep = RunReport()
+        state = init_state
+        step = 0
+        if self.ck.latest_step() is not None:
+            step, state = self._restore(init_state, rep, "resume")
+            rep.restores += 1
+        restores_left = self.max_restores
+        while step < total_steps:
+            try:
+                if failure_injector is not None:
+                    failure_injector(step)
+                batch = self.data_fn(step)
+                state, _metrics = self.step_fn(state, step, batch)
+                rep.steps_run += 1
+                step += 1
+                if step % self.ckpt_every == 0 and step < total_steps:
+                    self.ck.save(step, state)
+                    rep.checkpoints += 1
+                    rep.timeline.append(f"ckpt@{step}")
+            except Exception as e:  # noqa: BLE001 - any failure is recoverable
+                rep.failures += 1
+                rep.timeline.append(f"failure@{step}:{type(e).__name__}")
+                restores_left -= 1
+                if restores_left < 0:
+                    raise
+                step, state = self._restore(init_state, rep, "restore")
+                rep.restores += 1
+        self.ck.save(total_steps, state)
+        rep.checkpoints += 1
+        rep.timeline.append(f"ckpt@{total_steps}")
+        self.ck.wait()
+        return state, rep
+
+
+class StragglerMonitor:
+    """EMA step-time tracker flagging outlier steps as stragglers.
+
+    `observe(step, seconds)` returns True when the step exceeds
+    `threshold` x the EMA. Outliers do NOT update the EMA (one slow step
+    must not mask the next), and the first `warmup` observations only seed
+    the average.
+    """
+
+    def __init__(self, alpha: float = 0.1, threshold: float = 3.0,
+                 warmup: int = 5):
+        self.alpha = alpha
+        self.threshold = threshold
+        self.warmup = warmup
+        self.ema: Optional[float] = None
+        self.n = 0
+
+    def observe(self, step: int, seconds: float) -> bool:
+        self.n += 1
+        if self.ema is None:
+            self.ema = seconds
+            return False
+        if self.n > self.warmup and seconds > self.threshold * self.ema:
+            return True  # straggler; EMA untouched
+        self.ema = self.alpha * seconds + (1 - self.alpha) * self.ema
+        return False

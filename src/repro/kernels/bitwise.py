@@ -50,6 +50,37 @@ def _kernel(op: str, n_in: int):
 
 @functools.partial(jax.jit, static_argnums=(0,),
                    static_argnames=("block_rows", "block_cols"))
+def banked_bitwise_kernel(op: str, *args, block_rows: int = SUBLANE,
+                          block_cols: int = 2048) -> jax.Array:
+    """Bank-gridded variant: args are (n_banks, rows, words) uint32.
+
+    The leading grid dimension is the bank axis — each grid step touches one
+    bank's row-block only, mirroring the hardware's per-bank independence
+    (one `BankGroup` dispatch = one kernel launch, no cross-bank traffic).
+    """
+    arity, _ = _BODIES[op]
+    assert len(args) == arity, (op, len(args))
+    nb, r, w = args[0].shape
+    br = pick_block(r, block_rows, SUBLANE)
+    bw = pick_block(w, block_cols, LANE)
+    rp, wp = round_up(r, br), round_up(w, bw)
+    padded = tuple(pad_to(jnp.asarray(a, jnp.uint32), (nb, rp, wp))
+                   for a in args)
+    grid = (nb, rp // br, wp // bw)
+    spec = pl.BlockSpec((1, br, bw), lambda b, i, j: (b, i, j))
+    out = pl.pallas_call(
+        _kernel(op, arity),
+        grid=grid,
+        in_specs=[spec] * arity,
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((nb, rp, wp), jnp.uint32),
+        interpret=use_interpret(),
+    )(*padded)
+    return out[:, :r, :w]
+
+
+@functools.partial(jax.jit, static_argnums=(0,),
+                   static_argnames=("block_rows", "block_cols"))
 def bitwise_kernel(op: str, *args, block_rows: int = SUBLANE,
                    block_cols: int = 2048) -> jax.Array:
     """args: 2-D uint32 arrays (rows, words), identical shapes."""

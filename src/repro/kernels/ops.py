@@ -5,7 +5,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref
-from repro.kernels.bitwise import bitwise_kernel
+from repro.kernels.bitwise import banked_bitwise_kernel, bitwise_kernel
 from repro.kernels.bittranspose import (bit_transpose_kernel,
                                         bit_untranspose_kernel)
 from repro.kernels.bitweaving import bitweaving_scan_kernel
@@ -22,6 +22,37 @@ def bitwise(op: str, *args: jax.Array, **kw) -> jax.Array:
         out = bitwise_kernel(op, *(a[None, :] for a in args), **kw)
         return out[0]
     return bitwise_kernel(op, *args, **kw)
+
+
+def bitwise_banked(op: str, *args: jax.Array, n_banks: int = 1,
+                   **kw) -> jax.Array:
+    """Bank-parallel bitwise op: operands sharded word-wise over `n_banks`.
+
+    1-D (words,) or 2-D (rows, words) uint32 operands are partitioned with
+    `core.bankgroup.shard_words`, evaluated with the bank-gridded kernel
+    (grid leading dim = bank), and reassembled. Bit-identical to
+    `bitwise(op, *args)` for every op and bank count.
+    """
+    from repro.core.bankgroup import shard_words, unshard_words
+    from repro.kernels.common import (SUBLANE, pad_to, round_up,
+                                      use_interpret)
+
+    args = tuple(jnp.asarray(a, jnp.uint32) for a in args)
+    orig = args[0].shape
+    if args[0].ndim == 1:
+        # fold the flat vector into SUBLANE rows (elementwise ops are
+        # layout-invariant) so the kernel's row-tile padding costs nothing
+        wp = round_up(orig[0], SUBLANE)
+        args = tuple(pad_to(a, (wp,)).reshape(SUBLANE, wp // SUBLANE)
+                     for a in args)
+    sharded = tuple(shard_words(a, n_banks) for a in args)
+    if "block_cols" not in kw and use_interpret():
+        # off-TPU there is no VMEM budget and interpret-mode grid steps are
+        # the cost driver: one block per bank.
+        kw["block_cols"] = sharded[0].shape[-1]
+    out = banked_bitwise_kernel(op, *sharded, **kw)
+    flat = unshard_words(out, args[0].shape[-1])
+    return flat.reshape(-1)[:orig[0]] if len(orig) == 1 else flat
 
 
 def majority(planes: jax.Array, threshold: int | None = None, **kw) -> jax.Array:

@@ -72,9 +72,9 @@ def _parse_operands(line: str, opcode: str) -> List[str]:
     args = []
     cur = []
     for ch in line[start:]:
-        if ch == "(":
+        if ch in "([{":
             depth += 1
-        elif ch == ")":
+        elif ch in ")]}":
             depth -= 1
             if depth == 0:
                 break
@@ -88,7 +88,9 @@ def _parse_operands(line: str, opcode: str) -> List[str]:
     out = []
     for a in args:
         a = a.strip()
-        m = re.match(r"%?([\w.\-]+)", a)
+        # operands may carry an inline type ("f32[64,32]{1,0} %Arg_0.1") in
+        # some XLA dump versions — the %-prefixed token is the name
+        m = re.search(r"%([\w.\-]+)\s*$", a) or re.match(r"%?([\w.\-]+)", a)
         if m:
             out.append(m.group(1))
     return out

@@ -23,8 +23,20 @@ def _use_kernel(x: jax.Array, force: Optional[bool]) -> bool:
     return x.ndim == 2 and x.size >= _KERNEL_MIN_WORDS
 
 
-def _dispatch(op: str, *args: jax.Array, use_kernel: Optional[bool] = None):
+def _dispatch(op: str, *args: jax.Array, use_kernel: Optional[bool] = None,
+              banks: int = 1):
+    """Route one bulk op: banked kernel grid, flat kernel, or jnp fallback.
+
+    `banks > 1` shards the operands word-wise across a bank grid
+    (`core.bankgroup` partitioning + the bank-gridded Pallas kernel) — the
+    software analog of running the op in `banks` DRAM banks concurrently.
+    Results are bit-identical across every path.
+    """
     args = tuple(jnp.asarray(a, jnp.uint32) for a in args)
+    if banks > 1:
+        from repro.kernels import ops as kops
+
+        return kops.bitwise_banked(op, *args, n_banks=banks)
     if _use_kernel(args[0], use_kernel):
         from repro.kernels import ops as kops
 

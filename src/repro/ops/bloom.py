@@ -31,14 +31,26 @@ def _hashes(keys: jax.Array, k: int, m_bits: int) -> jax.Array:
 
 @dataclasses.dataclass
 class BloomFilter:
+    """Bloom filter over an m-bit packed row (paper §8.4.4 "approximate
+    statistics").
+
+    `bits` is the filter's backing bitvector (one subarray row in the
+    paper's deployment); `k` is the number of hash probes per key.
+    Membership updates are scatter/gather; the distributed-aggregation
+    path (`merge`) is a bulk OR, i.e. one Buddy AAP program per 8 KB row.
+    """
+
     bits: BitVector
     k: int
 
     @classmethod
     def create(cls, m_bits: int, k: int = 4) -> "BloomFilter":
+        """Empty filter of `m_bits` bits with `k` probes per key."""
         return cls(BitVector.zeros(m_bits), k)
 
     def insert(self, keys: jax.Array) -> "BloomFilter":
+        """Set the k probe bits of every key (functional — returns a new
+        filter; duplicates are harmless)."""
         pos = _hashes(keys, self.k, self.bits.n_bits).reshape(-1)
         flat = jnp.zeros((self.bits.n_bits,), jnp.uint8).at[pos].set(1)
         from repro.core.bitplane import pack_bits
@@ -62,4 +74,6 @@ class BloomFilter:
         return BloomFilter(BitVector(words, self.bits.n_bits), self.k)
 
     def fill_ratio(self) -> jax.Array:
+        """Fraction of set bits — drives the false-positive-rate estimate
+        fpr ~= fill_ratio ** k."""
         return self.bits.popcount() / self.bits.n_bits

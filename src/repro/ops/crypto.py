@@ -36,4 +36,6 @@ def xor_encrypt(plaintext: jax.Array, key: jax.Array) -> jax.Array:
     return bitwise_xor(plaintext, ks)
 
 
-xor_decrypt = xor_encrypt
+def xor_decrypt(ciphertext: jax.Array, key: jax.Array) -> jax.Array:
+    """Inverse of `xor_encrypt` — the same XOR pass (involution, §8.4.2)."""
+    return xor_encrypt(ciphertext, key)

@@ -29,6 +29,11 @@ class VerticalColumn:
 
     @classmethod
     def encode(cls, values: jax.Array, n_bits: int) -> "VerticalColumn":
+        """Transpose `values` (< 2**n_bits) into vertical bit planes.
+
+        Tail positions are padded with an out-of-range sentinel so range
+        predicates never select them.
+        """
         values = jnp.asarray(values, jnp.uint32)
         n = values.shape[0]
         pad = (-n) % 32
@@ -62,3 +67,53 @@ def scan_count(values: jax.Array, n_bits: int, lo: int, hi: int) -> jax.Array:
     """select count(*) from T where lo <= val <= hi (one-shot)."""
     col = VerticalColumn.encode(values, n_bits)
     return col.scan(lo, hi).popcount()
+
+
+# ---------------------------------------------------------------------------
+# In-DRAM lowering: the range predicate as a fusable expression DAG
+# ---------------------------------------------------------------------------
+
+
+def range_scan_expr(n_bits: int, lo: int, hi: int, plane_prefix: str = "P"):
+    """The predicate lo <= v <= hi as a boolean expression DAG over plane
+    rows `P0..P{n_bits-1}` (LSB-first, one D-group row per bit plane).
+
+    This is the multi-term-predicate path of the fusing compiler: feed the
+    returned `Expr` to `core.compiler.compile_expr_fused` and the whole
+    scan lowers to ONE minimized AAP program (constants folded at build
+    time, shared eq-prefixes CSE'd, `eq & ~P` terms fused to ANDNOT).
+    Semantics match `kernels.ref.bitweaving_scan` bit-for-bit (asserted by
+    tests/test_compiler.py).
+    """
+    from repro.core.compiler import Expr
+
+    planes = [Expr.of(f"{plane_prefix}{j}") for j in range(n_bits)]
+
+    def cmp_const(c: int):
+        """(lt, eq) exprs vs constant c, MSB->LSB; None folds 0/1 consts."""
+        lt, eq = None, None
+        for j in range(n_bits - 1, -1, -1):
+            pj = planes[j]
+            if (c >> j) & 1:
+                term = ~pj if eq is None else eq & ~pj
+                lt = term if lt is None else lt | term
+                eq = pj if eq is None else eq & pj
+            else:
+                eq = ~pj if eq is None else eq & ~pj
+        return lt, eq
+
+    lt_lo, _ = cmp_const(lo)           # v <  lo
+    lt_hi, eq_hi = cmp_const(hi)       # v <  hi, v == hi
+    le_hi = eq_hi if lt_hi is None else lt_hi | eq_hi
+    if lt_lo is None:                  # lo == 0: lower bound always holds
+        return le_hi
+    return le_hi & ~lt_lo
+
+
+def compile_range_scan(n_bits: int, lo: int, hi: int, dst: str = "OUT",
+                       plane_prefix: str = "P"):
+    """Fused AAP program for the range scan (see `range_scan_expr`)."""
+    from repro.core.compiler import compile_expr_fused
+
+    return compile_expr_fused(range_scan_expr(n_bits, lo, hi, plane_prefix),
+                              dst)

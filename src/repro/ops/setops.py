@@ -1,5 +1,11 @@
 """Bitvector set data structure (paper §8.3): constant-time insert/lookup,
-bulk union/intersection/difference as row-wide bitwise ops."""
+bulk union/intersection/difference as row-wide bitwise ops.
+
+The bulk merges accept `banks > 1` to run over the bank-parallel path
+(`core.bankgroup` word-sharding + the bank-gridded kernel) — same results,
+N-bank schedule; this is the set-operation workload of Fig. 12 scaled the
+way §7 scales Fig. 9.
+"""
 from __future__ import annotations
 
 import dataclasses
@@ -9,6 +15,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.bitplane import BitVector, n_words
+from repro.ops.bitwise import andnot, bitwise_and, bitwise_or
 
 
 @dataclasses.dataclass
@@ -42,22 +49,39 @@ class BitSet:
     def contains(self, e) -> jax.Array:
         return (self.bits.words[e // 32] >> (e % 32)) & 1
 
-    def union(self, *others: "BitSet") -> "BitSet":
+    def union(self, *others: "BitSet", banks: int = 1) -> "BitSet":
+        """Multi-way set union — one bulk OR per operand."""
+        if banks > 1:
+            return self._merge("or", others, banks)
         out = self.bits
         for o in others:
             out = out | o.bits
         return BitSet(out)
 
-    def intersection(self, *others: "BitSet") -> "BitSet":
+    def intersection(self, *others: "BitSet", banks: int = 1) -> "BitSet":
+        """Multi-way set intersection — one bulk AND per operand."""
+        if banks > 1:
+            return self._merge("and", others, banks)
         out = self.bits
         for o in others:
             out = out & o.bits
         return BitSet(out)
 
-    def difference(self, *others: "BitSet") -> "BitSet":
+    def difference(self, *others: "BitSet", banks: int = 1) -> "BitSet":
+        """Set difference — one fused ANDNOT per operand."""
+        if banks > 1:
+            return self._merge("andnot", others, banks)
         out = self.bits.words
         for o in others:
             out = out & ~o.bits.words
+        return BitSet(BitVector(out, self.domain))
+
+    def _merge(self, op: str, others: Sequence["BitSet"],
+               banks: int) -> "BitSet":
+        fn = {"or": bitwise_or, "and": bitwise_and, "andnot": andnot}[op]
+        out = self.bits.words
+        for o in others:
+            out = fn(out, o.bits.words, banks=banks)
         return BitSet(BitVector(out, self.domain))
 
     def cardinality(self) -> jax.Array:

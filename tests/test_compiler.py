@@ -1,10 +1,11 @@
 """Expression compiler: arbitrary DAGs lower to correct AAP programs with
-CSE + dead-store elimination."""
+CSE + dead-store elimination, and the fusion pass emits strictly smaller
+programs with bit-identical semantics."""
 import numpy as np
 import pytest
 
 from repro.core import compiler, engine
-from repro.core.compiler import Expr, maj
+from repro.core.compiler import Expr, compile_expr_fused, fuse_expr, maj
 
 RNG = np.random.default_rng(7)
 W = 16
@@ -101,3 +102,131 @@ def test_aap_counts_match_paper():
         assert (p.n_aap, p.n_ap) == (naap, nap), op
     p = compiler.op_program("not", ["D0"], "D1")
     assert (p.n_aap, p.n_ap) == (2, 0)
+
+
+# ---------------------------------------------------------------------------
+# fusion pass
+# ---------------------------------------------------------------------------
+
+
+def _random_exprs(n_rows=4):
+    """A zoo of composite DAGs over D0..D{n-1} with their jnp oracles."""
+    es = [Expr.of(f"D{i}") for i in range(n_rows)]
+    a, b, c, d = es
+
+    def o(data):
+        return [data[f"D{i}"] for i in range(n_rows)]
+
+    return [
+        (~(a ^ b), lambda A, B, C, D: ~(A ^ B)),
+        ((a & b) | (b & c) | (c & a), lambda A, B, C, D: (A & B) | (B & C) | (C & A)),
+        (a & ~b, lambda A, B, C, D: A & ~B),
+        (~(a & b), lambda A, B, C, D: ~(A & B)),
+        (~a & ~b, lambda A, B, C, D: ~(A | B)),
+        ((a & ~b) | (~a & b), lambda A, B, C, D: A ^ B),
+        ((a & b) | (~a & ~b), lambda A, B, C, D: ~(A ^ B)),
+        (((a & b) | ~(c ^ d)) ^ (a | ~d), lambda A, B, C, D: ((A & B) | ~(C ^ D)) ^ (A | ~D)),
+        (~~~(a | (b & ~c)), lambda A, B, C, D: ~(A | (B & ~C))),
+        (maj(a ^ b, b | c, ~d), lambda A, B, C, D:
+         ((A ^ B) & (B | C)) | ((B | C) & ~D) | (~D & (A ^ B))),
+    ]
+
+
+def test_fused_equals_unfused_on_random_inputs():
+    """Regression: fusion must never change semantics."""
+    rng = np.random.default_rng(123)
+    for trial in range(3):
+        data = {f"D{i}": rng.integers(0, 2**32, W, dtype=np.uint32)
+                for i in range(4)}
+        A, B, C, D = (data[f"D{i}"] for i in range(4))
+        for expr, oracle in _random_exprs():
+            r_u = compiler.compile_expr(expr, "OUT")
+            r_f = compile_expr_fused(expr, "OUT")
+            out_u = np.asarray(
+                engine.execute(r_u.program, data, outputs=["OUT"])["OUT"])
+            out_f = np.asarray(
+                engine.execute(r_f.program, data, outputs=["OUT"])["OUT"])
+            np.testing.assert_array_equal(out_f, out_u)
+            np.testing.assert_array_equal(out_f, oracle(A, B, C, D))
+            assert len(r_f.program.commands) <= len(r_u.program.commands)
+
+
+def test_fusion_strictly_fewer_commands_xnor_and_maj3():
+    """Acceptance: fused < unfused for xnor and maj3 composite forms."""
+    a, b, c = Expr.of("D0"), Expr.of("D1"), Expr.of("D2")
+    xnor = ~(a ^ b)
+    r_u, r_f = compiler.compile_expr(xnor, "OUT"), compile_expr_fused(xnor, "OUT")
+    assert len(r_f.program.commands) < len(r_u.program.commands)
+    assert r_f.program.n_aap < r_u.program.n_aap
+    # fused xnor is exactly the Fig. 8 primitive: 5 AAP + 2 AP
+    assert (r_f.program.n_aap, r_f.program.n_ap) == (5, 2)
+
+    maj3 = (a & b) | (b & c) | (c & a)
+    r_u, r_f = compiler.compile_expr(maj3, "OUT"), compile_expr_fused(maj3, "OUT")
+    assert len(r_f.program.commands) < len(r_u.program.commands)
+    # fused majority is one native TRA program: 4 AAPs
+    assert (r_f.program.n_aap, r_f.program.n_ap) == (4, 0)
+
+
+def test_fuse_expr_rewrites():
+    a, b, c = Expr.of("D0"), Expr.of("D1"), Expr.of("D2")
+    assert fuse_expr(~(a ^ b)).op == "xnor"
+    assert fuse_expr(~(a & b)).op == "nand"
+    assert fuse_expr(~(a | b)).op == "nor"
+    assert fuse_expr(~~a).op == "row"
+    assert fuse_expr(a & ~b).op == "andnot"
+    assert fuse_expr(~a & ~b).op == "nor"
+    assert fuse_expr(~a | ~b).op == "nand"
+    assert fuse_expr((a & ~b) | (~a & b)).op == "xor"
+    assert fuse_expr((a & b) | (~a & ~b)).op == "xnor"
+    m = fuse_expr((a & b) | (b & c) | (c & a))
+    assert m.op == "maj3" and len(m.args) == 3
+    # non-majority 3-term or must NOT collapse
+    nm = fuse_expr((a & b) | (b & c) | (a & b))
+    assert nm.op != "maj3"
+
+
+def test_peephole_forwards_dead_temps():
+    """Chained ops route intermediates through B-group rows directly."""
+    a, b, c = Expr.of("D0"), Expr.of("D1"), Expr.of("D2")
+    expr = (a & b) & c
+    r_u = compiler.compile_expr(expr, "OUT")
+    r_f = compile_expr_fused(expr, "OUT")
+    assert len(r_f.program.commands) < len(r_u.program.commands)
+    assert r_f.n_temp_rows == 0  # the D-group round-trip disappeared
+    data = {f"D{i}": np.arange(W, dtype=np.uint32) * (i + 3) for i in range(3)}
+    out = np.asarray(engine.execute(r_f.program, data, outputs=["OUT"])["OUT"])
+    oracle = data["D0"] & data["D1"] & data["D2"]
+    np.testing.assert_array_equal(out, oracle)
+
+
+def test_andnot_program_semantics():
+    data = {"D0": RNG.integers(0, 2**32, W, dtype=np.uint32),
+            "D1": RNG.integers(0, 2**32, W, dtype=np.uint32)}
+    prog = compiler.op_program("andnot", ["D0", "D1"], "D2")
+    out = engine.execute(prog, data, outputs=["D2"])["D2"]
+    np.testing.assert_array_equal(np.asarray(out), data["D0"] & ~data["D1"])
+    # sources preserved
+    rows_after = engine.execute(prog, data)
+    np.testing.assert_array_equal(np.asarray(rows_after["D0"]), data["D0"])
+    np.testing.assert_array_equal(np.asarray(rows_after["D1"]), data["D1"])
+
+
+def test_fused_range_scan_matches_ref():
+    """Multi-term predicate DAGs (ops.predicate) compile fused + correct."""
+    from repro.kernels import ref
+    from repro.ops.predicate import compile_range_scan, range_scan_expr
+
+    rng = np.random.default_rng(5)
+    n_bits, n = 6, 64
+    vals = rng.integers(0, 1 << n_bits, (n,), dtype=np.uint32)
+    planes = np.asarray(ref.bit_transpose(vals, n_bits))
+    data = {f"P{j}": planes[j] for j in range(n_bits)}
+    for lo, hi in [(0, 63), (5, 40), (17, 17), (40, 5)]:
+        r_f = compile_range_scan(n_bits, lo, hi)
+        r_u = compiler.compile_expr(range_scan_expr(n_bits, lo, hi), "OUT")
+        assert len(r_f.program.commands) <= len(r_u.program.commands)
+        out = np.asarray(
+            engine.execute(r_f.program, data, outputs=["OUT"])["OUT"])
+        np.testing.assert_array_equal(
+            out, np.asarray(ref.bitweaving_scan(planes, lo, hi, n_bits)))

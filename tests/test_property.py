@@ -1,7 +1,10 @@
 """Hypothesis property tests on the system's core invariants."""
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip("hypothesis", reason="hypothesis not installed")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import compiler, engine
 from repro.core.bitplane import pack_bits, unpack_bits
