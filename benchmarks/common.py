@@ -1,17 +1,37 @@
-"""Benchmark harness helpers: timing + CSV row emission.
+"""Benchmark harness helpers: timing + CSV row emission + JSON results.
 
 Every benchmark module exposes run() -> list of (name, us_per_call, derived)
 rows, where `derived` is the paper-comparable figure (speedup, GB/s, nJ/KB,
-...). run.py aggregates and prints the combined CSV.
+...). run.py aggregates and prints the combined CSV. Benchmarks that track
+the perf trajectory across PRs additionally write machine-readable
+`BENCH_<name>.json` files via `write_bench_json` (deterministic modeled
+numbers only — wall times vary by host and stay in the CSV).
 """
 from __future__ import annotations
 
+import json
+import pathlib
 import time
-from typing import Callable, List, Tuple
+from typing import Callable, Dict, List, Optional, Tuple
 
 import jax
 
 Row = Tuple[str, float, str]
+
+BENCH_DIR = pathlib.Path(__file__).resolve().parent
+
+
+def write_bench_json(bench: str, rows: List[Dict],
+                     directory: Optional[pathlib.Path] = None) -> pathlib.Path:
+    """Write BENCH_<bench>.json: machine-readable per-row results.
+
+    Each row is a dict with at least `name`; perf rows carry `bytes`,
+    `modeled_ns`, and `speedup` so successive PRs can diff the trajectory.
+    """
+    path = pathlib.Path(directory or BENCH_DIR) / f"BENCH_{bench}.json"
+    payload = {"bench": bench, "rows": rows}
+    path.write_text(json.dumps(payload, indent=2, sort_keys=True) + "\n")
+    return path
 
 
 def time_call(fn: Callable, *args, iters: int = 5, warmup: int = 2) -> float:

@@ -21,7 +21,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import Row, emit, time_call
+from benchmarks.common import Row, emit, time_call, write_bench_json
 from repro.core import bankgroup, compiler, timing
 from repro.kernels import ref
 from repro.ops import bitwise as obw
@@ -64,6 +64,7 @@ def run(e2e_banks: int = E2E_BANKS) -> list[Row]:
         rows.append((f"fig9/{op}", us, derived))
 
     # -- end-to-end: same workload, 1 bank vs N banks ------------------------
+    jrows: list[dict] = []
     for op in OPS:
         args = (a,) if op == "not" else (a, b)
         fn = _FNS[op]
@@ -88,6 +89,17 @@ def run(e2e_banks: int = E2E_BANKS) -> list[Row]:
             f"{bankgroup.banked_throughput_gbps(n_blocks, e2e_banks, prog):.1f} "
             f"bank_speedup={speedup:.1f}x blocks={n_blocks} "
             f"bitwise_match=yes"))
+        jrows.append({
+            "name": f"fig9_e2e/{op}",
+            "bytes": N_BYTES,
+            "modeled_ns": sn.total_ns,
+            "speedup": speedup,
+            "modeled_ns_1bank": s1.total_ns,
+            "n_banks": e2e_banks,
+            "gbps": bankgroup.banked_throughput_gbps(n_blocks, e2e_banks,
+                                                     prog),
+        })
+    write_bench_json("fig9_throughput", jrows)
 
     r1g = [t["buddy_1bank"] / t["gtx745"] for t in table.values()]
     r4g = [t["buddy_4bank"] / t["gtx745"] for t in table.values()]

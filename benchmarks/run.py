@@ -17,6 +17,7 @@ SECTIONS = [
     "fig10_bitmap",
     "fig11_bitweaving",
     "fig12_setops",
+    "serve_qps",
     "extra_apps",
     "perf_summary",
 ]

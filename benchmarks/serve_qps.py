@@ -1,0 +1,94 @@
+"""Query-serving benchmark: QPS, latency percentiles, plan-cache hit rate.
+
+Replays the synthetic multi-tenant §8 stream (bitmap-index weekly-activity
+queries, BitWeaving range-scan predicates, set intersections —
+`repro.service.workload`) through the batching scheduler and reports:
+
+  * modeled QPS and p50/p99 latency of the 8-bank batched configuration,
+  * the plan-cache hit rate over the repeated-query stream (> 50%), and
+  * the 8-bank vs 1-bank modeled throughput ratio (>= 3x).
+
+Correctness is asserted inline: the batched scheduler's results must be
+bit-identical to sequential unbatched execution (fresh per-query compile,
+one engine run per query), for every query in the stream.
+
+Writes BENCH_serve_qps.json (machine-readable trajectory tracking).
+"""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import Row, emit, write_bench_json
+from repro.service import (WorkloadSpec, build_service, query_stream,
+                           results_bit_identical, run_queries_unbatched)
+
+N_BANKS = 8
+
+
+def run(spec: WorkloadSpec = WorkloadSpec()) -> list[Row]:
+    assert spec.n_queries >= 64, "stream must exercise a real batch"
+    rows: list[Row] = []
+    jrows: list[dict] = []
+    stream_bytes = spec.n_queries * spec.domain_bits // 8
+
+    # -- batched, 8 banks ----------------------------------------------------
+    svc = build_service(spec, n_banks=N_BANKS)
+    queries = query_stream(spec, svc)
+    t0 = time.perf_counter()
+    rep = svc.query_batch(queries)
+    wall_us = (time.perf_counter() - t0) * 1e6
+
+    # -- batched, 1 bank (same stream, same service logic) -------------------
+    svc1 = build_service(spec, n_banks=1)
+    rep1 = svc1.query_batch(query_stream(spec, svc1))
+
+    # -- sequential unbatched reference: bit-identity ------------------------
+    ref = run_queries_unbatched(svc.catalog, queries)
+    assert results_bit_identical(rep.results, ref.results), \
+        "batched results differ from sequential unbatched reference"
+    assert results_bit_identical(rep.results, rep1.results), \
+        "8-bank results differ from 1-bank results"
+
+    stats = svc.stats()
+    hit_rate = stats["plan_cache_hit_rate"]
+    speedup = rep1.makespan_ns / rep.makespan_ns
+    assert hit_rate > 0.5, f"plan-cache hit rate {hit_rate:.2f} <= 0.5"
+    assert speedup >= 3.0, f"8-bank speedup {speedup:.2f}x < 3x"
+
+    p50, p99 = rep.latency_percentile_ns(50), rep.latency_percentile_ns(99)
+    rows.append((
+        f"serve_qps/stream{spec.n_queries}", wall_us,
+        f"qps={rep.qps:.0f} p50_us={p50 / 1e3:.1f} p99_us={p99 / 1e3:.1f} "
+        f"hit_rate={hit_rate:.2f} plans={int(stats['plans_cached'])} "
+        f"b1_ms={rep1.makespan_ns / 1e6:.3f} "
+        f"b{N_BANKS}_ms={rep.makespan_ns / 1e6:.3f} "
+        f"bank_speedup={speedup:.1f}x bitwise_match=yes"))
+    jrows.append({
+        "name": f"serve_qps/stream{spec.n_queries}",
+        "bytes": stream_bytes,
+        "modeled_ns": rep.makespan_ns,
+        "speedup": speedup,
+        "qps": rep.qps,
+        "p50_ns": p50,
+        "p99_ns": p99,
+        "plan_cache_hit_rate": hit_rate,
+        "n_banks": N_BANKS,
+        "energy_nj": stats["total_energy_nj"],
+    })
+
+    # per-tenant latency breakdown (multi-tenant fairness signal)
+    tenants = sorted({q.tenant for q in queries})
+    for t in tenants:
+        lats = sorted(r.latency_ns for r, q in zip(rep.results, queries)
+                      if q.tenant == t)
+        rows.append((
+            f"serve_qps/tenant_{t}", 0.0,
+            f"n={len(lats)} p50_us={lats[len(lats) // 2] / 1e3:.1f} "
+            f"max_us={lats[-1] / 1e3:.1f}"))
+
+    write_bench_json("serve_qps", jrows)
+    return rows
+
+
+if __name__ == "__main__":
+    emit(run(), header=True)

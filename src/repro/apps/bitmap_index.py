@@ -77,6 +77,67 @@ def weekly_active_query(db: UserDatabase) -> Tuple[jax.Array, jax.Array, Dict]:
 
 
 # ---------------------------------------------------------------------------
+# Service-client path: the same query served by repro.service
+# ---------------------------------------------------------------------------
+
+
+def week_or(w: int, prefix: str = "") -> str:
+    """The 7-day OR-tree query template for week `w`.
+
+    One definition shared by the app client below and the synthetic stream
+    (`repro.service.workload`): the plan-cache sharing between those two
+    paths depends on the template staying structurally identical.
+    """
+    return "(" + " | ".join(f"{prefix}w{w}d{d}" for d in range(7)) + ")"
+
+
+def build_query_service(db: UserDatabase, n_banks: int = 8):
+    """Register the database's bitmaps in a fresh `QueryService` catalog.
+
+    Daily activity bitmaps become rows `w{week}d{day}`, the attribute
+    bitmap becomes `male`; all co-located in one allocator affinity group
+    (they participate in every query together — §6.2.4 placement).
+    """
+    from repro.service import QueryService
+
+    svc = QueryService(n_banks=n_banks)
+    n_weeks = db.daily.shape[0]
+    for w in range(n_weeks):
+        for d in range(7):
+            svc.register(f"w{w}d{d}", db.daily[w, d], db.m_users,
+                         group="bitmaps")
+    svc.register("male", db.male, db.m_users, group="bitmaps")
+    return svc
+
+
+def weekly_active_query_service(db: UserDatabase, svc=None, n_banks: int = 8
+                                ) -> Tuple[int, jax.Array, Dict]:
+    """§8.1 query as a *service client*: one batch of catalog queries.
+
+    The n+1 aggregates go through the planner/plan-cache/scheduler stack
+    instead of direct functional calls — same workload, service path. The
+    per-week male filters share one canonical plan, so n-1 of them are plan
+    cache hits inside a single batch. Results are bit-identical to
+    `weekly_active_query` (asserted by tests/test_service.py).
+
+    Returns (n_active_every_week, per-week male actives, service stats).
+    """
+    from repro.service import Query
+
+    if svc is None:
+        svc = build_query_service(db, n_banks)
+    n_weeks = db.daily.shape[0]
+    every = " & ".join(week_or(w) for w in range(n_weeks))
+    batch = [Query(every, tenant="analytics")]
+    batch += [Query(f"{week_or(w)} & male", tenant="analytics")
+              for w in range(n_weeks)]
+    rep = svc.query_batch(batch)
+    n_every = rep.results[0].value
+    male_counts = jnp.asarray([r.value for r in rep.results[1:]])
+    return n_every, male_counts, svc.stats()
+
+
+# ---------------------------------------------------------------------------
 # End-to-end time model (Fig. 10)
 # ---------------------------------------------------------------------------
 

@@ -12,6 +12,8 @@ import dataclasses
 import math
 from typing import Dict, Sequence
 
+import jax.numpy as jnp
+
 from repro.apps.cost import DEFAULT_APP_SYSTEM, AppSystem
 
 DOMAIN = 1 << 19  # paper's element domain
@@ -71,3 +73,44 @@ def figure12_grid(k_sets: int = 15,
                   sizes: Sequence[int] = (16, 64, 256, 1024, 4096, 16384)
                   ) -> Dict[int, SetOpComparison]:
     return {m: compare(k_sets, m) for m in sizes}
+
+
+# ---------------------------------------------------------------------------
+# Service-client path: k-ary set algebra served by repro.service
+# ---------------------------------------------------------------------------
+
+_SET_OPS = {"union": " | ", "intersection": " & "}
+
+
+def setop_via_service(element_lists, domain: int, op: str = "intersection",
+                      n_banks: int = 8):
+    """§8.3 k-ary set op as a *service client*: one catalog query.
+
+    Each element list becomes a registered bitvector `s{i}`; the k-ary
+    union/intersection/difference is a single query expression, so the
+    whole merge compiles to one fused AAP program instead of k-1 calls.
+    Returns (result BitSet, QueryResult, functional-reference BitSet) —
+    the first and last are bit-identical (asserted by tests).
+    """
+    from repro.core.bitplane import BitVector
+    from repro.ops.setops import BitSet
+    from repro.service import MATERIALIZE, QueryService
+
+    sets = [BitSet.from_elements(jnp.asarray(e), domain)
+            for e in element_lists]
+    svc = QueryService(n_banks=n_banks)
+    for i, s in enumerate(sets):
+        svc.register(f"s{i}", s.bits, group="sets")
+    names = [f"s{i}" for i in range(len(sets))]
+    if op == "difference":
+        text = names[0] + "".join(f" & ~{n}" for n in names[1:])
+        ref = sets[0].difference(*sets[1:])
+    elif op in _SET_OPS:
+        text = _SET_OPS[op].join(names)
+        ref = (sets[0].union(*sets[1:]) if op == "union"
+               else sets[0].intersection(*sets[1:]))
+    else:
+        raise ValueError(f"unknown set op {op!r}")
+    r = svc.query(text, mode=MATERIALIZE)
+    result = BitSet(BitVector(jnp.asarray(r.value), domain))
+    return result, r, ref

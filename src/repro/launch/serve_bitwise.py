@@ -1,0 +1,73 @@
+"""Bulk-bitwise query-serving driver: replay a multi-tenant stream.
+
+    PYTHONPATH=src python -m repro.launch.serve_bitwise \
+        --tenants 4 --weeks 3 --queries 96 --banks 8
+
+Builds the synthetic §8 workload catalog (`repro.service.workload`), serves
+the query stream through the batching scheduler, and prints per-batch QPS,
+p50/p99 modeled latency, plan-cache hit rate, and energy — the interactive
+serving loop the ROADMAP's "heavy traffic" north star grows from.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+from repro.service import (WorkloadSpec, build_service, query_stream,
+                           results_bit_identical, run_queries_unbatched)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tenants", type=int, default=4)
+    ap.add_argument("--weeks", type=int, default=3)
+    ap.add_argument("--domain", type=int, default=1 << 12,
+                    help="bit domain (users / column length)")
+    ap.add_argument("--queries", type=int, default=96)
+    ap.add_argument("--banks", type=int, default=8)
+    ap.add_argument("--batches", type=int, default=3,
+                    help="replay the stream this many times (cache warm-up "
+                         "shows up as rising hit rate)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--verify", action="store_true",
+                    help="also run the sequential unbatched reference and "
+                         "assert bit-identical results")
+    args = ap.parse_args(argv)
+
+    spec = WorkloadSpec(n_tenants=args.tenants, n_weeks=args.weeks,
+                        domain_bits=args.domain, n_queries=args.queries,
+                        seed=args.seed)
+    svc = build_service(spec, n_banks=args.banks)
+    print(f"catalog: {len(svc.catalog)} vectors, "
+          f"domain={svc.catalog.n_bits} bits, banks={args.banks}")
+
+    for batch in range(args.batches):
+        queries = query_stream(
+            dataclasses.replace(spec, seed=spec.seed + batch), svc)
+        t0 = time.perf_counter()
+        rep = svc.query_batch(queries)
+        wall = time.perf_counter() - t0
+        stats = svc.stats()
+        print(f"batch {batch}: {len(queries)} queries in "
+              f"{rep.makespan_ns / 1e6:.3f} modeled ms "
+              f"(wall {wall * 1e3:.0f} ms) "
+              f"qps={rep.qps:.0f} "
+              f"p50={rep.latency_percentile_ns(50) / 1e3:.1f}us "
+              f"p99={rep.latency_percentile_ns(99) / 1e3:.1f}us "
+              f"hit_rate={stats['plan_cache_hit_rate']:.2f} "
+              f"plans={int(stats['plans_cached'])} "
+              f"energy={stats['total_energy_nj'] / 1e3:.1f}uJ")
+        if args.verify:
+            ref = run_queries_unbatched(svc.catalog, queries)
+            ok = results_bit_identical(rep.results, ref.results)
+            print(f"  verify: bit-identical={ok} "
+                  f"serial_ms={ref.makespan_ns / 1e6:.3f} "
+                  f"speedup={ref.makespan_ns / rep.makespan_ns:.1f}x")
+            if not ok:
+                return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -19,6 +19,30 @@ from repro.ops.transpose import to_vertical
 _KERNEL_MIN = 1 << 16
 
 
+def between_scan(planes: jax.Array, lo: int, hi: int, n_bits: int,
+                 use_kernel: Optional[bool] = None) -> jax.Array:
+    """Packed result words of lo <= v <= hi over vertical bit planes.
+
+    The public seam over `kernels.bitweaving`'s fused between-scan: one
+    streaming pass that keeps all four comparison states in registers
+    (vs the unfused reference, `kernels.ref.bitweaving_scan`, which walks
+    the planes once per bound). Dispatches to the Pallas kernel for large
+    columns and the jnp reference otherwise; bit-identical either way
+    (tests/test_ops.py). This is the service's range-scan fast path
+    (`repro.service.QueryService.range_scan_fast`).
+    """
+    planes = jnp.asarray(planes, jnp.uint32)
+    big = (planes.size >= _KERNEL_MIN // 32 if use_kernel is None
+           else use_kernel)
+    if big:
+        from repro.kernels import ops as kops
+
+        return kops.bitweaving_scan(planes, int(lo), int(hi), n_bits)
+    from repro.kernels import ref
+
+    return ref.bitweaving_scan(planes, int(lo), int(hi), n_bits)
+
+
 @dataclasses.dataclass
 class VerticalColumn:
     """An integer column in BitWeaving-V layout."""
@@ -46,18 +70,7 @@ class VerticalColumn:
     def scan(self, lo: int, hi: int, use_kernel: Optional[bool] = None
              ) -> BitVector:
         """Packed bitvector of lo <= v <= hi."""
-        big = (self.planes.size >= _KERNEL_MIN // 32 if use_kernel is None
-               else use_kernel)
-        if big:
-            from repro.kernels import ops as kops
-
-            words = kops.bitweaving_scan(self.planes, int(lo), int(hi),
-                                         self.n_bits)
-        else:
-            from repro.kernels import ref
-
-            words = ref.bitweaving_scan(self.planes, int(lo), int(hi),
-                                        self.n_bits)
+        words = between_scan(self.planes, lo, hi, self.n_bits, use_kernel)
         bv = BitVector(words, self.n_values)
         # mask tail padding
         return BitVector(words & bv._mask(), self.n_values)

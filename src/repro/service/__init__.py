@@ -1,0 +1,34 @@
+"""Bulk-bitwise query service: catalog, plan cache, batching scheduler.
+
+The serving layer above the paper's in-DRAM machine (ROADMAP north star:
+interactive query-shaped traffic over the bank group). Sub-modules:
+
+  catalog    — named bitvectors placed into subarray rows (DramAllocator)
+  planner    — query text -> Expr -> fused AAP program, memoized by the
+               structural `expr_key` of the canonicalized DAG
+  scheduler  — batches concurrent queries, groups them by shared plan into
+               stacked bank-group dispatches, models latency/energy
+  service    — the `QueryService` facade (register / query / materialize /
+               range_scan)
+  workload   — synthetic multi-tenant §8 query streams (bitmap analytics,
+               BitWeaving scans, set algebra) for benchmarks and serving
+"""
+from repro.service.catalog import Catalog, CatalogEntry, CatalogError
+from repro.service.planner import (BoundPlan, Plan, PlanCache, Planner,
+                                   QueryParseError, canonicalize, parse_query)
+from repro.service.scheduler import (MATERIALIZE, POPCOUNT, BatchReport,
+                                     Query, QueryResult, Scheduler,
+                                     results_bit_identical,
+                                     run_queries_unbatched)
+from repro.service.service import QueryService
+from repro.service.workload import WorkloadSpec, build_service, query_stream
+
+__all__ = [
+    "Catalog", "CatalogEntry", "CatalogError",
+    "BoundPlan", "Plan", "PlanCache", "Planner", "QueryParseError",
+    "canonicalize", "parse_query",
+    "MATERIALIZE", "POPCOUNT", "BatchReport", "Query", "QueryResult",
+    "Scheduler", "results_bit_identical", "run_queries_unbatched",
+    "QueryService",
+    "WorkloadSpec", "build_service", "query_stream",
+]

@@ -1,0 +1,243 @@
+"""Query planner: text -> Expr DAG -> fused AAP program, memoized.
+
+The planner turns a query string over catalog names (`"(mon | tue) & male"`)
+into a `core.compiler.Expr` DAG, *canonicalizes* the leaf names to
+positional inputs `IN0..INk`, and compiles the canonical DAG once with
+`compile_expr_fused`. Plans are memoized in a `PlanCache` keyed by the
+structural `expr_key` of the canonical DAG, so
+
+  * the same query twice compiles once (hit counter-verified by tests), and
+  * structurally identical queries over *different* catalog vectors share
+    one plan — e.g. every tenant's 7-way weekly OR-tree is one cached
+    program, which is also what lets the scheduler batch them into one
+    bank-group dispatch (the controller broadcasts a single AAP sequence;
+    each bank holds a different tenant's rows).
+
+A `Plan` carries the compiled program plus its derived costs: AAP count,
+per-row-block modeled latency (`core.timing`) and energy (`core.energy`).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple, Union
+
+from repro.core import energy as energy_model
+from repro.core import timing as timing_model
+from repro.core.commands import Program
+from repro.core.compiler import (CompileResult, Expr, compile_expr_fused,
+                                 expr_key)
+
+DST = "OUT"
+_IN_PREFIX = "IN"
+
+
+class QueryParseError(ValueError):
+    pass
+
+
+# ---------------------------------------------------------------------------
+# Parser: `~` > `&` > `^` > `|`, parens, maj(a,b,c); names may contain
+# word chars plus . / : - (tenant-scoped names like "t3/wed").
+# ---------------------------------------------------------------------------
+
+_TOKEN_RE = re.compile(r"\s*([A-Za-z_][\w./:-]*|[()&|^~,])")
+
+
+def _tokenize(text: str) -> List[str]:
+    tokens, pos = [], 0
+    while pos < len(text):
+        m = _TOKEN_RE.match(text, pos)
+        if not m:
+            if text[pos:].strip():
+                raise QueryParseError(
+                    f"bad character {text[pos:].strip()[0]!r} in query "
+                    f"{text!r}")
+            break
+        tokens.append(m.group(1))
+        pos = m.end()
+    return tokens
+
+
+def parse_query(text: str) -> Expr:
+    """Parse a query string over catalog names into an Expr DAG."""
+    tokens = _tokenize(text)
+    idx = 0
+
+    def peek() -> Optional[str]:
+        return tokens[idx] if idx < len(tokens) else None
+
+    def take(expected: Optional[str] = None) -> str:
+        nonlocal idx
+        if idx >= len(tokens):
+            raise QueryParseError(f"unexpected end of query {text!r}")
+        tok = tokens[idx]
+        if expected is not None and tok != expected:
+            raise QueryParseError(
+                f"expected {expected!r} but got {tok!r} in {text!r}")
+        idx += 1
+        return tok
+
+    def atom() -> Expr:
+        tok = take()
+        if tok == "(":
+            e = or_level()
+            take(")")
+            return e
+        if tok == "~":
+            return ~atom()
+        if tok == "maj" and peek() == "(":
+            take("(")
+            a = or_level()
+            take(",")
+            b = or_level()
+            take(",")
+            c = or_level()
+            take(")")
+            return Expr("maj3", (a, b, c))
+        if re.match(r"^[A-Za-z_]", tok):
+            return Expr.of(tok)
+        raise QueryParseError(f"unexpected token {tok!r} in {text!r}")
+
+    def and_level() -> Expr:
+        e = atom()
+        while peek() == "&":
+            take()
+            e = e & atom()
+        return e
+
+    def xor_level() -> Expr:
+        e = and_level()
+        while peek() == "^":
+            take()
+            e = e ^ and_level()
+        return e
+
+    def or_level() -> Expr:
+        e = xor_level()
+        while peek() == "|":
+            take()
+            e = e | xor_level()
+        return e
+
+    e = or_level()
+    if idx != len(tokens):
+        raise QueryParseError(f"trailing tokens {tokens[idx:]} in {text!r}")
+    return e
+
+
+# ---------------------------------------------------------------------------
+# Canonicalization: leaf rows -> IN0..INk in first-visit order
+# ---------------------------------------------------------------------------
+
+
+def canonicalize(expr: Expr) -> Tuple[Expr, List[str]]:
+    """Rename leaves to positional IN-names; returns (canonical, bindings).
+
+    `bindings[i]` is the catalog row that canonical input `IN{i}` stands
+    for. Repeated leaves map to the same input, so structure is preserved
+    and the compiler's CSE still sees shared subexpressions.
+    """
+    order: Dict[str, int] = {}
+
+    def go(e: Expr) -> Expr:
+        if e.op == "row":
+            if e.row not in order:
+                order[e.row] = len(order)
+            return Expr.of(f"{_IN_PREFIX}{order[e.row]}")
+        return Expr(e.op, tuple(go(a) for a in e.args))
+
+    canon = go(expr)
+    return canon, list(order)
+
+
+@dataclasses.dataclass(frozen=True)
+class Plan:
+    """A compiled, costed query plan over canonical inputs IN0..INk."""
+
+    key: Tuple                      # expr_key of the canonical DAG
+    program: Program                # writes DST, reads IN0..INk
+    n_inputs: int
+    n_temp_rows: int
+    latency_ns_per_block: float     # one 8KB-row-block execution
+    energy_nj_per_block: float
+
+    @property
+    def n_aaps(self) -> int:
+        return self.program.n_aap
+
+
+@dataclasses.dataclass
+class PlanCache:
+    """expr_key -> Plan memo with hit/miss counters."""
+
+    timing: timing_model.DramTiming = timing_model.DDR3_1600
+    energy: energy_model.EnergyModel = energy_model.DEFAULT_ENERGY
+
+    def __post_init__(self):
+        self._plans: Dict[Tuple, Plan] = {}
+        self.hits = 0
+        self.misses = 0
+
+    def __len__(self) -> int:
+        return len(self._plans)
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0
+
+    def lookup(self, canon: Expr) -> Tuple[Plan, bool]:
+        """Return (plan, was_hit); compiles and inserts on miss."""
+        key = expr_key(canon)
+        plan = self._plans.get(key)
+        if plan is not None:
+            self.hits += 1
+            return plan, True
+        self.misses += 1
+        result: CompileResult = compile_expr_fused(canon, DST)
+        n_inputs = len({a for a in result.program.activates()
+                        if a.startswith(_IN_PREFIX)})
+        plan = Plan(
+            key=key,
+            program=result.program,
+            n_inputs=n_inputs,
+            n_temp_rows=result.n_temp_rows,
+            latency_ns_per_block=timing_model.program_latency_ns(
+                result.program, self.timing),
+            energy_nj_per_block=energy_model.program_energy_nj(
+                result.program, self.energy),
+        )
+        self._plans[key] = plan
+        return plan, False
+
+
+@dataclasses.dataclass
+class BoundPlan:
+    """A cached plan bound to one query's actual catalog rows."""
+
+    plan: Plan
+    bindings: List[str]             # bindings[i] backs IN{i}
+    cache_hit: bool
+
+    def input_map(self) -> Dict[str, str]:
+        return {f"{_IN_PREFIX}{i}": row
+                for i, row in enumerate(self.bindings)}
+
+
+@dataclasses.dataclass
+class Planner:
+    """Parse + canonicalize + compile-with-memo front half of the service."""
+
+    cache: PlanCache = dataclasses.field(default_factory=PlanCache)
+
+    @property
+    def compile_count(self) -> int:
+        """Compilations actually performed (== cache misses)."""
+        return self.cache.misses
+
+    def plan(self, query: Union[str, Expr]) -> BoundPlan:
+        expr = parse_query(query) if isinstance(query, str) else query
+        canon, bindings = canonicalize(expr)
+        plan, hit = self.cache.lookup(canon)
+        return BoundPlan(plan=plan, bindings=bindings, cache_hit=hit)

@@ -1,0 +1,281 @@
+"""Batching scheduler: concurrent queries -> bank-parallel execution.
+
+The scheduling insight mirrors the hardware: the memory controller can only
+broadcast ONE AAP sequence at a time, but every bank applies it to its own
+rows concurrently (paper §5.4/§7, `core.bankgroup`). So the scheduler groups
+a batch's queries by their *canonical plan* — queries with the same program
+shape (every tenant's weekly OR-tree, every range scan of the same width)
+become one stacked dispatch where the "bank axis" is the query axis — and
+executes each group through the engine in a single traced run.
+
+Two result modes per query (paper §8 workloads):
+  * `popcount`  — aggregate: COUNT(*) of the predicate bitvector (the
+    bitcount stays CPU-side in the paper; here it is one reduction over the
+    masked result words).
+  * `materialize` — the packed result bitvector itself (feeds follow-up
+    queries; the service uses it to register derived vectors).
+
+Latency is modeled, not measured: per 8KB row-block, placing a query's
+operands in its bank costs serialized inter-bank transfers on the shared
+internal bus (one AAP-time per operand row + one for result readout,
+`core.timing`), while per-bank AAP compute (`Plan.latency_ns_per_block`)
+overlaps across banks — the same copy/compute pipeline as
+`core.bankgroup.pipeline_latency_ns`, lifted to query granularity. Energy
+comes from `core.energy` command counts.
+
+`run_queries_unbatched` is the independent reference path (fresh compile per
+query over its natural row names, one engine run per query, 1-bank serial
+schedule); the batched scheduler must match it bit-for-bit (asserted by
+tests/test_service.py and benchmarks/serve_qps.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional, Sequence, Tuple, Union
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import engine
+from repro.core.bitplane import ROW_BITS
+from repro.core.compiler import Expr, compile_expr_fused
+from repro.core.timing import DDR3_1600, DramTiming
+from repro.ops.popcount import popcount_words
+from repro.service.catalog import Catalog
+from repro.service.planner import DST, BoundPlan, Planner
+
+POPCOUNT = "popcount"
+MATERIALIZE = "materialize"
+
+
+@dataclasses.dataclass
+class Query:
+    """One client request over catalog names."""
+
+    query: Union[str, Expr]
+    mode: str = POPCOUNT
+    tenant: Optional[str] = None
+
+    def __post_init__(self):
+        if self.mode not in (POPCOUNT, MATERIALIZE):
+            raise ValueError(f"unknown result mode {self.mode!r}")
+
+
+@dataclasses.dataclass
+class QueryResult:
+    """Outcome of one query: value + modeled cost accounting."""
+
+    index: int                    # position in the submitted batch
+    mode: str
+    value: Union[int, np.ndarray]  # popcount int or packed uint32 words
+    latency_ns: float             # modeled batch-epoch -> completion
+    bank: int
+    cache_hit: bool
+    n_aaps: int
+    energy_nj: float
+    tenant: Optional[str] = None
+
+
+@dataclasses.dataclass
+class BatchReport:
+    """Aggregate view of one scheduler batch."""
+
+    results: List[QueryResult]
+    makespan_ns: float
+    n_banks: int
+    n_plan_groups: int
+
+    @property
+    def qps(self) -> float:
+        if self.makespan_ns == 0.0:
+            return 0.0
+        return len(self.results) / (self.makespan_ns * 1e-9)
+
+    def latency_percentile_ns(self, pct: float) -> float:
+        lats = sorted(r.latency_ns for r in self.results)
+        if not lats:
+            return 0.0
+        i = min(len(lats) - 1, int(math.ceil(pct / 100.0 * len(lats))) - 1)
+        return lats[max(i, 0)]
+
+
+@dataclasses.dataclass
+class Scheduler:
+    """Batches queries over the bank group with a modeled timeline."""
+
+    catalog: Catalog
+    planner: Planner = dataclasses.field(default_factory=Planner)
+    n_banks: int = 8
+    timing: DramTiming = DDR3_1600
+
+    def __post_init__(self):
+        self.queries_served = 0
+        self.total_modeled_ns = 0.0
+        self.total_energy_nj = 0.0
+
+    # -- plumbing -----------------------------------------------------------
+
+    @property
+    def _n_blocks(self) -> int:
+        """Row-blocks every operand spans (catalog domain / 8KB row)."""
+        assert self.catalog.n_bits is not None
+        return max(1, math.ceil(self.catalog.n_bits / ROW_BITS))
+
+    def _xfer_ns(self, plan_n_inputs: int) -> float:
+        # place each operand row in the bank + read the result row back out,
+        # all serialized on the shared internal bus (inter-bank RowClone)
+        return self.timing.aap_ns * (plan_n_inputs + 1)
+
+    # -- functional execution ------------------------------------------------
+
+    def _run_group(self, members: List[Tuple[int, BoundPlan]],
+                   need_words: bool
+                   ) -> Tuple[Optional[np.ndarray], np.ndarray]:
+        """One stacked engine dispatch for all queries sharing a plan.
+
+        Stacks each canonical input IN{i} across the group's queries into a
+        leading query axis — exactly the bank-axis layout of
+        `core.bankgroup.BankGroup` (one broadcast program, per-bank data).
+        Returns (masked result words (len(members), n_words) or None when
+        no member materializes, per-query popcounts (len(members),)) — the
+        popcount reduction happens once per group, on device, so for
+        popcount-only groups just len(members) ints cross to the host.
+        """
+        input_rows = [bp.input_map() for _, bp in members]
+        data = {
+            name: jnp.stack([self.catalog.get(rows[name]).words
+                             for rows in input_rows])
+            for name in input_rows[0]
+        }
+        plan = members[0][1].plan
+        out = engine.execute(plan.program, data, outputs=[DST])[DST]
+        masked = out & self.catalog.mask()
+        counts = popcount_words(masked, axis=-1)
+        words = np.asarray(masked) if need_words else None
+        return words, np.asarray(counts)
+
+    # -- the scheduler proper ------------------------------------------------
+
+    def submit(self, queries: Sequence[Query]) -> BatchReport:
+        """Plan, group, execute, and cost one batch of concurrent queries."""
+        if not queries:
+            return BatchReport([], 0.0, self.n_banks, 0)
+
+        # 1. plan every query through the cache (hits skip recompilation)
+        bound: List[BoundPlan] = [self.planner.plan(q.query) for q in queries]
+
+        # 2. group by canonical plan -> one stacked dispatch per group
+        groups: Dict[Tuple, List[Tuple[int, BoundPlan]]] = {}
+        for idx, bp in enumerate(bound):
+            groups.setdefault(bp.plan.key, []).append((idx, bp))
+        words_by_idx: Dict[int, np.ndarray] = {}
+        count_by_idx: Dict[int, int] = {}
+        for members in groups.values():
+            need_words = any(queries[idx].mode == MATERIALIZE
+                             for idx, _ in members)
+            stacked, counts = self._run_group(members, need_words)
+            for slot, (idx, _) in enumerate(members):
+                if stacked is not None:
+                    words_by_idx[idx] = stacked[slot]
+                count_by_idx[idx] = int(counts[slot])
+
+        # 3. modeled timeline: queries placed on least-loaded banks; operand
+        #    transfers serialize on the shared bus, compute overlaps
+        n_blocks = self._n_blocks
+        bus_free = 0.0
+        bank_free = [0.0] * self.n_banks
+        results: List[QueryResult] = []
+        for idx, (q, bp) in enumerate(zip(queries, bound)):
+            b = min(range(self.n_banks), key=bank_free.__getitem__)
+            xfer = self._xfer_ns(bp.plan.n_inputs)
+            for _ in range(n_blocks):
+                start = max(bus_free, bank_free[b])
+                bus_free = start + xfer
+                bank_free[b] = bus_free + bp.plan.latency_ns_per_block
+            energy = bp.plan.energy_nj_per_block * n_blocks
+            value: Union[int, np.ndarray]
+            if q.mode == POPCOUNT:
+                value = count_by_idx[idx]
+            else:
+                value = words_by_idx[idx]
+            results.append(QueryResult(
+                index=idx, mode=q.mode, value=value,
+                latency_ns=bank_free[b], bank=b,
+                cache_hit=bp.cache_hit, n_aaps=bp.plan.n_aaps,
+                energy_nj=energy, tenant=q.tenant))
+
+        makespan = max(bank_free)
+        self.queries_served += len(queries)
+        self.total_modeled_ns += makespan
+        self.total_energy_nj += sum(r.energy_nj for r in results)
+        return BatchReport(results, makespan, self.n_banks, len(groups))
+
+
+def results_bit_identical(a: Sequence[QueryResult],
+                          b: Sequence[QueryResult]) -> bool:
+    """Mode-aware value equality across two result lists.
+
+    Popcount values are ints, materialize values are packed word arrays;
+    `np.array_equal` handles both (a bare `==` on arrays would be
+    ambiguous under `all()`).
+    """
+    if len(a) != len(b):
+        return False
+    return all(np.array_equal(np.asarray(x.value), np.asarray(y.value))
+               for x, y in zip(a, b))
+
+
+# ---------------------------------------------------------------------------
+# Reference path: sequential, unbatched, uncached
+# ---------------------------------------------------------------------------
+
+
+def run_queries_unbatched(catalog: Catalog, queries: Sequence[Query],
+                          timing: DramTiming = DDR3_1600) -> BatchReport:
+    """Execute queries one at a time with fresh per-query compilation.
+
+    This is the service's ground truth: no canonical renaming, no plan
+    cache, no stacking — each query compiles over its natural catalog row
+    names and runs through `engine.execute` alone on a single bank. The
+    batched scheduler must produce bit-identical values.
+    """
+    from repro.core.energy import DEFAULT_ENERGY, program_energy_nj
+    from repro.core.timing import program_latency_ns
+    from repro.service.planner import parse_query
+
+    def expr_leaves(e: Expr, acc: List[str]) -> List[str]:
+        if e.op == "row":
+            if e.row not in acc:
+                acc.append(e.row)
+        else:
+            for a in e.args:
+                expr_leaves(a, acc)
+        return acc
+
+    n_blocks = max(1, math.ceil((catalog.n_bits or ROW_BITS) / ROW_BITS))
+    mask = catalog.mask()
+    clock = 0.0
+    results: List[QueryResult] = []
+    for idx, q in enumerate(queries):
+        expr = parse_query(q.query) if isinstance(q.query, str) else q.query
+        compiled = compile_expr_fused(expr, DST)
+        leaves = expr_leaves(expr, [])
+        out = engine.execute(compiled.program, catalog.row_state(leaves),
+                             outputs=[DST])[DST]
+        words = np.asarray(out & mask)
+        exec_ns = program_latency_ns(compiled.program, timing)
+        xfer = timing.aap_ns * (len(leaves) + 1)
+        clock += n_blocks * (xfer + exec_ns)
+        value: Union[int, np.ndarray]
+        if q.mode == POPCOUNT:
+            value = int(popcount_words(jnp.asarray(words)))
+        else:
+            value = words
+        results.append(QueryResult(
+            index=idx, mode=q.mode, value=value, latency_ns=clock, bank=0,
+            cache_hit=False, n_aaps=compiled.program.n_aap,
+            energy_nj=n_blocks * program_energy_nj(compiled.program,
+                                                   DEFAULT_ENERGY),
+            tenant=q.tenant))
+    return BatchReport(results, clock, 1, len(queries))

@@ -1,0 +1,131 @@
+"""`QueryService` — the user-facing facade of the bulk-bitwise query engine.
+
+Wires catalog -> planner/plan-cache -> batching scheduler into one object:
+
+    svc = QueryService(n_banks=8)
+    svc.register_bits("mon", monday_bits, group="tenant0")
+    svc.register_bits("tue", tuesday_bits, group="tenant0")
+    n = svc.query("mon & tue").value          # popcount aggregate
+    svc.materialize("both", "mon & tue")      # derived vector, re-queryable
+
+Columns (BitWeaving-V layout) ride the same machinery: `register_column`
+places each vertical bit plane as a catalog vector, and `range_scan` lowers
+`lo <= v <= hi` to the fusable predicate DAG of `ops.predicate` so the scan
+executes as one minimized AAP program through the scheduler. The TPU fast
+path for the same predicate (`range_scan_fast`) dispatches the fused
+between-scan kernel via `ops.predicate.between_scan`; both paths return
+bit-identical result vectors (tests/test_service.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Union
+
+import jax
+import numpy as np
+
+from repro.core.compiler import Expr
+from repro.core.timing import DDR3_1600, DramTiming
+from repro.ops.predicate import VerticalColumn, between_scan, range_scan_expr
+from repro.service.catalog import Catalog, CatalogEntry
+from repro.service.planner import Planner
+from repro.service.scheduler import (MATERIALIZE, POPCOUNT, BatchReport,
+                                     Query, QueryResult, Scheduler)
+
+
+@dataclasses.dataclass
+class QueryService:
+    """Catalog + planner + scheduler behind one serving interface."""
+
+    n_banks: int = 8
+    timing: DramTiming = DDR3_1600
+
+    def __post_init__(self):
+        self.catalog = Catalog()
+        self.planner = Planner()
+        self.scheduler = Scheduler(catalog=self.catalog, planner=self.planner,
+                                   n_banks=self.n_banks, timing=self.timing)
+        self._columns: Dict[str, VerticalColumn] = {}
+
+    # -- catalog management --------------------------------------------------
+
+    def register(self, name: str, value, n_bits: Optional[int] = None,
+                 group: Optional[str] = None) -> CatalogEntry:
+        return self.catalog.register(name, value, n_bits, group)
+
+    def register_bits(self, name: str, bits,
+                      group: Optional[str] = None) -> CatalogEntry:
+        return self.catalog.register_bits(name, bits, group)
+
+    def register_column(self, name: str, values: jax.Array, n_bits: int,
+                        group: Optional[str] = None) -> VerticalColumn:
+        """Store an integer column: one catalog vector per vertical plane.
+
+        Plane j of column `name` becomes catalog row `{name}.b{j}`; the
+        column's logical length must equal the catalog bit domain so plane
+        vectors and bitmap vectors are freely combinable in one query.
+        """
+        col = VerticalColumn.encode(values, n_bits)
+        if self.catalog.n_bits is not None \
+                and col.n_values != self.catalog.n_bits:
+            raise ValueError(
+                f"column {name!r}: {col.n_values} values != catalog domain "
+                f"{self.catalog.n_bits}")
+        for j in range(n_bits):
+            self.catalog.register(f"{name}.b{j}", col.planes[j],
+                                  col.n_values, group=group)
+        self._columns[name] = col
+        return col
+
+    # -- query interface -----------------------------------------------------
+
+    def query(self, query: Union[str, Expr], mode: str = POPCOUNT,
+              tenant: Optional[str] = None) -> QueryResult:
+        """Serve one query (a batch of one)."""
+        return self.query_batch([Query(query, mode, tenant)]).results[0]
+
+    def query_batch(self, queries: Sequence[Query]) -> BatchReport:
+        """Serve a batch of concurrent queries through the scheduler."""
+        return self.scheduler.submit(queries)
+
+    def materialize(self, name: str, query: Union[str, Expr],
+                    group: Optional[str] = None) -> CatalogEntry:
+        """Run `query`, register its result vector under `name`."""
+        r = self.query(query, mode=MATERIALIZE)
+        return self.catalog.register(name, r.value, self.catalog.n_bits,
+                                     group=group)
+
+    # -- range scans ---------------------------------------------------------
+
+    def range_scan_query(self, column: str, lo: int, hi: int) -> Expr:
+        """The predicate lo <= column <= hi as a fusable Expr DAG."""
+        col = self._columns[column]
+        return range_scan_expr(col.n_bits, lo, hi,
+                               plane_prefix=f"{column}.b")
+
+    def range_scan(self, column: str, lo: int, hi: int,
+                   mode: str = POPCOUNT,
+                   tenant: Optional[str] = None) -> QueryResult:
+        """Serve lo <= column <= hi through the in-DRAM scheduler path."""
+        return self.query(self.range_scan_query(column, lo, hi), mode, tenant)
+
+    def range_scan_fast(self, column: str, lo: int, hi: int) -> np.ndarray:
+        """The same predicate on the fused TPU between-scan kernel path."""
+        col = self._columns[column]
+        bv = between_scan(col.planes, lo, hi, col.n_bits)
+        return np.asarray(bv & np.asarray(self.catalog.mask()))
+
+    # -- observability -------------------------------------------------------
+
+    def stats(self) -> Dict[str, float]:
+        cache = self.planner.cache
+        return {
+            "queries_served": self.scheduler.queries_served,
+            "plans_cached": len(cache),
+            "plan_cache_hits": cache.hits,
+            "plan_cache_misses": cache.misses,
+            "plan_cache_hit_rate": cache.hit_rate,
+            "compile_count": self.planner.compile_count,
+            "total_modeled_ns": self.scheduler.total_modeled_ns,
+            "total_energy_nj": self.scheduler.total_energy_nj,
+        }

@@ -1,0 +1,121 @@
+"""Synthetic multi-tenant query workload for the bulk-bitwise service.
+
+Models the paper's §8 killer applications as an interactive query stream:
+
+  * bitmap-index analytics (§8.1) — per-tenant daily activity bitmaps plus
+    a gender attribute; query templates are the weekly-activity OR-trees,
+    the "active every week" AND-of-weeks, and the male-per-week filters.
+  * BitWeaving column scans (§8.2) — a per-tenant integer column in
+    vertical layout, queried with repeated range predicates.
+  * bitvector set operations (§8.3) — per-tenant element sets, queried
+    with k-ary intersections and unions.
+
+The stream is deliberately repetitive in *shape* (each tenant re-asks the
+same templates, and all tenants share template structure), which is exactly
+the pattern the planner's canonical plan cache and the scheduler's
+plan-grouped batching exploit.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Tuple
+
+import numpy as np
+
+from repro.apps.bitmap_index import week_or
+from repro.service.scheduler import POPCOUNT, Query
+from repro.service.service import QueryService
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkloadSpec:
+    """Knobs of the synthetic stream (defaults sized for CI)."""
+
+    n_tenants: int = 4
+    n_weeks: int = 3
+    domain_bits: int = 1 << 12      # users / column length / set domain
+    col_bits: int = 8               # integer column width for range scans
+    n_sets: int = 6                 # element sets per tenant
+    n_queries: int = 96
+    seed: int = 0
+    p_active: float = 0.35
+
+
+def _week_or(tenant: str, week: int) -> str:
+    # shared template: keeps this stream plan-cache-compatible with the
+    # apps.bitmap_index service-client path
+    return week_or(week, prefix=f"{tenant}/")
+
+
+def build_service(spec: WorkloadSpec, n_banks: int = 8) -> QueryService:
+    """Populate a service catalog with every tenant's vectors."""
+    rng = np.random.default_rng(spec.seed)
+    svc = QueryService(n_banks=n_banks)
+    m = spec.domain_bits
+    for t in range(spec.n_tenants):
+        tenant = f"t{t}"
+        for w in range(spec.n_weeks):
+            for d in range(7):
+                bits = rng.random(m) < spec.p_active
+                svc.register_bits(f"{tenant}/w{w}d{d}", bits, group=tenant)
+        svc.register_bits(f"{tenant}/male", rng.random(m) < 0.5, group=tenant)
+        for s in range(spec.n_sets):
+            svc.register_bits(f"{tenant}/s{s}", rng.random(m) < 0.4,
+                              group=tenant)
+        svc.register_column(f"{tenant}/col",
+                            rng.integers(0, 1 << spec.col_bits, m,
+                                         dtype=np.uint32),
+                            spec.col_bits, group=tenant)
+    return svc
+
+
+def query_stream(spec: WorkloadSpec, svc: QueryService) -> List[Query]:
+    """A mixed, repetitive multi-tenant stream of `n_queries` queries."""
+    rng = np.random.default_rng(spec.seed + 1)
+    # a few fixed range predicates per tenant so scans repeat
+    bounds: List[Tuple[int, int]] = []
+    for _ in range(3):
+        lo = int(rng.integers(0, (1 << spec.col_bits) - 1))
+        hi = int(rng.integers(lo, 1 << spec.col_bits))
+        bounds.append((lo, hi))
+
+    def weekly(t: str, w: int) -> Query:
+        return Query(_week_or(t, w), POPCOUNT, tenant=t)
+
+    def every_week(t: str) -> Query:
+        text = " & ".join(_week_or(t, w) for w in range(spec.n_weeks))
+        return Query(text, POPCOUNT, tenant=t)
+
+    def male_week(t: str, w: int) -> Query:
+        return Query(f"{_week_or(t, w)} & {t}/male", POPCOUNT, tenant=t)
+
+    def range_scan(t: str, which: int) -> Query:
+        lo, hi = bounds[which]
+        return Query(svc.range_scan_query(f"{t}/col", lo, hi),
+                     POPCOUNT, tenant=t)
+
+    def intersect(t: str, k: int) -> Query:
+        text = " & ".join(f"{t}/s{s}" for s in range(k))
+        return Query(text, POPCOUNT, tenant=t)
+
+    def union_diff(t: str) -> Query:
+        return Query(f"({t}/s0 | {t}/s1 | {t}/s2) & ~{t}/s3",
+                     POPCOUNT, tenant=t)
+
+    queries: List[Query] = []
+    while len(queries) < spec.n_queries:
+        t = f"t{int(rng.integers(spec.n_tenants))}"
+        kind = int(rng.integers(6))
+        if kind == 0:
+            queries.append(weekly(t, int(rng.integers(spec.n_weeks))))
+        elif kind == 1:
+            queries.append(every_week(t))
+        elif kind == 2:
+            queries.append(male_week(t, int(rng.integers(spec.n_weeks))))
+        elif kind == 3:
+            queries.append(range_scan(t, int(rng.integers(len(bounds)))))
+        elif kind == 4:
+            queries.append(intersect(t, int(rng.integers(2, spec.n_sets))))
+        else:
+            queries.append(union_diff(t))
+    return queries

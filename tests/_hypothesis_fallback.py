@@ -1,0 +1,117 @@
+"""Seeded-random stand-in for `hypothesis` when it is not installed.
+
+The property-test modules use a small, fixed subset of the hypothesis API:
+`given`, `settings`, and the strategies `integers`, `booleans`, `lists`,
+`sampled_from`, `data` (plus `.map`). This module re-implements exactly that
+subset over a deterministically seeded numpy Generator, so the core
+invariants still execute as plain example-based tests in environments
+without hypothesis (no shrinking, no adaptive search — just N seeded random
+examples per test, reproducible across runs).
+
+Usage (in the test modules):
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:
+        from _hypothesis_fallback import given, settings, strategies as st
+"""
+from __future__ import annotations
+
+import types
+import zlib
+
+import numpy as np
+
+# Cap fallback example counts: hypothesis's own max_examples is tuned for its
+# fast C-backed generation; the simple fallback keeps suites quick.
+_MAX_FALLBACK_EXAMPLES = 5
+
+
+class _Strategy:
+    """A draw function wrapper supporting .map (the only combinator used)."""
+
+    def __init__(self, draw):
+        self._draw = draw
+
+    def map(self, f):
+        return _Strategy(lambda rng: f(self._draw(rng)))
+
+
+def _integers(min_value=0, max_value=(1 << 32) - 1):
+    return _Strategy(
+        lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+
+def _booleans():
+    return _Strategy(lambda rng: bool(rng.integers(0, 2)))
+
+
+def _lists(elements, min_size=0, max_size=10):
+    def draw(rng):
+        size = int(rng.integers(min_size, max_size + 1))
+        return [elements._draw(rng) for _ in range(size)]
+
+    return _Strategy(draw)
+
+
+def _sampled_from(seq):
+    seq = list(seq)
+    return _Strategy(lambda rng: seq[int(rng.integers(len(seq)))])
+
+
+class _DataObject:
+    """Interactive draw handle (the `st.data()` strategy)."""
+
+    def __init__(self, rng):
+        self._rng = rng
+
+    def draw(self, strategy, label=None):
+        return strategy._draw(self._rng)
+
+
+def _data():
+    return _Strategy(lambda rng: _DataObject(rng))
+
+
+strategies = types.SimpleNamespace(
+    integers=_integers,
+    booleans=_booleans,
+    lists=_lists,
+    sampled_from=_sampled_from,
+    data=_data,
+)
+
+
+def settings(max_examples=20, deadline=None, **_kw):
+    """Records max_examples on the (already `given`-wrapped) test."""
+
+    def deco(fn):
+        fn._fallback_max_examples = min(max_examples, _MAX_FALLBACK_EXAMPLES)
+        return fn
+
+    return deco
+
+
+def given(*arg_strategies, **kw_strategies):
+    """Runs the test once per seeded example with drawn arguments."""
+
+    def deco(fn):
+        # No functools.wraps: it would expose the original signature via
+        # __wrapped__ and pytest would demand fixtures for the drawn params.
+        def wrapper():
+            n = getattr(wrapper, "_fallback_max_examples",
+                        _MAX_FALLBACK_EXAMPLES)
+            base = zlib.crc32(fn.__name__.encode())
+            for example in range(n):
+                rng = np.random.default_rng((base, example))
+                drawn = [s._draw(rng) for s in arg_strategies]
+                drawn_kw = {k: s._draw(rng)
+                            for k, s in kw_strategies.items()}
+                fn(*drawn, **drawn_kw)
+
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        return wrapper
+
+    return deco

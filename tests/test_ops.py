@@ -31,6 +31,27 @@ def test_vertical_column_padding_excluded():
     assert int(bv.popcount()) == 3
 
 
+@pytest.mark.parametrize("nbits,lo,hi", [(8, 50, 200), (12, 0, 100),
+                                         (10, 1000, 1023), (6, 17, 17)])
+def test_between_scan_fused_matches_unfused_ref(nbits, lo, hi):
+    """ops.predicate.between_scan (fused kernel path) == the unfused
+    reference that evaluates the two bounds in separate plane passes."""
+    from repro.kernels import ref
+    from repro.ops.predicate import between_scan
+
+    vals = RNG.integers(0, 2**nbits, 256, dtype=np.uint64).astype(np.uint32)
+    planes = ref.bit_transpose(jnp.asarray(vals), nbits)
+    unfused = np.asarray(ref.bitweaving_scan(planes, lo, hi, nbits))
+    fused = np.asarray(between_scan(planes, lo, hi, nbits, use_kernel=True))
+    fallback = np.asarray(between_scan(planes, lo, hi, nbits,
+                                       use_kernel=False))
+    np.testing.assert_array_equal(fused, unfused)
+    np.testing.assert_array_equal(fallback, unfused)
+    # and both match the direct numpy predicate
+    expect = np.asarray(pack_bits(jnp.asarray((vals >= lo) & (vals <= hi))))
+    np.testing.assert_array_equal(fused, expect)
+
+
 # -- set ops ----------------------------------------------------------------
 
 

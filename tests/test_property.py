@@ -1,10 +1,16 @@
-"""Hypothesis property tests on the system's core invariants."""
+"""Property tests on the system's core invariants.
+
+Runs under hypothesis when available; otherwise falls back to seeded-random
+example generation (`_hypothesis_fallback`) so the invariants are always
+exercised.
+"""
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
-pytest.importorskip("hypothesis", reason="hypothesis not installed")
-from hypothesis import given, settings, strategies as st  # noqa: E402
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from _hypothesis_fallback import given, settings, strategies as st
 
 from repro.core import compiler, engine
 from repro.core.bitplane import pack_bits, unpack_bits

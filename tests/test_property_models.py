@@ -1,11 +1,17 @@
-"""Hypothesis property tests on model-level invariants."""
+"""Property tests on model-level invariants.
+
+Runs under hypothesis when available; otherwise falls back to seeded-random
+example generation (`_hypothesis_fallback`) so the invariants are always
+exercised.
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
-pytest.importorskip("hypothesis", reason="hypothesis not installed")
-from hypothesis import given, settings, strategies as st  # noqa: E402
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from _hypothesis_fallback import given, settings, strategies as st
 
 from repro.configs.base import get_config, reduced
 from repro.models import build

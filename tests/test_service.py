@@ -1,0 +1,257 @@
+"""Query service: catalog placement, planner/plan cache, batching scheduler,
+service facade, and the apps-as-service-clients paths."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.bitplane import unpack_bits
+from repro.core.compiler import Expr, expr_key
+from repro.service import (MATERIALIZE, POPCOUNT, Catalog, CatalogError,
+                           Planner, Query, QueryParseError, QueryService,
+                           WorkloadSpec, build_service, canonicalize,
+                           parse_query, query_stream, run_queries_unbatched)
+
+RNG = np.random.default_rng(7)
+
+
+def _bits(n=200, p=0.5):
+    return RNG.random(n) < p
+
+
+def _svc_ab(n=200):
+    svc = QueryService(n_banks=4)
+    a, b, c = _bits(n), _bits(n), _bits(n)
+    svc.register_bits("a", a)
+    svc.register_bits("b", b)
+    svc.register_bits("c", c)
+    return svc, a, b, c
+
+
+# -- catalog ----------------------------------------------------------------
+
+
+def test_catalog_rejects_reserved_and_duplicate_names():
+    cat = Catalog()
+    for bad in ("T0", "DCC1", "B12", "C0", "TMP3", "IN0", "OUT", "1x"):
+        with pytest.raises(CatalogError):
+            cat.register(bad, np.zeros(4, np.uint32))
+    cat.register("ok", np.zeros(4, np.uint32))
+    with pytest.raises(CatalogError):
+        cat.register("ok", np.zeros(4, np.uint32))
+
+
+def test_catalog_pins_bit_domain():
+    cat = Catalog()
+    cat.register_bits("a", _bits(100))
+    with pytest.raises(CatalogError):
+        cat.register_bits("b", _bits(101))
+
+
+def test_catalog_affinity_group_colocates():
+    cat = Catalog()
+    h1 = cat.register_bits("x", _bits(64), group="g").handle
+    h2 = cat.register_bits("y", _bits(64), group="g").handle
+    h3 = cat.register_bits("z", _bits(64)).handle
+    assert (h1.bank, h1.subarray) == (h2.bank, h2.subarray)
+    assert h1.row != h2.row
+    # grouped ops need zero PSM copies; ungrouped generally cost one
+    assert cat.psm_copies(["x"], "y") == 0
+    assert cat.psm_copies(["x", "y"], "z") == 1
+
+
+# -- parser -----------------------------------------------------------------
+
+
+def test_parse_precedence_and_parens():
+    # ~ binds tighter than &, & tighter than ^, ^ tighter than |
+    e = parse_query("a | b ^ c & ~d")
+    assert expr_key(e) == expr_key(
+        Expr.of("a") | (Expr.of("b") ^ (Expr.of("c") & ~Expr.of("d"))))
+    e2 = parse_query("(a | b) & maj(a, b, c)")
+    assert expr_key(e2) == expr_key(
+        (Expr.of("a") | Expr.of("b"))
+        & Expr("maj3", (Expr.of("a"), Expr.of("b"), Expr.of("c"))))
+
+
+def test_parse_errors():
+    for bad in ("a &", "& a", "(a | b", "a $ b", "", "maj(a, b)"):
+        with pytest.raises(QueryParseError):
+            parse_query(bad)
+
+
+# -- plan cache (satellite: counter-verified) --------------------------------
+
+
+def test_same_query_twice_compiles_once():
+    svc, a, b, _ = _svc_ab()
+    svc.query("a & b")
+    assert svc.planner.compile_count == 1
+    assert svc.planner.cache.misses == 1
+    svc.query("a & b")
+    assert svc.planner.compile_count == 1   # hit skipped recompilation
+    assert svc.planner.cache.hits == 1
+    assert len(svc.planner.cache) == 1
+
+
+def test_structurally_equal_exprs_share_cache_entry():
+    """Differently-constructed but structurally-equal queries hit one
+    entry via expr_key of the canonical DAG."""
+    planner = Planner()
+    variants = [
+        "a & b",
+        " a   &(b)",
+        parse_query("a & b"),
+        Expr.of("a") & Expr.of("b"),
+        Expr("and", (Expr("row", row="a"), Expr("row", row="b"))),
+    ]
+    plans = [planner.plan(v) for v in variants]
+    assert planner.compile_count == 1
+    assert planner.cache.hits == len(variants) - 1
+    assert len({p.plan.key for p in plans}) == 1
+
+
+def test_canonicalization_shares_plans_across_rows():
+    """Same shape over different catalog vectors -> one compiled program."""
+    planner = Planner()
+    p1 = planner.plan("a & b")
+    p2 = planner.plan("c & d")
+    assert p1.plan is p2.plan
+    assert p1.bindings == ["a", "b"]
+    assert p2.bindings == ["c", "d"]
+    assert planner.compile_count == 1
+    # repeated leaf maps to one canonical input
+    canon, bindings = canonicalize(parse_query("x & (x | y)"))
+    assert bindings == ["x", "y"]
+    assert expr_key(canon) == expr_key(
+        Expr.of("IN0") & (Expr.of("IN0") | Expr.of("IN1")))
+
+
+# -- scheduler ---------------------------------------------------------------
+
+
+def test_popcount_and_materialize_match_numpy():
+    svc, a, b, c = _svc_ab()
+    r = svc.query("(a | b) & ~c")
+    expect = (a | b) & ~c
+    assert r.value == int(expect.sum())
+    m = svc.query("(a | b) & ~c", mode=MATERIALIZE)
+    np.testing.assert_array_equal(
+        np.asarray(unpack_bits(jnp.asarray(m.value), 200)), expect)
+
+
+def test_mixed_mode_batch_shares_plan_group():
+    """popcount + materialize queries of one shape run as one group and
+    both modes return correct values."""
+    svc, a, b, c = _svc_ab()
+    rep = svc.query_batch([
+        Query("a & b", POPCOUNT),
+        Query("a & c", MATERIALIZE),
+        Query("b & c", POPCOUNT),
+    ])
+    assert rep.n_plan_groups == 1
+    assert rep.results[0].value == int((a & b).sum())
+    np.testing.assert_array_equal(
+        np.asarray(unpack_bits(jnp.asarray(rep.results[1].value), 200)),
+        a & c)
+    assert rep.results[2].value == int((b & c).sum())
+
+
+def test_batched_equals_sequential_unbatched():
+    spec = WorkloadSpec(n_tenants=2, n_weeks=2, domain_bits=512,
+                        n_queries=32, seed=3)
+    svc = build_service(spec, n_banks=8)
+    queries = query_stream(spec, svc)
+    rep = svc.query_batch(queries)
+    ref = run_queries_unbatched(svc.catalog, queries)
+    assert [r.value for r in rep.results] == [r.value for r in ref.results]
+    # batching actually grouped: fewer plan groups than queries
+    assert rep.n_plan_groups < len(queries)
+
+
+def test_bank_scaling_speedup():
+    spec = WorkloadSpec(n_tenants=2, n_weeks=3, domain_bits=512,
+                        n_queries=64, seed=5)
+    svc8 = build_service(spec, n_banks=8)
+    rep8 = svc8.query_batch(query_stream(spec, svc8))
+    svc1 = build_service(spec, n_banks=1)
+    rep1 = svc1.query_batch(query_stream(spec, svc1))
+    assert [r.value for r in rep8.results] == [r.value for r in rep1.results]
+    assert rep1.makespan_ns / rep8.makespan_ns >= 3.0
+    # hit rate on the repeated stream clears the serving bar
+    assert svc8.stats()["plan_cache_hit_rate"] > 0.5
+
+
+def test_latency_accounting_sane():
+    svc, *_ = _svc_ab()
+    rep = svc.query_batch([Query("a & b"), Query("a | c"), Query("b ^ c")])
+    lats = [r.latency_ns for r in rep.results]
+    assert all(l > 0 for l in lats)
+    assert max(lats) <= rep.makespan_ns
+    assert rep.latency_percentile_ns(50) <= rep.latency_percentile_ns(99)
+    assert rep.qps > 0
+    assert all(r.energy_nj > 0 for r in rep.results)
+    banks = {r.bank for r in rep.results}
+    assert len(banks) == 3  # least-loaded assignment spread the batch
+
+
+# -- service facade ----------------------------------------------------------
+
+
+def test_materialize_roundtrip():
+    svc, a, b, c = _svc_ab()
+    svc.materialize("ab", "a & b")
+    r = svc.query("ab | c")
+    assert r.value == int(((a & b) | c).sum())
+
+
+def test_range_scan_service_matches_fast_path():
+    svc = QueryService(n_banks=4)
+    vals = RNG.integers(0, 256, 224, dtype=np.uint32)
+    svc.register_column("col", jnp.asarray(vals), 8)
+    lo, hi = 40, 180
+    r = svc.query(svc.range_scan_query("col", lo, hi), mode=MATERIALIZE)
+    fast = svc.range_scan_fast("col", lo, hi)
+    np.testing.assert_array_equal(np.asarray(r.value), fast)
+    expect = (vals >= lo) & (vals <= hi)
+    np.testing.assert_array_equal(
+        np.asarray(unpack_bits(jnp.asarray(r.value), 224)), expect)
+    # popcount mode agrees
+    assert svc.range_scan("col", lo, hi).value == int(expect.sum())
+
+
+def test_stats_shape():
+    svc, *_ = _svc_ab()
+    svc.query("a & b")
+    s = svc.stats()
+    for k in ("queries_served", "plans_cached", "plan_cache_hits",
+              "plan_cache_misses", "plan_cache_hit_rate", "compile_count",
+              "total_modeled_ns", "total_energy_nj"):
+        assert k in s
+
+
+# -- apps as service clients --------------------------------------------------
+
+
+def test_bitmap_index_service_client_bit_identical():
+    from repro.apps import bitmap_index
+
+    db = bitmap_index.UserDatabase.synthetic(
+        jax.random.PRNGKey(2), m_users=300, n_weeks=3, p_active=0.4)
+    n1, m1, _ = bitmap_index.weekly_active_query(db)
+    n2, m2, stats = bitmap_index.weekly_active_query_service(db)
+    assert int(n1) == n2
+    np.testing.assert_array_equal(np.asarray(m1), np.asarray(m2))
+    # the per-week male filters share one canonical plan
+    assert stats["plan_cache_hits"] >= db.daily.shape[0] - 1
+
+
+@pytest.mark.parametrize("op", ["union", "intersection", "difference"])
+def test_bitset_service_client_bit_identical(op):
+    from repro.apps.bitset import setop_via_service
+
+    lists = [RNG.choice(256, size=30, replace=False) for _ in range(4)]
+    result, qr, ref = setop_via_service(lists, 256, op=op)
+    np.testing.assert_array_equal(np.asarray(result.bits.words),
+                                  np.asarray(ref.bits.words))
+    assert qr.n_aaps > 0
