@@ -1,0 +1,143 @@
+"""Bit-serial arithmetic throughput: maj3-adder microprograms vs word-serial.
+
+The SIMDRAM-style layer's headline trade: an n-bit in-DRAM ADD costs O(n)
+AAPs per row-block but computes 65536 elements at once without moving a
+byte over the channel, while a word-serial processor streams
+read-a + read-b + write-result per element through the memory bus. For each
+op (ADD, SUB, LT-column, LT-const, SUM) this benchmark reports
+
+  * the microprogram's AAP count and modeled per-block latency/energy
+    (`core.timing` / `core.energy`),
+  * modeled elements/s at 1 bank and at N banks (the bank-parallel
+    pipeline of `core.bankgroup.pipeline_latency_ns`), and
+  * the ratio against the word-serial baseline (Skylake-class streaming
+    bandwidth over the bytes each element must move, `core.timing`).
+
+Correctness is asserted inline: every op's engine execution (1 bank and
+N banks) is bit-identical to the NumPy reference on the measured operands.
+`us_per_call` is the wall time of the Pallas/jnp fast path on this host.
+
+Writes BENCH_arith_throughput.json (benchmarks/ + repo root).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import Row, emit, smoke_mode, time_call, \
+    write_bench_json
+from repro.core import arith_compiler, bankgroup, timing
+from repro.core.bitplane import ROW_BITS
+from repro.ops import arith as oar
+from repro.ops.predicate import VerticalColumn
+
+N_BITS = 8
+N_VALUES = 1 << 19          # elements per operand column = 8 row-blocks
+E2E_BANKS = 8
+
+
+def _word_serial_ns(n_values: int, n_bits: int, n_operands: int) -> float:
+    """Baseline: a streaming processor moves every element over the bus.
+
+    Each element moves `n_operands` reads + 1 write of ceil(n_bits/8)
+    bytes at Skylake-class effective streaming bandwidth (the same fitted
+    baseline as Fig. 9, `core.timing.SKYLAKE`).
+    """
+    bytes_per_elem = (n_bits + 7) // 8 * (n_operands + 1)
+    gbps = timing.SKYLAKE.effective_bw_gbps
+    return n_values * bytes_per_elem / gbps  # bytes / (GB/s) == ns
+
+
+def run(n_values: int = N_VALUES, e2e_banks: int = E2E_BANKS) -> list[Row]:
+    if smoke_mode():
+        n_values = min(n_values, 1 << 12)
+    rows: list[Row] = []
+    jrows: list[dict] = []
+    rng = np.random.default_rng(0)
+    M = 1 << N_BITS
+    av = rng.integers(0, M, n_values, dtype=np.uint32)
+    bv = rng.integers(0, M, n_values, dtype=np.uint32)
+    a = VerticalColumn.encode(av, N_BITS)
+    b = VerticalColumn.encode(bv, N_BITS)
+    # one 8KB row covers ROW_BITS elements per bit-plane
+    n_blocks = max(1, -(-n_values // ROW_BITS))
+    k_const = M // 3
+
+    def planes_of(col):
+        return np.asarray(col.planes)
+
+    cases = [
+        ("add", arith_compiler.ripple_add_program(N_BITS).program, 2,
+         lambda: oar.add_columns(a, b),
+         lambda banks: planes_of(oar.add_columns_dram(a, b, n_banks=banks)),
+         planes_of(oar.add_columns(a, b, use_kernel=False))),
+        ("sub", arith_compiler.ripple_sub_program(N_BITS).program, 2,
+         lambda: oar.sub_columns(a, b),
+         lambda banks: planes_of(oar.sub_columns_dram(a, b, n_banks=banks)),
+         planes_of(oar.sub_columns(a, b, use_kernel=False))),
+        ("lt_col", arith_compiler.compile_lt_columns(N_BITS).program, 2,
+         lambda: oar.lt_columns(a, b),
+         lambda banks: np.asarray(
+             oar.lt_columns_dram(a, b, n_banks=banks).words),
+         np.asarray(oar.lt_columns(a, b, use_kernel=False).words)),
+        ("lt_const", arith_compiler.compile_lt_const(
+            N_BITS, k_const).program, 1,
+         lambda: oar.lt_const(a, k_const),
+         lambda banks: np.asarray(
+             oar.lt_const_dram(a, k_const, n_banks=banks).words),
+         np.asarray(oar.lt_const(a, k_const, use_kernel=False).words)),
+        ("sum", arith_compiler.plane_readout_program(N_BITS).program, 1,
+         lambda: oar.sum_column(a),
+         lambda banks: np.asarray([oar.sum_column_dram(a, n_banks=banks)]),
+         np.asarray([int(av.sum())])),
+    ]
+
+    for name, prog, n_ops, fast, dram, expect in cases:
+        # bit-identity: engine path (1 and N banks) == NumPy-backed reference
+        for banks in (1, e2e_banks):
+            got = dram(banks)
+            assert np.array_equal(got, expect), \
+                f"{name}: engine@{banks}banks != reference"
+
+        us = time_call(lambda: fast(), iters=3, warmup=1)
+        s1 = bankgroup.pipeline_latency_ns(n_blocks, 1, prog)
+        sn = bankgroup.pipeline_latency_ns(n_blocks, e2e_banks, prog)
+        base_ns = _word_serial_ns(n_values, N_BITS, n_ops)
+        eps_1 = n_values / s1.total_ns          # elements/ns
+        eps_n = n_values / sn.total_ns
+        eps_base = n_values / base_ns
+        energy = _program_energy(prog) * n_blocks
+        speedup = s1.total_ns / sn.total_ns if e2e_banks > 1 else 1.0
+        rows.append((
+            f"arith/{name}", us,
+            f"aaps={prog.n_aap} b1_us={s1.total_ns / 1e3:.1f} "
+            f"b{e2e_banks}_us={sn.total_ns / 1e3:.1f} "
+            f"geps_b{e2e_banks}={eps_n:.2f} "
+            f"vs_word_serial={eps_n / eps_base:.2f}x "
+            f"bank_speedup={speedup:.1f}x nj={energy:.0f} "
+            f"bit_identity=yes"))
+        jrows.append({
+            "name": f"arith/{name}",
+            "bytes": n_values * ((N_BITS + 7) // 8),
+            "n_bits": N_BITS,
+            "n_values": n_values,
+            "aaps": prog.n_aap,
+            "modeled_ns": sn.total_ns,
+            "modeled_ns_1bank": s1.total_ns,
+            "word_serial_ns": base_ns,
+            "speedup": eps_n / eps_base,
+            "bank_speedup": speedup,
+            "energy_nj": energy,
+            "n_banks": e2e_banks,
+        })
+    write_bench_json("arith_throughput", jrows)
+    return rows
+
+
+def _program_energy(prog) -> float:
+    from repro.core.energy import DEFAULT_ENERGY, program_energy_nj
+
+    return program_energy_nj(prog, DEFAULT_ENERGY)
+
+
+if __name__ == "__main__":
+    emit(run(), header=True)

@@ -10,6 +10,7 @@ numbers only — wall times vary by host and stay in the CSV).
 from __future__ import annotations
 
 import json
+import os
 import pathlib
 import time
 from typing import Callable, Dict, List, Optional, Tuple
@@ -19,6 +20,13 @@ import jax
 Row = Tuple[str, float, str]
 
 BENCH_DIR = pathlib.Path(__file__).resolve().parent
+REPO_ROOT = BENCH_DIR.parent
+
+
+def smoke_mode() -> bool:
+    """CI smoke runs (BENCH_SMOKE=1) shrink operand sizes / iteration
+    counts so every benchmark still executes end-to-end in seconds."""
+    return os.environ.get("BENCH_SMOKE", "") not in ("", "0")
 
 
 def write_bench_json(bench: str, rows: List[Dict],
@@ -27,10 +35,15 @@ def write_bench_json(bench: str, rows: List[Dict],
 
     Each row is a dict with at least `name`; perf rows carry `bytes`,
     `modeled_ns`, and `speedup` so successive PRs can diff the trajectory.
+    The file lands in `benchmarks/` AND is mirrored at the repo root —
+    cross-PR trajectory tooling reads the root copies.
     """
-    path = pathlib.Path(directory or BENCH_DIR) / f"BENCH_{bench}.json"
     payload = {"bench": bench, "rows": rows}
-    path.write_text(json.dumps(payload, indent=2, sort_keys=True) + "\n")
+    text = json.dumps(payload, indent=2, sort_keys=True) + "\n"
+    path = pathlib.Path(directory or BENCH_DIR) / f"BENCH_{bench}.json"
+    path.write_text(text)
+    if directory is None:
+        (REPO_ROOT / path.name).write_text(text)
     return path
 
 

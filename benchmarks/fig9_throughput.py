@@ -21,7 +21,8 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import Row, emit, time_call, write_bench_json
+from benchmarks.common import Row, emit, smoke_mode, time_call, \
+    write_bench_json
 from repro.core import bankgroup, compiler, timing
 from repro.kernels import ref
 from repro.ops import bitwise as obw
@@ -37,16 +38,18 @@ _FNS = {
 }
 
 
-def run(e2e_banks: int = E2E_BANKS) -> list[Row]:
+def run(e2e_banks: int = E2E_BANKS, n_bytes: int = N_BYTES) -> list[Row]:
+    if smoke_mode():
+        n_bytes = min(n_bytes, 2 << 20)
     rows: list[Row] = []
     table = timing.throughput_table(banks_list=(1, 2, 4))
     table_tfaw = timing.throughput_table(banks_list=(4,), respect_tfaw=True)
 
     rng = np.random.default_rng(0)
-    words = N_BYTES // 4
+    words = n_bytes // 4
     a = rng.integers(0, 2**32, (words,), dtype=np.uint32)
     b = rng.integers(0, 2**32, (words,), dtype=np.uint32)
-    n_blocks = N_BYTES // timing.DDR3_1600.row_bytes  # row-granular blocks
+    n_blocks = n_bytes // timing.DDR3_1600.row_bytes  # row-granular blocks
 
     for op in OPS:
         args = (a,) if op == "not" else (a, b)
@@ -91,7 +94,7 @@ def run(e2e_banks: int = E2E_BANKS) -> list[Row]:
             f"bitwise_match=yes"))
         jrows.append({
             "name": f"fig9_e2e/{op}",
-            "bytes": N_BYTES,
+            "bytes": n_bytes,
             "modeled_ns": sn.total_ns,
             "speedup": speedup,
             "modeled_ns_1bank": s1.total_ns,

@@ -18,6 +18,7 @@ SECTIONS = [
     "fig11_bitweaving",
     "fig12_setops",
     "serve_qps",
+    "arith_throughput",
     "extra_apps",
     "perf_summary",
 ]

@@ -18,7 +18,7 @@ from __future__ import annotations
 
 import time
 
-from benchmarks.common import Row, emit, write_bench_json
+from benchmarks.common import Row, emit, smoke_mode, write_bench_json
 from repro.service import (WorkloadSpec, build_service, query_stream,
                            results_bit_identical, run_queries_unbatched)
 
@@ -26,6 +26,9 @@ N_BANKS = 8
 
 
 def run(spec: WorkloadSpec = WorkloadSpec()) -> list[Row]:
+    if smoke_mode():
+        spec = WorkloadSpec(n_tenants=2, n_weeks=2, domain_bits=1 << 10,
+                            n_queries=64, seed=spec.seed)
     assert spec.n_queries >= 64, "stream must exercise a real batch"
     rows: list[Row] = []
     jrows: list[dict] = []

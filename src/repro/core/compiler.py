@@ -6,10 +6,13 @@ sequences through temporary D-rows, with common-subexpression and dead-store
 elimination (the "standard compiler techniques" of §5.2).
 
 On top of that sits the **fusion pass** (`compile_expr_fused`): a
-SIMDRAM-style minimizer that (a) rewrites composite sub-DAGs into the
-cheapest native primitive (`~(a^b)` -> one XNOR program instead of XOR+NOT,
-the 3-AND/2-OR majority form -> one TRA, `a & ~b` -> a fused ANDNOT that
-rides the dual-contact negation) and (b) runs a peephole pass over the
+SIMDRAM-style minimizer that (a) applies the boolean-algebra shrink rules
+(idempotence `a & a -> a`, absorption `a | (a & b) -> a`, double negation)
+so degenerate inputs cost one RowClone copy instead of full programs,
+(b) rewrites composite sub-DAGs into the cheapest native primitive
+(`~(a^b)` -> one XNOR program instead of XOR+NOT, the 3-AND/2-OR majority
+form -> one TRA, `a & ~b` -> a fused ANDNOT that rides the dual-contact
+negation) and (c) runs a peephole pass over the
 emitted command stream that forwards values through dead temporary D-rows so
 intermediates stay in the B-group designated rows instead of bouncing
 through D-group scratch. Fused programs compute bit-identical results and
@@ -263,16 +266,37 @@ def _match_or_patterns(e: Expr) -> Optional[Expr]:
     return None
 
 
+def _absorbs(x: Expr, y: Expr, inner: str) -> bool:
+    """Does `x op y` collapse to `x` by absorption? `inner` is the dual op.
+
+    Covers the classic law (x | (x & y) = x, x & (x | y) = x) plus the
+    post-fusion spelling of the and-form: x | andnot(x, z) = x | (x & ~z)
+    = x. Children arrive already fused, so `x & ~z` appears as an andnot
+    node here, never as an `and` over a `not`.
+    """
+    kx = expr_key(x)
+    if y.op == inner and kx in (expr_key(y.args[0]), expr_key(y.args[1])):
+        return True
+    return (inner == "and" and y.op == "andnot"
+            and kx == expr_key(y.args[0]))
+
+
 def _rewrite_node(e: Expr) -> Expr:
     """One rewriting step at a node whose children are already fused."""
     if e.op == "not":
         (a,) = e.args
-        if a.op == "not":
+        if a.op == "not":                        # double negation
             return a.args[0]
         if a.op in _NOT_DUAL:
             return Expr(_NOT_DUAL[a.op], a.args)
     elif e.op == "and":
         x, y = e.args
+        if expr_key(x) == expr_key(y):           # idempotence: a & a = a
+            return x
+        if _absorbs(x, y, "or"):                 # absorption: a & (a | b) = a
+            return x
+        if _absorbs(y, x, "or"):
+            return y
         if x.op == "not" and y.op == "not":      # De Morgan beats 2x NOT
             return Expr("nor", (x.args[0], y.args[0]))
         if y.op == "not":
@@ -280,10 +304,16 @@ def _rewrite_node(e: Expr) -> Expr:
         if x.op == "not":
             return Expr("andnot", (y, x.args[0]))
     elif e.op == "or":
+        x, y = e.args
+        if expr_key(x) == expr_key(y):           # idempotence: a | a = a
+            return x
+        if _absorbs(x, y, "and"):                # absorption: a | (a & b) = a
+            return x
+        if _absorbs(y, x, "and"):
+            return y
         m = _match_or_patterns(e)
         if m is not None:
             return m
-        x, y = e.args
         if x.op == "not" and y.op == "not":
             return Expr("nand", (x.args[0], y.args[0]))
     return e

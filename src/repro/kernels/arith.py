@@ -1,0 +1,100 @@
+"""Bit-serial ripple-carry arithmetic over packed bit-planes (Pallas).
+
+The TPU fast path of `ops.arith`, mirroring `kernels/majority.py`: operand
+columns arrive as vertical bit-planes (n_bits, rows, words) and the kernel
+ripples a full adder across the planes entirely in VPU registers — carry
+never touches memory, each operand plane streams through VMEM exactly once,
+and the output planes land in one pass. SUB rides the same adder as
+a + ~b + 1 (carry-in of all-ones, complemented b). LESS-THAN is the
+MSB-first compare chain (lt/eq registers), producing one packed result
+plane. Semantics match `kernels/ref.py` oracles and the AAP microprograms
+of `core.arith_compiler` bit-for-bit (tests/test_arith.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.common import (LANE, SUBLANE, pad_to, pick_block, round_up,
+                                  use_interpret)
+
+
+def _maj(a, b, c):
+    return (a & b) | (b & c) | (c & a)
+
+
+def _ripple_kernel(n_bits: int, sub: bool):
+    def kern(a_ref, b_ref, o_ref):
+        # carry-in: 0 for add, 1 for a + ~b + 1 (two's-complement sub)
+        c = (jnp.full_like(a_ref[0], 0xFFFFFFFF) if sub
+             else jnp.zeros_like(a_ref[0]))
+        for j in range(n_bits):  # static unroll: n_bits is compile-time
+            aj = a_ref[j]
+            bj = ~b_ref[j] if sub else b_ref[j]
+            o_ref[j] = aj ^ bj ^ c
+            if j < n_bits - 1:
+                c = _maj(aj, bj, c)
+
+    return kern
+
+
+def _lt_kernel(n_bits: int):
+    def kern(a_ref, b_ref, o_ref):
+        ones = jnp.full_like(a_ref[0], 0xFFFFFFFF)
+        lt = jnp.zeros_like(a_ref[0])
+        eq = ones
+        for j in range(n_bits - 1, -1, -1):  # MSB-first compare chain
+            lt = lt | (eq & ~a_ref[j] & b_ref[j])
+            eq = eq & ~(a_ref[j] ^ b_ref[j])
+        o_ref[...] = lt
+
+    return kern
+
+
+def _planes_call(kernel, a: jax.Array, b: jax.Array, plane_out: bool,
+                 block_rows: int, block_cols: int) -> jax.Array:
+    """Shared pallas_call plumbing: pad/tile (n_bits, rows, words) operands."""
+    k, r, w = a.shape
+    br = pick_block(r, block_rows, SUBLANE)
+    bw = pick_block(w, block_cols, LANE)
+    rp, wp = round_up(r, br), round_up(w, bw)
+    ap = pad_to(jnp.asarray(a, jnp.uint32), (k, rp, wp))
+    bp = pad_to(jnp.asarray(b, jnp.uint32), (k, rp, wp))
+    out_shape = (k, rp, wp) if plane_out else (rp, wp)
+    out_block = ((k, br, bw), lambda i, j: (0, i, j)) if plane_out \
+        else ((br, bw), lambda i, j: (i, j))
+    out = pl.pallas_call(
+        kernel,
+        grid=(rp // br, wp // bw),
+        in_specs=[pl.BlockSpec((k, br, bw), lambda i, j: (0, i, j)),
+                  pl.BlockSpec((k, br, bw), lambda i, j: (0, i, j))],
+        out_specs=pl.BlockSpec(*out_block),
+        out_shape=jax.ShapeDtypeStruct(out_shape, jnp.uint32),
+        interpret=use_interpret(),
+    )(ap, bp)
+    return out[:, :r, :w] if plane_out else out[:r, :w]
+
+
+@functools.partial(jax.jit, static_argnames=("sub", "block_rows",
+                                             "block_cols"))
+def bitserial_add_kernel(a: jax.Array, b: jax.Array, sub: bool = False,
+                         block_rows: int = SUBLANE, block_cols: int = 2048
+                         ) -> jax.Array:
+    """(n_bits, rows, words) x2 -> (n_bits, rows, words) sum/difference
+    planes, wrapping modulo 2**n_bits."""
+    assert a.shape == b.shape, (a.shape, b.shape)
+    return _planes_call(_ripple_kernel(a.shape[0], sub), a, b, True,
+                        block_rows, block_cols)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "block_cols"))
+def bitserial_lt_kernel(a: jax.Array, b: jax.Array,
+                        block_rows: int = SUBLANE, block_cols: int = 2048
+                        ) -> jax.Array:
+    """(n_bits, rows, words) x2 -> (rows, words) packed `a < b` (unsigned)."""
+    assert a.shape == b.shape, (a.shape, b.shape)
+    return _planes_call(_lt_kernel(a.shape[0]), a, b, False,
+                        block_rows, block_cols)

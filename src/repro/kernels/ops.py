@@ -5,6 +5,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref
+from repro.kernels.arith import bitserial_add_kernel, bitserial_lt_kernel
 from repro.kernels.bitwise import banked_bitwise_kernel, bitwise_kernel
 from repro.kernels.bittranspose import (bit_transpose_kernel,
                                         bit_untranspose_kernel)
@@ -84,6 +85,24 @@ def bit_untranspose(planes: jax.Array, n_bits: int, **kw) -> jax.Array:
 def bitweaving_scan(planes: jax.Array, c1: int, c2: int, n_bits: int, **kw
                     ) -> jax.Array:
     return bitweaving_scan_kernel(planes, c1, c2, n_bits, **kw)
+
+
+def bitserial_add(a_planes: jax.Array, b_planes: jax.Array,
+                  sub: bool = False, **kw) -> jax.Array:
+    """(n_bits, words) or (n_bits, rows, words) plane add/sub (mod 2**n)."""
+    if a_planes.ndim == 2:
+        out = bitserial_add_kernel(a_planes[:, None, :],
+                                   b_planes[:, None, :], sub, **kw)
+        return out[:, 0]
+    return bitserial_add_kernel(a_planes, b_planes, sub, **kw)
+
+
+def bitserial_lt(a_planes: jax.Array, b_planes: jax.Array, **kw) -> jax.Array:
+    """Packed unsigned `a < b` over vertical planes."""
+    if a_planes.ndim == 2:
+        return bitserial_lt_kernel(a_planes[:, None, :],
+                                   b_planes[:, None, :], **kw)[0]
+    return bitserial_lt_kernel(a_planes, b_planes, **kw)
 
 
 def pack_signs(x: jax.Array, **kw) -> jax.Array:

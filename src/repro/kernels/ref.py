@@ -132,6 +132,44 @@ def bitweaving_scan(planes: jax.Array, c1: int, c2: int, n_bits: int) -> jax.Arr
 
 
 # ---------------------------------------------------------------------------
+# bit-serial ripple-carry arithmetic over vertical planes (SIMDRAM-style)
+# ---------------------------------------------------------------------------
+
+
+def bitserial_add(a_planes: jax.Array, b_planes: jax.Array,
+                  sub: bool = False) -> jax.Array:
+    """(n_bits, ...) x2 uint32 planes -> (n_bits, ...) sum planes.
+
+    Ripple-carry full adders per bit position; SUB is a + ~b + 1. The
+    carry/borrow out of the MSB is dropped (wrap modulo 2**n_bits), so the
+    result is exact for unsigned and two's-complement signed operands alike.
+    """
+    a = jnp.asarray(a_planes, jnp.uint32)
+    b = jnp.asarray(b_planes, jnp.uint32)
+    n_bits = a.shape[0]
+    c = (jnp.full_like(a[0], 0xFFFFFFFF) if sub else jnp.zeros_like(a[0]))
+    outs = []
+    for j in range(n_bits):
+        bj = ~b[j] if sub else b[j]
+        outs.append(a[j] ^ bj ^ c)
+        c = (a[j] & bj) | (bj & c) | (c & a[j])
+    return jnp.stack(outs)
+
+
+def bitserial_lt(a_planes: jax.Array, b_planes: jax.Array) -> jax.Array:
+    """(n_bits, ...) x2 uint32 planes -> (...) packed `a < b` (unsigned)."""
+    a = jnp.asarray(a_planes, jnp.uint32)
+    b = jnp.asarray(b_planes, jnp.uint32)
+    n_bits = a.shape[0]
+    lt = jnp.zeros_like(a[0])
+    eq = jnp.full_like(a[0], 0xFFFFFFFF)
+    for j in range(n_bits - 1, -1, -1):
+        lt = lt | (eq & ~a[j] & b[j])
+        eq = eq & ~(a[j] ^ b[j])
+    return lt
+
+
+# ---------------------------------------------------------------------------
 # sign pack / unpack (1-bit gradient compression)
 # ---------------------------------------------------------------------------
 

@@ -5,6 +5,9 @@ from repro.ops.bitwise import (bitwise_and, bitwise_or, bitwise_xor,
 from repro.ops.popcount import popcount_words, popcount_u32
 from repro.ops.transpose import to_vertical, from_vertical
 from repro.ops.predicate import VerticalColumn, scan_count
+from repro.ops.arith import (add_columns, sub_columns, lt_columns, lt_const,
+                             sum_column, add_columns_dram, sub_columns_dram,
+                             lt_columns_dram, lt_const_dram, sum_column_dram)
 from repro.ops.setops import BitSet
 from repro.ops.masked_init import masked_init, masked_fill_constant, field_mask
 from repro.ops.bloom import BloomFilter

@@ -1,0 +1,199 @@
+"""Bit-serial arithmetic over `VerticalColumn` operands (SIMDRAM-style).
+
+The deployable API of the arithmetic layer: element-wise ADD / SUB
+(two's-complement, wrapping modulo 2**n_bits), constant and column
+LESS-THAN predicates, and SUM aggregation — all over the vertical layout of
+`ops.predicate.VerticalColumn`, so a column transposes once and every
+arithmetic op after that is bit-plane streaming.
+
+Two execution paths per op, bit-identical (tests/test_arith.py):
+
+  * the fast path (`add_columns`, ...) dispatches size-aware between the
+    pure-jnp oracle (`kernels.ref`) and the fused Pallas ripple kernels
+    (`kernels.arith`) — one VMEM pass, carry in registers;
+  * the in-DRAM path (`add_columns_dram`, ...) lowers to the maj3+xor AAP
+    microprograms of `core.arith_compiler` and executes them through
+    `core.engine` — on one subarray or word-sharded across banks via
+    `n_banks=` (`core.bankgroup`).
+
+Tail lanes of a column (padding up to a multiple of 32 values) may hold
+garbage after an arithmetic op; every consumer here masks through
+`BitVector`/`tail_mask` before counting or comparing, so results over the
+`n_values` logical lanes are exact.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import arith_compiler, engine
+from repro.core.bitplane import BitVector, tail_mask
+from repro.ops.predicate import VerticalColumn
+
+_KERNEL_MIN = 1 << 16  # bits of plane data before the Pallas path pays off
+
+_A_PREFIX, _B_PREFIX, _OUT_PREFIX = "X", "Y", "S"
+
+
+def _check_pair(a: VerticalColumn, b: VerticalColumn) -> None:
+    if a.n_bits != b.n_bits:
+        raise ValueError(f"width mismatch: {a.n_bits} vs {b.n_bits} bits")
+    if a.n_values != b.n_values:
+        raise ValueError(
+            f"length mismatch: {a.n_values} vs {b.n_values} values")
+
+
+def _use_kernel(planes: jax.Array, use_kernel: Optional[bool]) -> bool:
+    if use_kernel is not None:
+        return use_kernel
+    return planes.size * 32 >= _KERNEL_MIN
+
+
+def _mask(col: VerticalColumn) -> jax.Array:
+    return jnp.asarray(tail_mask(col.n_values))
+
+
+# ---------------------------------------------------------------------------
+# fast path: ref oracle <-> Pallas ripple kernels
+# ---------------------------------------------------------------------------
+
+
+def _add(a: VerticalColumn, b: VerticalColumn, sub: bool,
+         use_kernel: Optional[bool]) -> VerticalColumn:
+    _check_pair(a, b)
+    if _use_kernel(a.planes, use_kernel):
+        from repro.kernels import ops as kops
+
+        planes = kops.bitserial_add(a.planes, b.planes, sub=sub)
+    else:
+        from repro.kernels import ref
+
+        planes = ref.bitserial_add(a.planes, b.planes, sub=sub)
+    return VerticalColumn(planes, a.n_bits, a.n_values)
+
+
+def add_columns(a: VerticalColumn, b: VerticalColumn,
+                use_kernel: Optional[bool] = None) -> VerticalColumn:
+    """(a + b) mod 2**n_bits, element-wise over the vertical layout."""
+    return _add(a, b, False, use_kernel)
+
+
+def sub_columns(a: VerticalColumn, b: VerticalColumn,
+                use_kernel: Optional[bool] = None) -> VerticalColumn:
+    """(a - b) mod 2**n_bits — exact for unsigned and two's-complement."""
+    return _add(a, b, True, use_kernel)
+
+
+def lt_columns(a: VerticalColumn, b: VerticalColumn,
+               use_kernel: Optional[bool] = None) -> BitVector:
+    """Packed predicate bitvector of element-wise unsigned `a < b`."""
+    _check_pair(a, b)
+    if _use_kernel(a.planes, use_kernel):
+        from repro.kernels import ops as kops
+
+        words = kops.bitserial_lt(a.planes, b.planes)
+    else:
+        from repro.kernels import ref
+
+        words = ref.bitserial_lt(a.planes, b.planes)
+    return BitVector(words & _mask(a), a.n_values)
+
+
+def lt_const(col: VerticalColumn, k: int,
+             use_kernel: Optional[bool] = None) -> BitVector:
+    """Packed predicate bitvector of `v < k` (unsigned compare).
+
+    Trivial bounds short-circuit (k <= 0 -> all-false, k >= 2**n ->
+    all-true); in range this is the BitWeaving scan 0 <= v <= k-1, riding
+    the existing fused between-scan kernel.
+    """
+    if k <= 0:
+        return BitVector.zeros(col.n_values)
+    if k >= (1 << col.n_bits):
+        return BitVector.ones(col.n_values)
+    return col.scan(0, k - 1, use_kernel)
+
+
+def weighted_plane_sum(planes: jax.Array, mask: jax.Array) -> int:
+    """sum_j 2**j * popcount(planes[j] & mask), accumulated in Python ints
+    (a 2**31 plane weight would overflow jnp's default int32 lattice)."""
+    from repro.ops.popcount import popcount_words
+
+    counts = popcount_words(planes & mask[None, :], axis=-1)
+    return sum(int(c) << j for j, c in enumerate(counts))
+
+
+def sum_column(col: VerticalColumn) -> int:
+    """SUM(col) over the logical lanes: sum_j 2**j * popcount(plane_j)."""
+    return weighted_plane_sum(col.planes, _mask(col))
+
+
+# ---------------------------------------------------------------------------
+# in-DRAM path: AAP microprograms through the engine / bank group
+# ---------------------------------------------------------------------------
+
+
+def _plane_state(col: VerticalColumn, prefix: str) -> dict:
+    return {f"{prefix}{j}": col.planes[j] for j in range(col.n_bits)}
+
+
+def _add_dram(a: VerticalColumn, b: VerticalColumn, sub: bool,
+              n_banks: int) -> VerticalColumn:
+    _check_pair(a, b)
+    res = arith_compiler.ripple_add_program(
+        a.n_bits, _A_PREFIX, _B_PREFIX, _OUT_PREFIX, sub=sub)
+    data = {**_plane_state(a, _A_PREFIX), **_plane_state(b, _B_PREFIX)}
+    out = engine.execute(res.program, data, outputs=res.outputs,
+                         n_banks=n_banks)
+    return VerticalColumn(jnp.stack([out[o] for o in res.outputs]),
+                          a.n_bits, a.n_values)
+
+
+def add_columns_dram(a: VerticalColumn, b: VerticalColumn,
+                     n_banks: int = 1) -> VerticalColumn:
+    """ADD through the maj3+xor AAP microprogram on the simulated machine."""
+    return _add_dram(a, b, False, n_banks)
+
+
+def sub_columns_dram(a: VerticalColumn, b: VerticalColumn,
+                     n_banks: int = 1) -> VerticalColumn:
+    """SUB (a + ~b + 1) through the AAP microprogram."""
+    return _add_dram(a, b, True, n_banks)
+
+
+def lt_columns_dram(a: VerticalColumn, b: VerticalColumn,
+                    n_banks: int = 1) -> BitVector:
+    """Element-wise `a < b` as one fused single-output AAP program."""
+    _check_pair(a, b)
+    res = arith_compiler.compile_lt_columns(a.n_bits, "OUT",
+                                            _A_PREFIX, _B_PREFIX)
+    data = {**_plane_state(a, _A_PREFIX), **_plane_state(b, _B_PREFIX)}
+    out = engine.execute(res.program, data, outputs=["OUT"],
+                         n_banks=n_banks)["OUT"]
+    return BitVector(out & _mask(a), a.n_values)
+
+
+def lt_const_dram(col: VerticalColumn, k: int, n_banks: int = 1) -> BitVector:
+    """`v < k` as a fused AAP program (trivial bounds short-circuit)."""
+    if k <= 0:
+        return BitVector.zeros(col.n_values)
+    if k >= (1 << col.n_bits):
+        return BitVector.ones(col.n_values)
+    res = arith_compiler.compile_lt_const(col.n_bits, k, "OUT", _A_PREFIX)
+    assert res is not None
+    out = engine.execute(res.program, _plane_state(col, _A_PREFIX),
+                         outputs=["OUT"], n_banks=n_banks)["OUT"]
+    return BitVector(out & _mask(col), col.n_values)
+
+
+def sum_column_dram(col: VerticalColumn, n_banks: int = 1) -> int:
+    """SUM via the plane-readout program (planes staged through the engine,
+    host-side weighted bitcount — the paper's §8.1 split)."""
+    res = arith_compiler.plane_readout_program(col.n_bits, _A_PREFIX,
+                                               _OUT_PREFIX)
+    out = engine.execute(res.program, _plane_state(col, _A_PREFIX),
+                         outputs=res.outputs, n_banks=n_banks)
+    planes = jnp.stack([out[o] for o in res.outputs])
+    return weighted_plane_sum(planes, _mask(col))

@@ -13,22 +13,25 @@ interactive query-shaped traffic over the bank group). Sub-modules:
   workload   — synthetic multi-tenant §8 query streams (bitmap analytics,
                BitWeaving scans, set algebra) for benchmarks and serving
 """
-from repro.service.catalog import Catalog, CatalogEntry, CatalogError
-from repro.service.planner import (BoundPlan, Plan, PlanCache, Planner,
-                                   QueryParseError, canonicalize, parse_query)
-from repro.service.scheduler import (MATERIALIZE, POPCOUNT, BatchReport,
-                                     Query, QueryResult, Scheduler,
-                                     results_bit_identical,
+from repro.service.catalog import (Catalog, CatalogEntry, CatalogError,
+                                   plane_name)
+from repro.service.planner import (ArithQuery, BoundPlan, Plan, PlanCache,
+                                   Planner, QueryParseError, canonicalize,
+                                   parse_any, parse_query)
+from repro.service.scheduler import (AGGREGATE, MATERIALIZE, POPCOUNT,
+                                     BatchReport, Query, QueryResult,
+                                     Scheduler, results_bit_identical,
                                      run_queries_unbatched)
 from repro.service.service import QueryService
 from repro.service.workload import WorkloadSpec, build_service, query_stream
 
 __all__ = [
-    "Catalog", "CatalogEntry", "CatalogError",
-    "BoundPlan", "Plan", "PlanCache", "Planner", "QueryParseError",
-    "canonicalize", "parse_query",
-    "MATERIALIZE", "POPCOUNT", "BatchReport", "Query", "QueryResult",
-    "Scheduler", "results_bit_identical", "run_queries_unbatched",
+    "Catalog", "CatalogEntry", "CatalogError", "plane_name",
+    "ArithQuery", "BoundPlan", "Plan", "PlanCache", "Planner",
+    "QueryParseError", "canonicalize", "parse_any", "parse_query",
+    "AGGREGATE", "MATERIALIZE", "POPCOUNT", "BatchReport", "Query",
+    "QueryResult", "Scheduler", "results_bit_identical",
+    "run_queries_unbatched",
     "QueryService",
     "WorkloadSpec", "build_service", "query_stream",
 ]

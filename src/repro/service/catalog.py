@@ -35,6 +35,15 @@ class CatalogError(KeyError):
     pass
 
 
+def plane_name(column: str, j: int) -> str:
+    """Catalog row name of bit-plane j of a registered integer column.
+
+    The one naming convention shared by the service (`register_column`),
+    the planner (arithmetic query expansion), and range-scan lowering.
+    """
+    return f"{column}.b{j}"
+
+
 @dataclasses.dataclass
 class CatalogEntry:
     """One registered bitvector: packed words + modeled DRAM placement."""
@@ -64,6 +73,10 @@ class Catalog:
     def __post_init__(self):
         self._entries: Dict[str, CatalogEntry] = {}
         self.n_bits: Optional[int] = None
+        # integer columns: name -> bit width; planes live as ordinary
+        # entries under plane_name(name, j). The planner reads this map to
+        # expand arithmetic query forms (sum/+/-/<) into plane programs.
+        self.columns: Dict[str, int] = {}
 
     # -- registration -------------------------------------------------------
 
@@ -103,6 +116,22 @@ class Catalog:
         """Register from a bool/0-1 bit array (packs it first)."""
         bits = jnp.asarray(bits)
         return self.register(name, pack_bits(bits), bits.shape[-1], group)
+
+    def register_column(self, name: str, planes, n_values: int, n_bits: int,
+                        group: Optional[str] = None) -> None:
+        """Register an integer column: one entry per vertical bit plane.
+
+        `planes` is the (n_bits, n_words) LSB-first plane stack of a
+        `VerticalColumn`; plane j lands under `plane_name(name, j)` and the
+        column's width is recorded in `self.columns` so arithmetic queries
+        (`sum(name)`, `name + other`, `name < K`) can be expanded.
+        """
+        if name in self.columns:
+            raise CatalogError(f"column {name!r} already registered")
+        for j in range(n_bits):
+            self.register(plane_name(name, j), planes[j], n_values,
+                          group=group)
+        self.columns[name] = n_bits
 
     # -- lookup -------------------------------------------------------------
 

@@ -15,18 +15,36 @@ structural `expr_key` of the canonical DAG, so
 
 A `Plan` carries the compiled program plus its derived costs: AAP count,
 per-row-block modeled latency (`core.timing`) and energy (`core.energy`).
+
+Beyond boolean queries, the grammar covers the bit-serial arithmetic layer
+(`core.arith_compiler`) over registered integer columns:
+
+  * `col < 17` / `colA < colB` — comparison predicates, expanded into
+    boolean DAGs over the columns' bit planes (usable anywhere a bitvector
+    name is: `age < 30 & male`);
+  * `colA + colB` / `colA - colB` — element-wise wrap-around add/sub,
+    compiled to the maj3+xor ripple microprogram with multi-plane outputs;
+  * `sum(col)` / `sum(colA + colB)` / `sum(colA - colB)` — SUM aggregation
+    (the scheduler's `aggregate` result mode).
+
+Expanding these needs the column-name -> bit-width map, which the catalog
+owns (`Catalog.columns`); pass it as `columns=`. Arithmetic plans ride the
+same `PlanCache`, keyed on (op, width), so every tenant's `sum(col)` over
+an 8-bit column is ONE cached microprogram.
 """
 from __future__ import annotations
 
 import dataclasses
 import re
-from typing import Dict, List, Optional, Tuple, Union
+from typing import Dict, List, Mapping, Optional, Tuple, Union
 
+from repro.core import arith_compiler
 from repro.core import energy as energy_model
 from repro.core import timing as timing_model
 from repro.core.commands import Program
 from repro.core.compiler import (CompileResult, Expr, compile_expr_fused,
                                  expr_key)
+from repro.service.catalog import plane_name
 
 DST = "OUT"
 _IN_PREFIX = "IN"
@@ -37,11 +55,12 @@ class QueryParseError(ValueError):
 
 
 # ---------------------------------------------------------------------------
-# Parser: `~` > `&` > `^` > `|`, parens, maj(a,b,c); names may contain
-# word chars plus . / : - (tenant-scoped names like "t3/wed").
+# Parser: `<` > `~` > `&` > `^` > `|`, parens, maj(a,b,c); names may contain
+# word chars plus . / : - (tenant-scoped names like "t3/wed"). Integer
+# literals appear only as the right-hand side of `<`.
 # ---------------------------------------------------------------------------
 
-_TOKEN_RE = re.compile(r"\s*([A-Za-z_][\w./:-]*|[()&|^~,])")
+_TOKEN_RE = re.compile(r"\s*([A-Za-z_][\w./:-]*|\d+|[()&|^~,<])")
 
 
 def _tokenize(text: str) -> List[str]:
@@ -59,8 +78,44 @@ def _tokenize(text: str) -> List[str]:
     return tokens
 
 
-def parse_query(text: str) -> Expr:
-    """Parse a query string over catalog names into an Expr DAG."""
+def _expand_lt(lhs: Expr, rhs: str, columns: Optional[Mapping[str, int]],
+               text: str) -> Expr:
+    """Expand `col < K` / `colA < colB` into a plane-level boolean DAG."""
+    if lhs.op != "row":
+        raise QueryParseError(
+            f"left side of '<' must be a column name in {text!r}")
+    if not columns or lhs.row not in columns:
+        raise QueryParseError(
+            f"{lhs.row!r} is not a registered integer column in {text!r}")
+    n_bits = columns[lhs.row]
+    if rhs.isdigit():
+        k = int(rhs)
+        if k <= 0 or k >= (1 << n_bits):
+            raise QueryParseError(
+                f"{lhs.row} < {k} is constant for a {n_bits}-bit column "
+                f"in {text!r}")
+        e = arith_compiler.lt_const_expr(n_bits, k, prefix=f"{lhs.row}.b")
+        assert e is not None
+        return e
+    if rhs not in columns:
+        raise QueryParseError(
+            f"{rhs!r} is not a registered integer column in {text!r}")
+    if columns[rhs] != n_bits:
+        raise QueryParseError(
+            f"width mismatch in {text!r}: {lhs.row} is {n_bits}-bit, "
+            f"{rhs} is {columns[rhs]}-bit")
+    return arith_compiler.lt_columns_expr(n_bits, f"{lhs.row}.b",
+                                          f"{rhs}.b")
+
+
+def parse_query(text: str,
+                columns: Optional[Mapping[str, int]] = None) -> Expr:
+    """Parse a query string over catalog names into an Expr DAG.
+
+    `columns` (column name -> bit width, `Catalog.columns`) enables the
+    comparison forms `col < K` and `colA < colB`, which expand to boolean
+    DAGs over the columns' bit planes.
+    """
     tokens = _tokenize(text)
     idx = 0
 
@@ -99,11 +154,18 @@ def parse_query(text: str) -> Expr:
             return Expr.of(tok)
         raise QueryParseError(f"unexpected token {tok!r} in {text!r}")
 
-    def and_level() -> Expr:
+    def cmp_atom() -> Expr:
         e = atom()
+        if peek() == "<":
+            take()
+            return _expand_lt(e, take(), columns, text)
+        return e
+
+    def and_level() -> Expr:
+        e = cmp_atom()
         while peek() == "&":
             take()
-            e = e & atom()
+            e = e & cmp_atom()
         return e
 
     def xor_level() -> Expr:
@@ -124,6 +186,71 @@ def parse_query(text: str) -> Expr:
     if idx != len(tokens):
         raise QueryParseError(f"trailing tokens {tokens[idx:]} in {text!r}")
     return e
+
+
+# ---------------------------------------------------------------------------
+# Arithmetic query forms: sum(col), col + col, col - col
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ArithQuery:
+    """A parsed arithmetic query over registered integer columns.
+
+    op: 'read' (a bare column inside sum()), 'add', or 'sub'.
+    cols: the 1 or 2 column names involved.
+    aggregate: True for sum(...) — the result is the scalar
+        sum_j 2**j * popcount(result plane j); False for a bare
+        `a + b`, whose materialized value is the result plane stack.
+    """
+
+    op: str
+    cols: Tuple[str, ...]
+    aggregate: bool
+
+
+_NAME = r"[A-Za-z_][\w./:-]*"
+# `-` is a legal name character ("weekly-total" is ONE catalog name), so a
+# subtraction operator must be preceded by whitespace: `a - b` subtracts,
+# `a-b` stays a single hyphenated leaf. `+` is never a name char.
+_OP = r"(?P<op>\+|(?<=\s)-)"
+_SUM_RE = re.compile(
+    rf"^\s*sum\s*\(\s*(?P<a>{_NAME})\s*(?:{_OP}\s*(?P<b>{_NAME})\s*)?\)\s*$")
+_ADDSUB_RE = re.compile(
+    rf"^\s*(?P<a>{_NAME})\s*{_OP}\s*(?P<b>{_NAME})\s*$")
+
+
+def parse_any(text: str, columns: Optional[Mapping[str, int]] = None
+              ) -> Union[Expr, ArithQuery]:
+    """Parse either a boolean query or an arithmetic form.
+
+    `sum(...)` is always arithmetic. A bare `a + b` / `a - b` is
+    arithmetic only when both names are registered columns — names may
+    legally contain `-`, so `weekly-total` (one hyphenated catalog name)
+    stays a boolean leaf and never turns into a subtraction.
+    """
+    m = _SUM_RE.match(text)
+    if m:
+        a, op, b = m.group("a"), m.group("op"), m.group("b")
+        if not columns or a not in columns or (b and b not in columns):
+            raise QueryParseError(
+                f"sum() needs registered integer columns in {text!r}")
+        if op is None:
+            return ArithQuery("read", (a,), True)
+        if columns[a] != columns[b]:
+            raise QueryParseError(
+                f"width mismatch in {text!r}: {columns[a]} vs {columns[b]}")
+        return ArithQuery("add" if op == "+" else "sub", (a, b), True)
+    m = _ADDSUB_RE.match(text)
+    if m and columns:
+        a, op, b = m.group("a"), m.group("op"), m.group("b")
+        if a in columns and b in columns:
+            if columns[a] != columns[b]:
+                raise QueryParseError(
+                    f"width mismatch in {text!r}: {columns[a]} vs "
+                    f"{columns[b]}")
+            return ArithQuery("add" if op == "+" else "sub", (a, b), False)
+    return parse_query(text, columns)
 
 
 # ---------------------------------------------------------------------------
@@ -151,16 +278,36 @@ def canonicalize(expr: Expr) -> Tuple[Expr, List[str]]:
     return canon, list(order)
 
 
+def _canon_leaves(e: Expr, acc: Optional[set] = None) -> set:
+    """Distinct leaf row names of a (canonical) expression DAG."""
+    if acc is None:
+        acc = set()
+    if e.op == "row":
+        acc.add(e.row)
+    else:
+        for a in e.args:
+            _canon_leaves(a, acc)
+    return acc
+
+
 @dataclasses.dataclass(frozen=True)
 class Plan:
-    """A compiled, costed query plan over canonical inputs IN0..INk."""
+    """A compiled, costed query plan over canonical inputs IN0..INk.
+
+    Boolean plans write the single row DST; arithmetic plans write one row
+    per result bit plane (`outputs`, LSB-first). Whether a query's served
+    value is the plane stack or the weighted popcount scalar is the
+    scheduler's per-query result mode, not a plan property — `sum(a + b)`
+    and a bare `a + b` share one cached plan.
+    """
 
     key: Tuple                      # expr_key of the canonical DAG
-    program: Program                # writes DST, reads IN0..INk
+    program: Program                # writes `outputs`, reads IN0..INk
     n_inputs: int
     n_temp_rows: int
     latency_ns_per_block: float     # one 8KB-row-block execution
     energy_nj_per_block: float
+    outputs: Tuple[str, ...] = (DST,)
 
     @property
     def n_aaps(self) -> int:
@@ -196,8 +343,15 @@ class PlanCache:
             return plan, True
         self.misses += 1
         result: CompileResult = compile_expr_fused(canon, DST)
-        n_inputs = len({a for a in result.program.activates()
-                        if a.startswith(_IN_PREFIX)})
+        # n_inputs counts the *bound* canonical leaves, not the rows the
+        # compiled program happens to activate: algebraic simplification can
+        # eliminate a leaf entirely (`IN0 | (IN0 & IN1)` compiles to a copy
+        # of IN0), and scanning the command stream for the IN prefix would
+        # then disagree with the planner's bindings and break the
+        # scheduler's input placement. The canonical DAG always carries
+        # every leaf, so its leaf count == len(bindings) by construction
+        # (asserted in BoundPlan).
+        n_inputs = len(_canon_leaves(canon))
         plan = Plan(
             key=key,
             program=result.program,
@@ -211,6 +365,50 @@ class PlanCache:
         self._plans[key] = plan
         return plan, False
 
+    def lookup_arith(self, op: str, n_bits: int) -> Tuple[Plan, bool]:
+        """Memoized arithmetic microprogram plan, keyed on (op, width).
+
+        The canonical shape binds the first operand's planes to
+        IN0..IN{n-1} and (for add/sub) the second's to IN{n}..IN{2n-1};
+        outputs are OUT0..OUT{n-1} LSB-first. Every tenant's `sum(col)`
+        over an equal-width column — and sum-wrapped vs bare forms of the
+        same op — hit the same entry.
+        """
+        key = ("arith", op, n_bits)
+        plan = self._plans.get(key)
+        if plan is not None:
+            self.hits += 1
+            return plan, True
+        self.misses += 1
+        if op == "read":
+            res = arith_compiler.plane_readout_program(
+                n_bits, _IN_PREFIX, DST)
+            program = res.program
+            n_inputs = n_bits
+        elif op in ("add", "sub"):
+            res = arith_compiler.ripple_add_program(
+                n_bits, "XA", "XB", DST, sub=(op == "sub"))
+            rename = {f"XA{j}": f"{_IN_PREFIX}{j}" for j in range(n_bits)}
+            rename.update({f"XB{j}": f"{_IN_PREFIX}{n_bits + j}"
+                           for j in range(n_bits)})
+            program = arith_compiler.rename_rows(res.program, rename)
+            n_inputs = 2 * n_bits
+        else:
+            raise ValueError(f"unknown arithmetic op {op!r}")
+        plan = Plan(
+            key=key,
+            program=program,
+            n_inputs=n_inputs,
+            n_temp_rows=res.n_temp_rows,
+            latency_ns_per_block=timing_model.program_latency_ns(
+                program, self.timing),
+            energy_nj_per_block=energy_model.program_energy_nj(
+                program, self.energy),
+            outputs=tuple(res.outputs),
+        )
+        self._plans[key] = plan
+        return plan, False
+
 
 @dataclasses.dataclass
 class BoundPlan:
@@ -219,6 +417,13 @@ class BoundPlan:
     plan: Plan
     bindings: List[str]             # bindings[i] backs IN{i}
     cache_hit: bool
+
+    def __post_init__(self):
+        # Eliminated leaves stay bound (the scheduler still places their
+        # rows), so the plan's input arity and the bindings must agree.
+        assert self.plan.n_inputs == len(self.bindings), (
+            f"plan expects {self.plan.n_inputs} inputs but query bound "
+            f"{len(self.bindings)} rows")
 
     def input_map(self) -> Dict[str, str]:
         return {f"{_IN_PREFIX}{i}": row
@@ -236,8 +441,30 @@ class Planner:
         """Compilations actually performed (== cache misses)."""
         return self.cache.misses
 
-    def plan(self, query: Union[str, Expr]) -> BoundPlan:
-        expr = parse_query(query) if isinstance(query, str) else query
-        canon, bindings = canonicalize(expr)
+    def plan(self, query: Union[str, Expr, ArithQuery],
+             columns: Optional[Mapping[str, int]] = None) -> BoundPlan:
+        if isinstance(query, str):
+            parsed: Union[Expr, ArithQuery] = parse_any(query, columns)
+        else:
+            parsed = query
+        if isinstance(parsed, ArithQuery):
+            return self._plan_arith(parsed, columns or {})
+        canon, bindings = canonicalize(parsed)
         plan, hit = self.cache.lookup(canon)
+        return BoundPlan(plan=plan, bindings=bindings, cache_hit=hit)
+
+    def _plan_arith(self, aq: ArithQuery,
+                    columns: Mapping[str, int]) -> BoundPlan:
+        widths = []
+        for c in aq.cols:
+            if c not in columns:
+                raise QueryParseError(
+                    f"unknown integer column {c!r} in arithmetic query")
+            widths.append(columns[c])
+        if len(set(widths)) != 1:
+            raise QueryParseError(
+                f"width mismatch in arithmetic query over {aq.cols}")
+        n_bits = widths[0]
+        bindings = [plane_name(c, j) for c in aq.cols for j in range(n_bits)]
+        plan, hit = self.cache.lookup_arith(aq.op, n_bits)
         return BoundPlan(plan=plan, bindings=bindings, cache_hit=hit)

@@ -8,12 +8,19 @@ shape (every tenant's weekly OR-tree, every range scan of the same width)
 become one stacked dispatch where the "bank axis" is the query axis — and
 executes each group through the engine in a single traced run.
 
-Two result modes per query (paper §8 workloads):
-  * `popcount`  — aggregate: COUNT(*) of the predicate bitvector (the
-    bitcount stays CPU-side in the paper; here it is one reduction over the
-    masked result words).
-  * `materialize` — the packed result bitvector itself (feeds follow-up
-    queries; the service uses it to register derived vectors).
+Three result modes per query (paper §8 workloads + the arithmetic layer):
+  * `popcount`  — COUNT(*) of the predicate bitvector (the bitcount stays
+    CPU-side in the paper; here it is one reduction over the masked result
+    words).
+  * `materialize` — the packed result itself: one word vector for boolean
+    plans, the (n_bits, words) result-plane stack for arithmetic plans
+    (feeds follow-up queries; the service registers derived vectors and
+    derived columns from it).
+  * `aggregate` — the scalar sum_j 2**j * popcount(output plane j): SUM()
+    over an arithmetic plan's result planes. On a boolean plan this
+    degenerates to popcount (one plane, weight 1). Non-materialize modes
+    on an arithmetic plan all yield this scalar; `materialize` always
+    returns the planes (that is what `materialize_column` builds on).
 
 Latency is modeled, not measured: per 8KB row-block, placing a query's
 operands in its bank costs serialized inter-bank transfers on the shared
@@ -37,28 +44,30 @@ from typing import Dict, List, Optional, Sequence, Tuple, Union
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import engine
+from repro.core import arith_compiler, engine
 from repro.core.bitplane import ROW_BITS
 from repro.core.compiler import Expr, compile_expr_fused
 from repro.core.timing import DDR3_1600, DramTiming
 from repro.ops.popcount import popcount_words
-from repro.service.catalog import Catalog
-from repro.service.planner import DST, BoundPlan, Planner
+from repro.service.catalog import Catalog, plane_name
+from repro.service.planner import (DST, ArithQuery, BoundPlan, Plan, Planner,
+                                   parse_any)
 
 POPCOUNT = "popcount"
 MATERIALIZE = "materialize"
+AGGREGATE = "aggregate"
 
 
 @dataclasses.dataclass
 class Query:
     """One client request over catalog names."""
 
-    query: Union[str, Expr]
+    query: Union[str, Expr, ArithQuery]
     mode: str = POPCOUNT
     tenant: Optional[str] = None
 
     def __post_init__(self):
-        if self.mode not in (POPCOUNT, MATERIALIZE):
+        if self.mode not in (POPCOUNT, MATERIALIZE, AGGREGATE):
             raise ValueError(f"unknown result mode {self.mode!r}")
 
 
@@ -122,25 +131,28 @@ class Scheduler:
         assert self.catalog.n_bits is not None
         return max(1, math.ceil(self.catalog.n_bits / ROW_BITS))
 
-    def _xfer_ns(self, plan_n_inputs: int) -> float:
-        # place each operand row in the bank + read the result row back out,
-        # all serialized on the shared internal bus (inter-bank RowClone)
-        return self.timing.aap_ns * (plan_n_inputs + 1)
+    def _xfer_ns(self, plan: Plan) -> float:
+        # place each operand row in the bank + read each result row back
+        # out, all serialized on the shared internal bus (inter-bank
+        # RowClone); arithmetic plans move one row per operand/result plane
+        return self.timing.aap_ns * (plan.n_inputs + len(plan.outputs))
 
     # -- functional execution ------------------------------------------------
 
     def _run_group(self, members: List[Tuple[int, BoundPlan]],
                    need_words: bool
-                   ) -> Tuple[Optional[np.ndarray], np.ndarray]:
+                   ) -> Tuple[Optional[np.ndarray], List[int]]:
         """One stacked engine dispatch for all queries sharing a plan.
 
         Stacks each canonical input IN{i} across the group's queries into a
         leading query axis — exactly the bank-axis layout of
         `core.bankgroup.BankGroup` (one broadcast program, per-bank data).
-        Returns (masked result words (len(members), n_words) or None when
-        no member materializes, per-query popcounts (len(members),)) — the
-        popcount reduction happens once per group, on device, so for
-        popcount-only groups just len(members) ints cross to the host.
+        Returns (masked result words (len(members), n_outputs, n_words) or
+        None when no member materializes, per-query scalars) — the scalar
+        is sum_j 2**j * popcount(output plane j), which for single-output
+        boolean plans is exactly the popcount. The reduction happens once
+        per group, on device, so for scalar-only groups just len(members)
+        ints cross to the host.
         """
         input_rows = [bp.input_map() for _, bp in members]
         data = {
@@ -149,11 +161,17 @@ class Scheduler:
             for name in input_rows[0]
         }
         plan = members[0][1].plan
-        out = engine.execute(plan.program, data, outputs=[DST])[DST]
-        masked = out & self.catalog.mask()
-        counts = popcount_words(masked, axis=-1)
-        words = np.asarray(masked) if need_words else None
-        return words, np.asarray(counts)
+        out = engine.execute(plan.program, data, outputs=list(plan.outputs))
+        mask = self.catalog.mask()
+        # (n_outputs, len(members), n_words), output planes LSB-first
+        masked = jnp.stack([out[o] & mask for o in plan.outputs])
+        counts = np.asarray(popcount_words(masked, axis=-1))
+        scalars = [sum(int(counts[j, s]) << j
+                       for j in range(len(plan.outputs)))
+                   for s in range(len(members))]
+        words = (np.asarray(jnp.moveaxis(masked, 0, 1))
+                 if need_words else None)
+        return words, scalars
 
     # -- the scheduler proper ------------------------------------------------
 
@@ -163,7 +181,9 @@ class Scheduler:
             return BatchReport([], 0.0, self.n_banks, 0)
 
         # 1. plan every query through the cache (hits skip recompilation)
-        bound: List[BoundPlan] = [self.planner.plan(q.query) for q in queries]
+        bound: List[BoundPlan] = [
+            self.planner.plan(q.query, columns=self.catalog.columns)
+            for q in queries]
 
         # 2. group by canonical plan -> one stacked dispatch per group
         groups: Dict[Tuple, List[Tuple[int, BoundPlan]]] = {}
@@ -174,11 +194,17 @@ class Scheduler:
         for members in groups.values():
             need_words = any(queries[idx].mode == MATERIALIZE
                              for idx, _ in members)
-            stacked, counts = self._run_group(members, need_words)
+            stacked, scalars = self._run_group(members, need_words)
+            plan = members[0][1].plan
+            # boolean plans (single DST row) materialize as a flat word
+            # vector; arithmetic plans as the (n_outputs, n_words) plane
+            # stack — even at width 1, so plane shapes stay stable
+            is_boolean = plan.outputs == (DST,)
             for slot, (idx, _) in enumerate(members):
                 if stacked is not None:
-                    words_by_idx[idx] = stacked[slot]
-                count_by_idx[idx] = int(counts[slot])
+                    w = stacked[slot]          # (n_outputs, n_words)
+                    words_by_idx[idx] = w[0] if is_boolean else w
+                count_by_idx[idx] = scalars[slot]
 
         # 3. modeled timeline: queries placed on least-loaded banks; operand
         #    transfers serialize on the shared bus, compute overlaps
@@ -188,17 +214,17 @@ class Scheduler:
         results: List[QueryResult] = []
         for idx, (q, bp) in enumerate(zip(queries, bound)):
             b = min(range(self.n_banks), key=bank_free.__getitem__)
-            xfer = self._xfer_ns(bp.plan.n_inputs)
+            xfer = self._xfer_ns(bp.plan)
             for _ in range(n_blocks):
                 start = max(bus_free, bank_free[b])
                 bus_free = start + xfer
                 bank_free[b] = bus_free + bp.plan.latency_ns_per_block
             energy = bp.plan.energy_nj_per_block * n_blocks
             value: Union[int, np.ndarray]
-            if q.mode == POPCOUNT:
-                value = count_by_idx[idx]
-            else:
+            if q.mode == MATERIALIZE:
                 value = words_by_idx[idx]
+            else:   # popcount / aggregate: the weighted-popcount scalar
+                value = count_by_idx[idx]
             results.append(QueryResult(
                 index=idx, mode=q.mode, value=value,
                 latency_ns=bank_free[b], bank=b,
@@ -237,12 +263,12 @@ def run_queries_unbatched(catalog: Catalog, queries: Sequence[Query],
 
     This is the service's ground truth: no canonical renaming, no plan
     cache, no stacking — each query compiles over its natural catalog row
-    names and runs through `engine.execute` alone on a single bank. The
-    batched scheduler must produce bit-identical values.
+    names (arithmetic forms over the library's natural X/Y plane names)
+    and runs through `engine.execute` alone on a single bank. The batched
+    scheduler must produce bit-identical values.
     """
     from repro.core.energy import DEFAULT_ENERGY, program_energy_nj
     from repro.core.timing import program_latency_ns
-    from repro.service.planner import parse_query
 
     def expr_leaves(e: Expr, acc: List[str]) -> List[str]:
         if e.op == "row":
@@ -258,24 +284,53 @@ def run_queries_unbatched(catalog: Catalog, queries: Sequence[Query],
     clock = 0.0
     results: List[QueryResult] = []
     for idx, q in enumerate(queries):
-        expr = parse_query(q.query) if isinstance(q.query, str) else q.query
-        compiled = compile_expr_fused(expr, DST)
-        leaves = expr_leaves(expr, [])
-        out = engine.execute(compiled.program, catalog.row_state(leaves),
-                             outputs=[DST])[DST]
-        words = np.asarray(out & mask)
-        exec_ns = program_latency_ns(compiled.program, timing)
-        xfer = timing.aap_ns * (len(leaves) + 1)
-        clock += n_blocks * (xfer + exec_ns)
-        value: Union[int, np.ndarray]
-        if q.mode == POPCOUNT:
-            value = int(popcount_words(jnp.asarray(words)))
+        parsed = (parse_any(q.query, catalog.columns)
+                  if isinstance(q.query, str) else q.query)
+        if isinstance(parsed, ArithQuery):
+            n_bits = catalog.columns[parsed.cols[0]]
+            if parsed.op == "read":
+                res = arith_compiler.plane_readout_program(n_bits, "X", "S")
+                data = {f"X{j}": catalog.get(plane_name(parsed.cols[0],
+                                                        j)).words
+                        for j in range(n_bits)}
+            else:
+                res = arith_compiler.ripple_add_program(
+                    n_bits, "X", "Y", "S", sub=(parsed.op == "sub"))
+                data = {f"X{j}": catalog.get(plane_name(parsed.cols[0],
+                                                        j)).words
+                        for j in range(n_bits)}
+                data.update({f"Y{j}": catalog.get(plane_name(parsed.cols[1],
+                                                             j)).words
+                             for j in range(n_bits)})
+            program, outputs = res.program, res.outputs
+            out = engine.execute(program, data, outputs=outputs)
+            planes = np.asarray(
+                jnp.stack([out[o] & mask for o in outputs]))
+            n_leaves = len(data)
+            if q.mode == MATERIALIZE:
+                value = planes
+            else:
+                from repro.ops.arith import weighted_plane_sum
+
+                value = weighted_plane_sum(jnp.asarray(planes), mask)
         else:
-            value = words
+            compiled = compile_expr_fused(parsed, DST)
+            program, outputs = compiled.program, [DST]
+            leaves = expr_leaves(parsed, [])
+            out = engine.execute(program, catalog.row_state(leaves),
+                                 outputs=[DST])[DST]
+            words = np.asarray(out & mask)
+            n_leaves = len(leaves)
+            if q.mode == MATERIALIZE:
+                value = words
+            else:
+                value = int(popcount_words(jnp.asarray(words)))
+        exec_ns = program_latency_ns(program, timing)
+        xfer = timing.aap_ns * (n_leaves + len(outputs))
+        clock += n_blocks * (xfer + exec_ns)
         results.append(QueryResult(
             index=idx, mode=q.mode, value=value, latency_ns=clock, bank=0,
-            cache_hit=False, n_aaps=compiled.program.n_aap,
-            energy_nj=n_blocks * program_energy_nj(compiled.program,
-                                                   DEFAULT_ENERGY),
+            cache_hit=False, n_aaps=program.n_aap,
+            energy_nj=n_blocks * program_energy_nj(program, DEFAULT_ENERGY),
             tenant=q.tenant))
     return BatchReport(results, clock, 1, len(queries))

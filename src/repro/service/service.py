@@ -15,6 +15,15 @@ executes as one minimized AAP program through the scheduler. The TPU fast
 path for the same predicate (`range_scan_fast`) dispatches the fused
 between-scan kernel via `ops.predicate.between_scan`; both paths return
 bit-identical result vectors (tests/test_service.py).
+
+Registered columns also unlock the bit-serial arithmetic grammar
+(`core.arith_compiler` lowered through the planner/scheduler):
+
+    svc.register_column("age", ages, 7)
+    svc.query("age < 30 & male")            # comparison predicate
+    svc.query("sum(age)").value             # SUM aggregation
+    svc.query("spend + refund")             # element-wise add (aggregate)
+    svc.materialize_column("total", "spend + refund")   # derived column
 """
 from __future__ import annotations
 
@@ -22,6 +31,7 @@ import dataclasses
 from typing import Dict, List, Optional, Sequence, Union
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core.compiler import Expr
@@ -29,8 +39,9 @@ from repro.core.timing import DDR3_1600, DramTiming
 from repro.ops.predicate import VerticalColumn, between_scan, range_scan_expr
 from repro.service.catalog import Catalog, CatalogEntry
 from repro.service.planner import Planner
-from repro.service.scheduler import (MATERIALIZE, POPCOUNT, BatchReport,
-                                     Query, QueryResult, Scheduler)
+from repro.service.scheduler import (AGGREGATE, MATERIALIZE, POPCOUNT,
+                                     BatchReport, Query, QueryResult,
+                                     Scheduler)
 
 
 @dataclasses.dataclass
@@ -64,6 +75,8 @@ class QueryService:
         Plane j of column `name` becomes catalog row `{name}.b{j}`; the
         column's logical length must equal the catalog bit domain so plane
         vectors and bitmap vectors are freely combinable in one query.
+        Registration also records the column's width, which is what lets
+        the planner expand `sum(name)` / `name + other` / `name < K`.
         """
         col = VerticalColumn.encode(values, n_bits)
         if self.catalog.n_bits is not None \
@@ -71,9 +84,26 @@ class QueryService:
             raise ValueError(
                 f"column {name!r}: {col.n_values} values != catalog domain "
                 f"{self.catalog.n_bits}")
-        for j in range(n_bits):
-            self.catalog.register(f"{name}.b{j}", col.planes[j],
-                                  col.n_values, group=group)
+        self.catalog.register_column(name, col.planes, col.n_values, n_bits,
+                                     group=group)
+        self._columns[name] = col
+        return col
+
+    def materialize_column(self, name: str, query: Union[str, Expr],
+                           group: Optional[str] = None) -> VerticalColumn:
+        """Run an arithmetic query (`a + b`, `a - b`), register the result
+        planes as a new column, re-queryable like any registered column."""
+        r = self.query(query, mode=MATERIALIZE)
+        planes = jnp.asarray(np.asarray(r.value), jnp.uint32)
+        if planes.ndim != 2:
+            raise ValueError(
+                f"{query!r} did not produce a plane stack; "
+                "materialize_column needs an arithmetic query")
+        assert self.catalog.n_bits is not None
+        col = VerticalColumn(planes, int(planes.shape[0]),
+                             self.catalog.n_bits)
+        self.catalog.register_column(name, planes, self.catalog.n_bits,
+                                     col.n_bits, group=group)
         self._columns[name] = col
         return col
 

@@ -9,6 +9,9 @@ Models the paper's §8 killer applications as an interactive query stream:
     vertical layout, queried with repeated range predicates.
   * bitvector set operations (§8.3) — per-tenant element sets, queried
     with k-ary intersections and unions.
+  * bit-serial arithmetic (SIMDRAM-style, beyond the paper) — per-tenant
+    value columns queried with `sum(col)` aggregations, `col < K`
+    comparison predicates, and `sum(colA + colB)` ripple-adder sums.
 
 The stream is deliberately repetitive in *shape* (each tenant re-asks the
 same templates, and all tenants share template structure), which is exactly
@@ -23,7 +26,7 @@ from typing import List, Tuple
 import numpy as np
 
 from repro.apps.bitmap_index import week_or
-from repro.service.scheduler import POPCOUNT, Query
+from repro.service.scheduler import AGGREGATE, POPCOUNT, Query
 from repro.service.service import QueryService
 
 
@@ -66,6 +69,10 @@ def build_service(spec: WorkloadSpec, n_banks: int = 8) -> QueryService:
                             rng.integers(0, 1 << spec.col_bits, m,
                                          dtype=np.uint32),
                             spec.col_bits, group=tenant)
+        svc.register_column(f"{tenant}/col2",
+                            rng.integers(0, 1 << spec.col_bits, m,
+                                         dtype=np.uint32),
+                            spec.col_bits, group=tenant)
     return svc
 
 
@@ -102,10 +109,21 @@ def query_stream(spec: WorkloadSpec, svc: QueryService) -> List[Query]:
         return Query(f"({t}/s0 | {t}/s1 | {t}/s2) & ~{t}/s3",
                      POPCOUNT, tenant=t)
 
+    def sum_col(t: str) -> Query:
+        return Query(f"sum({t}/col)", AGGREGATE, tenant=t)
+
+    def lt_filter(t: str, which: int) -> Query:
+        lo, _ = bounds[which]
+        k = max(1, lo)  # grammar rejects constant predicates (k == 0)
+        return Query(f"{t}/col < {k} & {t}/male", POPCOUNT, tenant=t)
+
+    def sum_add(t: str) -> Query:
+        return Query(f"sum({t}/col + {t}/col2)", AGGREGATE, tenant=t)
+
     queries: List[Query] = []
     while len(queries) < spec.n_queries:
         t = f"t{int(rng.integers(spec.n_tenants))}"
-        kind = int(rng.integers(6))
+        kind = int(rng.integers(9))
         if kind == 0:
             queries.append(weekly(t, int(rng.integers(spec.n_weeks))))
         elif kind == 1:
@@ -116,6 +134,12 @@ def query_stream(spec: WorkloadSpec, svc: QueryService) -> List[Query]:
             queries.append(range_scan(t, int(rng.integers(len(bounds)))))
         elif kind == 4:
             queries.append(intersect(t, int(rng.integers(2, spec.n_sets))))
-        else:
+        elif kind == 5:
             queries.append(union_diff(t))
+        elif kind == 6:
+            queries.append(sum_col(t))
+        elif kind == 7:
+            queries.append(lt_filter(t, int(rng.integers(len(bounds)))))
+        else:
+            queries.append(sum_add(t))
     return queries

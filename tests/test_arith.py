@@ -1,0 +1,344 @@
+"""Bit-serial arithmetic layer: maj3-adder microprograms, Pallas kernels,
+ops dispatch, and the service grammar/aggregate path — all bit-identical to
+the NumPy reference at 1 and 8 banks."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import arith_compiler, engine
+from repro.core.commands import Program
+from repro.kernels import ref
+from repro.ops import arith as oar
+from repro.ops.predicate import VerticalColumn
+from repro.ops.transpose import from_vertical
+from repro.service import (AGGREGATE, MATERIALIZE, ArithQuery, Planner,
+                           Query, QueryParseError, QueryService, parse_any,
+                           run_queries_unbatched)
+
+RNG = np.random.default_rng(11)
+
+
+def _cols(n_bits, n, seed=0):
+    rng = np.random.default_rng(seed)
+    av = rng.integers(0, 1 << n_bits, n, dtype=np.uint32)
+    bv = rng.integers(0, 1 << n_bits, n, dtype=np.uint32)
+    return (av, bv, VerticalColumn.encode(jnp.asarray(av), n_bits),
+            VerticalColumn.encode(jnp.asarray(bv), n_bits))
+
+
+def _decode(col, n):
+    return np.asarray(from_vertical(col.planes, col.n_bits,
+                                    use_kernel=False))[:n]
+
+
+# -- microprograms through the engine ----------------------------------------
+
+
+@pytest.mark.parametrize("n_bits", [1, 2, 5, 8])
+@pytest.mark.parametrize("sub", [False, True])
+def test_ripple_program_matches_numpy(n_bits, sub):
+    av, bv, a, b = _cols(n_bits, 96, seed=n_bits)
+    res = arith_compiler.ripple_add_program(n_bits, sub=sub)
+    data = {f"X{j}": a.planes[j] for j in range(n_bits)}
+    data.update({f"Y{j}": b.planes[j] for j in range(n_bits)})
+    exp = ((av - bv) if sub else (av + bv)) % (1 << n_bits)
+    for banks in (1, 8):
+        out = engine.execute(res.program, data, outputs=res.outputs,
+                             n_banks=banks)
+        col = VerticalColumn(jnp.stack([out[o] for o in res.outputs]),
+                             n_bits, 96)
+        np.testing.assert_array_equal(_decode(col, 96), exp)
+
+
+def test_adder_aap_cost_is_linear_in_width():
+    """O(n) AAPs per column-wide op — the SIMDRAM bit-serial trade."""
+    n = {w: arith_compiler.ripple_add_program(w).program.n_aap
+         for w in (8, 15, 16)}
+    per_bit = n[16] - n[15]
+    assert per_bit > 0
+    assert n[16] - n[8] == 8 * per_bit
+    # sub pays one extra NOT (2 AAPs) per middle bit for ~b
+    s = {w: arith_compiler.ripple_sub_program(w).program.n_aap
+         for w in (15, 16)}
+    assert s[16] - s[15] == per_bit + 2
+
+
+def test_plane_prefix_collision_rejected():
+    with pytest.raises(ValueError):
+        arith_compiler.ripple_add_program(3, a_prefix="B")
+    with pytest.raises(ValueError):
+        arith_compiler.lt_columns_expr(2, a_prefix="T")
+    with pytest.raises(ValueError):
+        arith_compiler.plane_readout_program(2, in_prefix="DCC")
+
+
+def test_lt_const_expr_bounds():
+    assert arith_compiler.lt_const_expr(4, 0) is None
+    assert arith_compiler.lt_const_expr(4, -3) is None
+    with pytest.raises(ValueError):
+        arith_compiler.lt_const_expr(4, 16)
+    assert arith_compiler.lt_const_expr(4, 15) is not None
+
+
+def test_rename_rows_preserves_semantics():
+    res = arith_compiler.ripple_add_program(3)
+    ren = arith_compiler.rename_rows(
+        res.program, {f"X{j}": f"IN{j}" for j in range(3)}
+        | {f"Y{j}": f"IN{3 + j}" for j in range(3)})
+    av, bv, a, b = _cols(3, 64, seed=9)
+    data = {f"IN{j}": a.planes[j] for j in range(3)}
+    data.update({f"IN{3 + j}": b.planes[j] for j in range(3)})
+    out = engine.execute(ren, data, outputs=res.outputs)
+    col = VerticalColumn(jnp.stack([out[o] for o in res.outputs]), 3, 64)
+    np.testing.assert_array_equal(_decode(col, 64), (av + bv) % 8)
+
+
+# -- kernels vs ref oracles ---------------------------------------------------
+
+
+@pytest.mark.parametrize("n_bits,rows,words", [(1, 1, 4), (6, 3, 40),
+                                               (8, 1, 130), (16, 2, 8)])
+def test_bitserial_kernels_match_ref(n_bits, rows, words):
+    from repro.kernels import ops as kops
+
+    shape = (n_bits, rows, words)
+    a = RNG.integers(0, 2**32, shape, dtype=np.uint32)
+    b = RNG.integers(0, 2**32, shape, dtype=np.uint32)
+    for sub in (False, True):
+        np.testing.assert_array_equal(
+            np.asarray(kops.bitserial_add(jnp.asarray(a), jnp.asarray(b),
+                                          sub=sub)),
+            np.asarray(ref.bitserial_add(a, b, sub=sub)), err_msg=f"sub={sub}")
+    np.testing.assert_array_equal(
+        np.asarray(kops.bitserial_lt(jnp.asarray(a), jnp.asarray(b))),
+        np.asarray(ref.bitserial_lt(a, b)))
+
+
+# -- ops layer: fast path == dram path == numpy -------------------------------
+
+
+@pytest.mark.parametrize("n_bits,n", [(1, 40), (7, 200), (8, 224)])
+def test_ops_all_paths_bit_identical(n_bits, n):
+    av, bv, a, b = _cols(n_bits, n, seed=n)
+    M = 1 << n_bits
+    cases = [
+        (oar.add_columns, oar.add_columns_dram, (av + bv) % M),
+        (oar.sub_columns, oar.sub_columns_dram, (av - bv) % M),
+    ]
+    for fast, dram, exp in cases:
+        for uk in (False, True):
+            np.testing.assert_array_equal(
+                _decode(fast(a, b, use_kernel=uk), n), exp)
+        for banks in (1, 8):
+            np.testing.assert_array_equal(
+                _decode(dram(a, b, n_banks=banks), n), exp)
+    np.testing.assert_array_equal(
+        np.asarray(oar.lt_columns(a, b).to_bits()), av < bv)
+    np.testing.assert_array_equal(
+        np.asarray(oar.lt_columns_dram(a, b, n_banks=8).to_bits()), av < bv)
+    for k in (0, 1, M // 2, M - 1, M, M + 7):
+        np.testing.assert_array_equal(
+            np.asarray(oar.lt_const(a, k).to_bits()), av < k, err_msg=str(k))
+        np.testing.assert_array_equal(
+            np.asarray(oar.lt_const_dram(a, k).to_bits()), av < k)
+    assert oar.sum_column(a) == int(av.sum())
+    assert oar.sum_column_dram(a, n_banks=8) == int(av.sum())
+
+
+def test_ops_mismatch_errors():
+    _, _, a, _ = _cols(4, 64)
+    _, _, c, _ = _cols(5, 64)
+    with pytest.raises(ValueError):
+        oar.add_columns(a, c)
+    _, _, d, _ = _cols(4, 96)
+    with pytest.raises(ValueError):
+        oar.lt_columns(a, d)
+
+
+def test_tail_padding_never_leaks():
+    """n % 32 != 0: sentinel-tail lanes must not affect counts or sums."""
+    n_bits, n = 6, 45
+    av, bv, a, b = _cols(n_bits, n, seed=7)
+    s = oar.add_columns(a, b)
+    assert oar.sum_column(s) == int(((av + bv) % 64).sum())
+    assert int(oar.lt_columns(a, b).popcount()) == int((av < bv).sum())
+
+
+# -- planner grammar ----------------------------------------------------------
+
+
+def test_parse_any_arith_forms():
+    cols = {"a": 8, "b": 8, "c": 4}
+    assert parse_any("sum(a)", cols) == ArithQuery("read", ("a",), True)
+    assert parse_any("sum(a + b)", cols) == ArithQuery("add", ("a", "b"),
+                                                       True)
+    assert parse_any("sum(a - b)", cols) == ArithQuery("sub", ("a", "b"),
+                                                       True)
+    assert parse_any("a + b", cols) == ArithQuery("add", ("a", "b"), False)
+    with pytest.raises(QueryParseError):
+        parse_any("sum(z)", cols)            # unknown column
+    with pytest.raises(QueryParseError):
+        parse_any("sum(a + c)", cols)        # width mismatch
+    with pytest.raises(QueryParseError):
+        parse_any("sum(a)", None)            # no column registry
+
+
+def test_hyphenated_names_stay_boolean():
+    """`weekly-total` is one catalog name, never a subtraction — even when
+    both halves happen to be registered columns."""
+    from repro.core.compiler import Expr
+
+    cols = {"weekly": 4, "total": 4}
+    e = parse_any("weekly-total", cols)
+    assert isinstance(e, Expr) and e.op == "row" and e.row == "weekly-total"
+    # whitespace before the minus opts into subtraction
+    sub = parse_any("weekly - total", cols)
+    assert sub == ArithQuery("sub", ("weekly", "total"), False)
+    # same rule inside sum(): sum(a-b) reads column "a-b"
+    with pytest.raises(QueryParseError):
+        parse_any("sum(weekly-total)", cols)   # "weekly-total" unregistered
+    assert parse_any("sum(weekly - total)", cols) == \
+        ArithQuery("sub", ("weekly", "total"), True)
+
+
+def test_comparison_grammar_expands_planes():
+    cols = {"age": 7}
+    e = parse_any("age < 30", cols)
+    from repro.core.compiler import Expr
+    assert isinstance(e, Expr)
+    with pytest.raises(QueryParseError):
+        parse_any("age < 0", cols)           # constant-false
+    with pytest.raises(QueryParseError):
+        parse_any("age < 128", cols)         # constant-true
+    with pytest.raises(QueryParseError):
+        parse_any("nope < 3", cols)
+
+
+def test_arith_plans_cached_by_shape():
+    planner = Planner()
+    cols = {"p": 6, "q": 6, "r": 6}
+    b1 = planner.plan("sum(p + q)", columns=cols)
+    b2 = planner.plan("sum(q + r)", columns=cols)
+    assert not b1.cache_hit and b2.cache_hit
+    assert b1.plan is b2.plan
+    assert b1.bindings[:2] == ["p.b0", "p.b1"]
+    assert b2.bindings[6] == "r.b0"
+    assert b1.plan.n_inputs == len(b1.bindings) == 12
+    assert b1.plan.outputs == tuple(f"OUT{j}" for j in range(6))
+    # sum-wrapped and bare forms of the same op share one cache entry
+    b3 = planner.plan("p + q", columns=cols)
+    assert b3.cache_hit and b3.plan is b1.plan
+
+
+# -- service end-to-end -------------------------------------------------------
+
+
+def _arith_service(n=224, seed=3):
+    rng = np.random.default_rng(seed)
+    svc = QueryService(n_banks=8)
+    spend = rng.integers(0, 256, n, dtype=np.uint32)
+    refund = rng.integers(0, 256, n, dtype=np.uint32)
+    male = rng.random(n) < 0.5
+    svc.register_column("spend", jnp.asarray(spend), 8)
+    svc.register_column("refund", jnp.asarray(refund), 8)
+    svc.register_bits("male", male)
+    return svc, spend, refund, male
+
+
+def test_service_sum_add_sub_lt():
+    svc, spend, refund, male = _arith_service()
+    assert svc.query("sum(spend)").value == int(spend.sum())
+    assert svc.query("sum(spend + refund)").value == \
+        int(((spend + refund) % 256).sum())
+    assert svc.query("sum(spend - refund)").value == \
+        int(((spend - refund) % 256).sum())
+    assert svc.query("spend < refund").value == int((spend < refund).sum())
+    assert svc.query("spend < 100 & male").value == \
+        int(((spend < 100) & male).sum())
+    # aggregate mode explicitly
+    r = svc.query("spend + refund", mode=AGGREGATE)
+    assert r.value == int(((spend + refund) % 256).sum())
+
+
+def test_service_width1_materialize_keeps_plane_shape():
+    """Regression: a 1-bit arithmetic plan still materializes as a
+    (1, n_words) plane stack (not a flat vector), batched == unbatched."""
+    rng = np.random.default_rng(4)
+    n = 96
+    p = rng.integers(0, 2, n, dtype=np.uint32)
+    q = rng.integers(0, 2, n, dtype=np.uint32)
+    svc = QueryService(n_banks=2)
+    svc.register_column("p", jnp.asarray(p), 1)
+    svc.register_column("q", jnp.asarray(q), 1)
+    queries = [Query("p + q", MATERIALIZE), Query("sum(p + q)", AGGREGATE)]
+    rep = svc.query_batch(queries)
+    assert rep.results[0].value.shape == (1, n // 32)
+    ref_rep = run_queries_unbatched(svc.catalog, queries)
+    from repro.service import results_bit_identical
+    assert results_bit_identical(rep.results, ref_rep.results)
+    assert rep.results[1].value == int(((p + q) % 2).sum())
+    col = svc.materialize_column("x", "p + q")
+    assert col.n_bits == 1
+    assert svc.query("sum(x)").value == int(((p + q) % 2).sum())
+
+
+def test_service_materialize_column_roundtrip():
+    svc, spend, refund, _ = _arith_service()
+    col = svc.materialize_column("total", "spend + refund")
+    assert col.n_bits == 8
+    total = (spend + refund) % 256
+    assert svc.query("sum(total)").value == int(total.sum())
+    assert svc.query("total < 200").value == int((total < 200).sum())
+
+
+def test_service_arith_cross_tenant_plan_cache_hits():
+    rng = np.random.default_rng(0)
+    svc = QueryService(n_banks=8)
+    vals = {}
+    for t in range(4):
+        v = rng.integers(0, 64, 96, dtype=np.uint32)
+        vals[t] = v
+        svc.register_column(f"t{t}/c", jnp.asarray(v), 6)
+    results = [svc.query(f"sum(t{t}/c)") for t in range(4)]
+    for t, r in enumerate(results):
+        assert r.value == int(vals[t].sum())
+    assert [r.cache_hit for r in results] == [False, True, True, True]
+    assert svc.stats()["plan_cache_misses"] == 1
+
+
+def test_service_arith_batched_equals_unbatched():
+    svc, spend, refund, male = _arith_service()
+    queries = [
+        Query("sum(spend)", AGGREGATE),
+        Query("spend + refund", AGGREGATE),
+        Query("sum(refund - spend)", AGGREGATE),
+        Query("spend < refund"),
+        Query("spend < 77 & male"),
+        Query("spend + refund", MATERIALIZE),
+        Query("sum(spend)", AGGREGATE),      # repeat: cache + group
+    ]
+    rep = svc.query_batch(queries)
+    ref_rep = run_queries_unbatched(svc.catalog, queries)
+    from repro.service import results_bit_identical
+    assert results_bit_identical(rep.results, ref_rep.results)
+    # 7 queries collapse to 5 plan groups: the two sum(spend) share one,
+    # and the aggregate + materialize spend+refund pair shares another
+    assert rep.n_plan_groups == 5
+
+
+def test_plan_n_inputs_matches_bindings_after_simplification():
+    """Regression (issue 3): simplification may eliminate a leaf from the
+    compiled program; n_inputs must still equal len(bindings)."""
+    planner = Planner()
+    bp = planner.plan("a | (a & b)")
+    assert bp.plan.n_aaps == 1            # simplified to a 1-AAP copy of a
+    assert bp.bindings == ["a", "b"]      # eliminated leaf stays bound
+    assert bp.plan.n_inputs == len(bp.bindings) == 2
+    # and the scheduler serves it correctly end-to-end
+    svc = QueryService(n_banks=2)
+    rng = np.random.default_rng(1)
+    a, b = rng.random(100) < 0.5, rng.random(100) < 0.5
+    svc.register_bits("a", a)
+    svc.register_bits("b", b)
+    assert svc.query("a | (a & b)").value == int(a.sum())
+    assert svc.query("a & a").value == int(a.sum())

@@ -186,6 +186,66 @@ def test_fuse_expr_rewrites():
     assert nm.op != "maj3"
 
 
+def test_algebraic_simplification_to_single_copy():
+    """Regression (issue 3): a & a and a | (a & b) are 1-AAP copies of a."""
+    a, b = Expr.of("D0"), Expr.of("D1")
+    for expr in (a & a, a | a, a | (a & b), (a & b) | a,
+                 a & (a | b), (a | b) & a, a | (b & a)):
+        r = compile_expr_fused(expr, "OUT")
+        assert len(r.program.commands) == 1, expr
+        assert (r.program.n_aap, r.program.n_ap) == (1, 0), expr
+        assert r.n_temp_rows == 0
+        data = rows(2)
+        out = np.asarray(
+            engine.execute(r.program, data, outputs=["OUT"])["OUT"])
+        np.testing.assert_array_equal(out, data["D0"])
+
+
+def test_algebraic_simplification_rewrites():
+    a, b, c = Expr.of("D0"), Expr.of("D1"), Expr.of("D2")
+    assert fuse_expr(a & a).op == "row"
+    assert fuse_expr(a | a).op == "row"
+    assert fuse_expr(a | (a & b)).op == "row"
+    assert fuse_expr(a & (a | b)).op == "row"
+    # post-fusion andnot spelling of absorption: a | (a & ~b) = a
+    assert fuse_expr(a | (a & ~b)).op == "row"
+    # nested: absorption exposes idempotence one level up
+    assert fuse_expr((a | (a & b)) & a).op == "row"
+    # shrink rules compose with the primitive rewrites
+    assert fuse_expr(~(a | (a & b))).op == "not"
+    assert fuse_expr(((a & b) | (a & b)) | c).op == "or"
+    # non-matching shapes must survive: a | (b & c) is irreducible
+    assert fuse_expr(a | (b & c)).op == "or"
+    # a | (~a & b) is NOT absorption (simplifies to a | b, a different DAG;
+    # we only apply the shrink-to-operand laws)
+    assert fuse_expr(a | (~a & b)).op == "or"
+
+
+def test_simplified_exprs_bit_identical_and_never_longer():
+    """The never-more-AAPs-than-unfused invariant holds on shrink forms."""
+    rng = np.random.default_rng(42)
+    a, b, c = Expr.of("D0"), Expr.of("D1"), Expr.of("D2")
+    cases = [
+        (a & a, lambda A, B, C: A & A),
+        (a | (a & b), lambda A, B, C: A | (A & B)),
+        (a & (a | b), lambda A, B, C: A & (A | B)),
+        ((a ^ b) | ((a ^ b) & c), lambda A, B, C: (A ^ B) | ((A ^ B) & C)),
+        ((a & a) ^ b, lambda A, B, C: A ^ B),
+        (maj(a | a, b, c), lambda A, B, C: (A & B) | (B & C) | (C & A)),
+    ]
+    for trial in range(3):
+        data = {f"D{i}": rng.integers(0, 2**32, W, dtype=np.uint32)
+                for i in range(3)}
+        A, B, C = (data[f"D{i}"] for i in range(3))
+        for expr, oracle in cases:
+            r_u = compiler.compile_expr(expr, "OUT")
+            r_f = compile_expr_fused(expr, "OUT")
+            assert len(r_f.program.commands) <= len(r_u.program.commands)
+            out = np.asarray(
+                engine.execute(r_f.program, data, outputs=["OUT"])["OUT"])
+            np.testing.assert_array_equal(out, oracle(A, B, C))
+
+
 def test_peephole_forwards_dead_temps():
     """Chained ops route intermediates through B-group rows directly."""
     a, b, c = Expr.of("D0"), Expr.of("D1"), Expr.of("D2")
