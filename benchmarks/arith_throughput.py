@@ -17,7 +17,7 @@ Correctness is asserted inline: every op's engine execution (1 bank and
 N banks) is bit-identical to the NumPy reference on the measured operands.
 `us_per_call` is the wall time of the Pallas/jnp fast path on this host.
 
-Writes BENCH_arith_throughput.json (benchmarks/ + repo root).
+Writes BENCH_arith_throughput.json at the repo root.
 """
 from __future__ import annotations
 

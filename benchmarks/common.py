@@ -4,8 +4,13 @@ Every benchmark module exposes run() -> list of (name, us_per_call, derived)
 rows, where `derived` is the paper-comparable figure (speedup, GB/s, nJ/KB,
 ...). run.py aggregates and prints the combined CSV. Benchmarks that track
 the perf trajectory across PRs additionally write machine-readable
-`BENCH_<name>.json` files via `write_bench_json` (deterministic modeled
-numbers only — wall times vary by host and stay in the CSV).
+`BENCH_<name>.json` files via `write_bench_json`. Rows carry deterministic
+modeled numbers (`modeled_ns`, `speedup`, ...) and — since the lowered-VM
+work — may also carry *measured* wall-clock fields from `measure_wall`
+(`wall_first_us` = trace+compile+run of the first call, `wall_steady_us` =
+median steady-state dispatch), so the JSON tracks real speed alongside
+modeled speed. Wall fields vary by host; trajectory tooling should compare
+their *ratios* (e.g. interpreter vs VM), not absolute values.
 """
 from __future__ import annotations
 
@@ -34,17 +39,38 @@ def write_bench_json(bench: str, rows: List[Dict],
     """Write BENCH_<bench>.json: machine-readable per-row results.
 
     Each row is a dict with at least `name`; perf rows carry `bytes`,
-    `modeled_ns`, and `speedup` so successive PRs can diff the trajectory.
-    The file lands in `benchmarks/` AND is mirrored at the repo root —
-    cross-PR trajectory tooling reads the root copies.
+    `modeled_ns`, and `speedup` (plus optional `wall_*_us` measured
+    fields) so successive PRs can diff the trajectory. The file lands at
+    the repo root — the single copy cross-PR trajectory tooling and CI
+    read (the old `benchmarks/` mirror is gone).
     """
     payload = {"bench": bench, "rows": rows}
     text = json.dumps(payload, indent=2, sort_keys=True) + "\n"
-    path = pathlib.Path(directory or BENCH_DIR) / f"BENCH_{bench}.json"
+    path = pathlib.Path(directory or REPO_ROOT) / f"BENCH_{bench}.json"
     path.write_text(text)
-    if directory is None:
-        (REPO_ROOT / path.name).write_text(text)
     return path
+
+
+def measure_wall(fn: Callable, *args, iters: int = 5) -> Dict[str, float]:
+    """Measured wall-clock of `fn(*args)`: first call vs steady state.
+
+    `wall_first_us` is the cold first call — for a jitted path that is
+    trace + compile + one run; for an eager path it equals a normal call.
+    `wall_steady_us` is the median of `iters` subsequent calls (the
+    per-dispatch cost once caches are warm). Every call blocks on the
+    result, so device work is fully accounted.
+    """
+    t0 = time.perf_counter()
+    jax.block_until_ready(fn(*args))
+    first = (time.perf_counter() - t0) * 1e6
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append((time.perf_counter() - t0) * 1e6)
+    times.sort()
+    return {"wall_first_us": first,
+            "wall_steady_us": times[len(times) // 2]}
 
 
 def time_call(fn: Callable, *args, iters: int = 5, warmup: int = 2) -> float:

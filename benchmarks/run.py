@@ -19,6 +19,7 @@ SECTIONS = [
     "fig12_setops",
     "serve_qps",
     "arith_throughput",
+    "vm_dispatch",
     "extra_apps",
     "perf_summary",
 ]

@@ -1,0 +1,189 @@
+"""Dispatch cost of the executor stack: interpreter vs scan-VM vs megakernel.
+
+The lowered register-machine executor (`core.lowering` / `kernels.vm`)
+exists to kill two wall-clock costs the micro-op interpreter pays on every
+program (paper §7 dense-AAP-stream dispatch, SIMDRAM µProgram sequencer):
+
+  * **trace/compile**: the interpreter unrolls one traced jnp op per
+    micro-op, so jitting a 32-bit ripple add means tracing and compiling a
+    multi-thousand-op jaxpr — O(program length). The scan VM's jaxpr is
+    constant-size (the opcode table is data), so trace+compile is O(1).
+  * **steady-state dispatch**: un-jitted, the interpreter re-issues every
+    micro-op eagerly per call (how `engine.execute(lowered=False)` actually
+    runs); the lowered paths are one cached executable per program shape —
+    one launch per dispatch.
+
+This benchmark *measures* both on the PR 3 arithmetic microprograms with
+operands resident on device, asserting bit-identity across all four paths:
+
+  interp_eager   engine.execute(lowered=False), per-micro-op dispatch
+  interp_jit     the same unrolled interpreter under jax.jit
+  scan_vm        lowered table through the jax.lax.scan VM (default path)
+  megakernel     lowered table through the Pallas VM (plane in VMEM)
+
+Trace and compile are timed separately and symmetrically through the AOT
+API (``jit(f).lower(args)`` then ``.compile()``, `time.perf_counter`);
+first-call/steady-state wall times come from
+`benchmarks/common.py:measure_wall` (every call `block_until_ready`).
+
+Acceptance gates (the steady-state one is enforced by CI in BENCH_SMOKE=1
+mode): the scan VM's trace+compile must beat the jitted interpreter's by
+>= 5x on the 32-bit add, and its steady-state dispatch must not be slower
+than the interpreter's. Writes BENCH_vm_dispatch.json at the repo root.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import Row, emit, measure_wall, smoke_mode, \
+    write_bench_json
+from repro.core import arith_compiler, engine, lowering
+
+ROW_WORDS = 2048            # one 8KB row (65536 bits) per plane
+SMOKE_WORDS = 128
+GATE_TRACE_SPEEDUP = 5.0    # scan-VM trace+compile vs jitted interpreter
+GATE_PROGRAM = "add32"      # acceptance program for the 5x trace gate
+SMOKE_GATE_PROGRAM = "add8"  # CI smoke gates steady-state on the 8-bit add
+
+
+def _programs(smoke: bool):
+    cases = [("add8", arith_compiler.ripple_add_program(8)),
+             ("sub8", arith_compiler.ripple_sub_program(8)),
+             ("add32", arith_compiler.ripple_add_program(32))]
+    if smoke:
+        # keep add8 (steady-state gate) and add32 (trace/compile gate)
+        cases = [c for c in cases if c[0] in ("add8", "add32")]
+    return cases
+
+
+def _aot(fn, *args) -> dict:
+    """Trace and compile `jit(fn)` separately (AOT API); returns the times
+    plus the jitted callable for steady-state measurement.
+
+    Steady state is measured on the plain jitted callable rather than the
+    AOT `compiled` object: an executable lowered from a closure over
+    device-resident constants (the opcode table) cannot be invoked with
+    the original signature on this jax version.
+    """
+    jitted = jax.jit(fn)
+    t0 = time.perf_counter()
+    traced = jitted.lower(*args)
+    t1 = time.perf_counter()
+    traced.compile()
+    t2 = time.perf_counter()
+    return {"trace_us": (t1 - t0) * 1e6, "compile_us": (t2 - t1) * 1e6,
+            "jitted": jitted}
+
+
+def run() -> list[Row]:
+    smoke = smoke_mode()
+    words = SMOKE_WORDS if smoke else ROW_WORDS
+    iters = 3 if smoke else 5
+    rng = np.random.default_rng(0)
+    rows: list[Row] = []
+    jrows: list[dict] = []
+    gates: dict[str, dict] = {}
+
+    for name, res in _programs(smoke):
+        n_bits = len(res.outputs)
+        data = {f"X{j}": jnp.asarray(rng.integers(0, 1 << 32, words,
+                                                  dtype=np.uint32))
+                for j in range(n_bits)}
+        data.update({f"Y{j}": jnp.asarray(rng.integers(0, 1 << 32, words,
+                                                       dtype=np.uint32))
+                     for j in range(n_bits)})
+        outs = list(res.outputs)
+        prog = res.program
+        lp = lowering.lower(prog)
+        metrics: dict[str, float] = {}
+        values: dict[str, np.ndarray] = {}
+
+        def record(pname, out):
+            values[pname] = np.stack([np.asarray(out[o]) for o in outs])
+
+        # interp_eager: per-call micro-op dispatch, as the service ran
+        # before the VM existed
+        fn = lambda: engine.execute(prog, data, outputs=outs,  # noqa: E731
+                                    lowered=False)
+        w = measure_wall(fn, iters=iters)
+        metrics.update({f"interp_eager_{k[5:]}": v for k, v in w.items()})
+        record("interp_eager", fn())
+
+        # interp_jit: the unrolled interpreter's natural jitted form,
+        # trace / compile timed via the AOT API
+        aot = _aot(lambda d: engine.execute(prog, d, outputs=outs,
+                                            lowered=False), data)
+        w = measure_wall(aot["jitted"], data, iters=iters)
+        metrics["interp_jit_trace_us"] = aot["trace_us"]
+        metrics["interp_jit_compile_us"] = aot["compile_us"]
+        metrics["interp_jit_steady_us"] = w["wall_steady_us"]
+        record("interp_jit", aot["jitted"](data))
+
+        # lowered paths: trace / compile of the PRODUCTION dispatch
+        # executable (core.lowering._dispatch), steady-state through
+        # engine.execute exactly as the engine/service dispatch it
+        for pname, backend in (("scan_vm", "scan"),
+                               ("megakernel", "pallas")):
+            metrics.update({f"{pname}_{k}": v for k, v in
+                            lowering.aot_compile_timings(
+                                lp, data, outs, backend).items()})
+            fn = lambda: engine.execute(prog, data, outputs=outs,  # noqa
+                                        lowered=True, backend=backend)
+            w = measure_wall(fn, iters=iters)
+            metrics[f"{pname}_steady_us"] = w["wall_steady_us"]
+            record(pname, fn())
+
+        for pname in ("interp_jit", "scan_vm", "megakernel"):
+            assert np.array_equal(values[pname], values["interp_eager"]), \
+                f"{name}/{pname} diverges from the interpreter oracle"
+
+        tc_interp = (metrics["interp_jit_trace_us"]
+                     + metrics["interp_jit_compile_us"])
+        tc_scan = (metrics["scan_vm_trace_us"]
+                   + metrics["scan_vm_compile_us"])
+        trace_speedup = tc_interp / tc_scan
+        steady_speedup = (metrics["interp_eager_steady_us"]
+                          / metrics["scan_vm_steady_us"])
+        gates[name] = {"trace_speedup": trace_speedup,
+                       "steady_speedup": steady_speedup}
+        rows.append((
+            f"vm_dispatch/{name}", metrics["scan_vm_steady_us"],
+            f"cmds={lp.n_cmds} rows={lp.n_rows} "
+            f"trace_compile_x={trace_speedup:.1f} "
+            f"steady_x={steady_speedup:.1f} "
+            f"mega_steady_us={metrics['megakernel_steady_us']:.0f} "
+            f"bit_identity=yes"))
+        jrows.append({
+            "name": f"vm_dispatch/{name}",
+            "bytes": words * 4 * n_bits,
+            "n_cmds": lp.n_cmds,
+            "n_rows": lp.n_rows,
+            "row_words": words,
+            "trace_compile_speedup": trace_speedup,
+            "steady_speedup_vs_eager": steady_speedup,
+            **{k: round(v, 1) for k, v in metrics.items()},
+        })
+
+    write_bench_json("vm_dispatch", jrows)
+
+    # acceptance gates: trace/compile O(1) must pay off >=5x on the 32-bit
+    # add; lowered steady-state must never lose to the interpreter
+    if not smoke and GATE_PROGRAM in gates:
+        t = gates[GATE_PROGRAM]["trace_speedup"]
+        assert t >= GATE_TRACE_SPEEDUP, (
+            f"{GATE_PROGRAM}: scan-VM trace+compile only {t:.1f}x faster "
+            f"than the unrolled interpreter (need >= {GATE_TRACE_SPEEDUP}x)")
+    gate_prog = SMOKE_GATE_PROGRAM if smoke else GATE_PROGRAM
+    s = gates[gate_prog]["steady_speedup"]
+    assert s >= 1.0, (
+        f"{gate_prog}: lowered steady-state dispatch is SLOWER than the "
+        f"interpreter ({s:.2f}x) — the VM lost its reason to exist")
+    return rows
+
+
+if __name__ == "__main__":
+    emit(run(), header=True)

@@ -101,13 +101,48 @@ class BankGroup:
         row_words = next(iter(sharded.values())).shape[-1]
         return cls.create(n_banks, row_words, sharded)
 
-    def run(self, program: Program) -> "BankGroup":
-        """Execute one program on every bank concurrently via vmap.
+    def run(self, program: Program, lowered: bool = True,
+            backend: str = "scan") -> "BankGroup":
+        """Execute one program on every bank concurrently.
 
         D-group rows the program references but no bank holds yet
         (destinations, temps) are created as zero rows, as in
         `engine.execute`.
+
+        With ``lowered=True`` (default) the program is compiled once to a
+        `core.lowering.LoweredProgram` and the banks execute as ONE plane
+        tensor ``(n_rows, n_banks, ..., row_words)`` through the scan VM or
+        Pallas megakernel — the bank axis is just a batch axis of the plane,
+        no per-row vmap over the dict. ``lowered=False`` keeps the vmapped
+        micro-op interpreter (the oracle).
         """
+        if lowered:
+            from repro.core import lowering
+
+            lp = lowering.lower(program)
+            # align narrow rows on the bank axis before the plane build:
+            # built-in B/C rows are (B, W) while batched operands may be
+            # (B, ..., W); right-aligned broadcasting inside the plane
+            # would pair the bank axis with a batch axis, so give every
+            # row the full rank with singleton batch dims after the bank
+            # axis (exactly what the vmapped interpreter's per-bank
+            # broadcast does)
+            ndim = max(v.ndim for v in self.rows.values())
+            rows_in = {
+                k: (v if v.ndim == ndim else
+                    v.reshape(v.shape[:1] + (1,) * (ndim - v.ndim)
+                              + v.shape[1:]))
+                for k, v in self.rows.items()
+            }
+            out = lowering.execute_lowered(
+                lp, rows_in, row_words=self.row_words, backend=backend)
+            rows = dict(self.rows)
+            written = set(lp.writes)
+            for name, v in out.items():
+                if name in written or name not in rows:
+                    rows[name] = v
+            return BankGroup(rows=rows, n_banks=self.n_banks,
+                             row_words=self.row_words)
         stacked = dict(self.rows)
         # widest row shape wins: batched operands are (B, ..., W) while the
         # built-in B/C rows are (B, W)
@@ -138,20 +173,35 @@ class BankGroup:
 
 
 def execute_banked(program: Program, data: RowState, n_banks: int,
-                   outputs: Optional[List[str]] = None) -> RowState:
+                   outputs: Optional[List[str]] = None,
+                   lowered: bool = True, backend: str = "scan") -> RowState:
     """Bank-parallel analog of `engine.execute`.
 
     Flat (..., W) operand rows are partitioned word-wise across `n_banks`
-    banks, the program runs on all banks in one vmapped dispatch, and the
-    requested output rows come back reassembled to their original width.
-    Bit-identical to `engine.execute(program, data)` for every program.
+    banks, the program runs on all banks in one dispatch (the lowered VM by
+    default — the bank axis is a batch axis of the plane tensor — or the
+    vmapped interpreter with ``lowered=False``), and the requested output
+    rows come back reassembled to their original width. Bit-identical to
+    `engine.execute(program, data)` for every program and backend.
     """
     n_words = next(iter(data.values())).shape[-1]
     sharded = {k: shard_words(jnp.asarray(v, jnp.uint32), n_banks)
                for k, v in data.items()}
     row_words = next(iter(sharded.values())).shape[-1]
+    if lowered:
+        from repro.core import lowering
+        from repro.core.engine import _check_outputs
+
+        lp = lowering.lower(program)
+        if outputs is not None:
+            _check_outputs(outputs, set(lp.row_names) | set(sharded),
+                           program)
+        out_rows = lowering.execute_lowered(lp, sharded, row_words, outputs,
+                                            backend=backend)
+        names = outputs if outputs is not None else list(out_rows)
+        return {k: unshard_words(out_rows[k], n_words) for k in names}
     group = BankGroup.create(n_banks, row_words, sharded)
-    out = group.run(program)  # creates missing destination/temp rows
+    out = group.run(program, lowered=False)  # creates missing dst/temp rows
     names = outputs if outputs is not None else list(out.rows)
     return {k: unshard_words(out.rows[k], n_words) for k in names}
 

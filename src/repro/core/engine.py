@@ -120,8 +120,21 @@ class Subarray:
         return Subarray(rows=rows, row_words=self.row_words, strict=self.strict)
 
 
+def _check_outputs(outputs: List[str], available, program: Program) -> None:
+    """Outputs must name rows the execution produces — not a bare KeyError."""
+    missing = [k for k in outputs if k not in available]
+    if missing:
+        from repro.core import lowering
+
+        produced = lowering.lower(program).writes
+        raise BuddyError(
+            f"outputs {missing} are never written and not present in the "
+            f"input data; the program writes rows {list(produced)}")
+
+
 def execute(program: Program, data: RowState, row_words: Optional[int] = None,
-            outputs: Optional[List[str]] = None, n_banks: int = 1) -> RowState:
+            outputs: Optional[List[str]] = None, n_banks: int = 1,
+            lowered: bool = True, backend: str = "scan") -> RowState:
     """One-shot helper: run `program` over `data` rows, return named rows.
 
     Rows referenced by the program but missing from `data` (e.g. destination
@@ -131,11 +144,26 @@ def execute(program: Program, data: RowState, row_words: Optional[int] = None,
     independent subarray states and executes the program on all of them in
     one vmapped dispatch (see `core.bankgroup`) — bit-identical results,
     bank-parallel schedule.
+
+    By default the program is compiled to a `core.lowering.LoweredProgram`
+    and executed by the constant-size scan VM (``backend="scan"``) or the
+    Pallas megakernel (``backend="pallas"``); ``lowered=False`` falls back
+    to the micro-op interpreter above (the oracle — bit-identical by
+    construction, re-traced per program).
     """
     if n_banks > 1:
         from repro.core import bankgroup
 
-        return bankgroup.execute_banked(program, data, n_banks, outputs)
+        return bankgroup.execute_banked(program, data, n_banks, outputs,
+                                        lowered=lowered, backend=backend)
+    if lowered:
+        from repro.core import lowering
+
+        lp = lowering.lower(program)
+        if outputs is not None:
+            _check_outputs(outputs, set(lp.row_names) | set(data), program)
+        return lowering.execute_lowered(lp, data, row_words, outputs,
+                                        backend=backend)
     if row_words is None:
         row_words = next(iter(data.values())).shape[-1]
     sample = jnp.asarray(next(iter(data.values())))
@@ -150,4 +178,5 @@ def execute(program: Program, data: RowState, row_words: Optional[int] = None,
     out = sub.run(program)
     if outputs is None:
         return out.rows
+    _check_outputs(outputs, out.rows, program)
     return {k: out.rows[k] for k in outputs}

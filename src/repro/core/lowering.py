@@ -1,0 +1,486 @@
+"""Lowering: AAP `Program` -> register-machine `LoweredProgram` + scan VM.
+
+The interpreter (`core.engine.Subarray.run`) unrolls every micro-op into a
+separate traced jnp operation over a dict of named rows, so a 32-bit ripple
+add (~384 AAPs) becomes a multi-thousand-op jaxpr that is re-traced per
+program shape and never keeps rows resident. The paper's controller (§7) —
+like SIMDRAM's µProgram sequencer and the in-DRAM bulk-bitwise execution
+engines it inspired — instead drives a *dumb sequencer* over a fixed command
+encoding. This module is that lowering:
+
+  * row names are resolved to indices in a single ``(n_rows, ..., words)``
+    uint32 **plane tensor** (fixed layout: T0..T3, DCC0, DCC1, C0, C1 at
+    indices 0..7, a write sink at 8, D-group rows after, in first-reference
+    order), and
+  * each AAP/AP command becomes one row of a static ``(n_cmds, 5)`` int32
+    **opcode table** ``(kind, src0, src1, src2, aux)`` encoding the full
+    activate semantics — n-wordline negation polarity on every source and
+    destination, and the destructive write-back of triple-row activation.
+
+Executed by ``run_scan`` — a `jax.lax.scan` virtual machine whose jaxpr is
+**constant-size regardless of program length** (the table is scan data, not
+structure) and whose jit cache is keyed only by ``(n_cmds, n_rows, words)``
+shapes, so structurally distinct programs of the same shape share one
+compiled executable — or by the Pallas megakernel (`kernels.vm`), which
+holds the whole plane tensor in VMEM for the duration of the program and
+writes back only the output rows. Both are bit-identical to the interpreter
+on every program (tests/test_lowering.py, tests/test_property_lowering.py).
+
+Command encoding
+----------------
+
+``kind`` packs the sense arity and source polarities:
+  bit 0      1 = TRA (3-wordline sense, digital majority), 0 = single sense
+  bits 2..4  polarity of src0/src1/src2 (1 = n-wordline: complement feeds
+             the bitline)
+
+Single-sense commands replicate src0 into src1/src2 so the VM step computes
+``maj3`` unconditionally (``maj3(x, x, x) == x``) — no data-dependent branch.
+
+``aux`` packs the write set:
+  bits 0..7   pos mask over fixed rows 0..7: row <- sensed value
+  bits 8..15  neg mask over fixed rows 0..7: row <- ~sensed value
+  bits 16..   index of the (at most one) D/C-group destination row; the
+              sink row when the command writes no D/C row
+
+The destructive first-ACTIVATE restore lands in the masks first and the
+second ACTIVATE's targets override them at lowering time, preserving the
+interpreter's write order. Single-wordline first activates restore their own
+sensed value and are elided as the no-ops they are.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.addressing import D_WL, resolve
+from repro.core.commands import AAP, AP, Program
+from repro.core.engine import BuddyError
+
+# Fixed plane layout: the 8 B/C-group rows, then the write sink, then
+# D-group rows in first-reference order.
+FIXED_ROWS: Tuple[str, ...] = ("T0", "T1", "T2", "T3", "DCC0", "DCC1",
+                               "C0", "C1")
+SINK = "__SINK__"
+SINK_IDX = len(FIXED_ROWS)          # 8
+N_RESERVED = SINK_IDX + 1           # fixed rows + sink
+C1_IDX = FIXED_ROWS.index("C1")
+
+KIND_TRA = 1                        # bit 0 of the kind column
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class LoweredProgram:
+    """A `Program` compiled to plane indices + a static opcode table.
+
+    ``row_names[i]`` names plane row ``i``; ``table`` is the ``(n_cmds, 5)``
+    int32 command stream (see module docstring for the encoding). ``reads``
+    are the rows whose initial contents the program observes (they must be
+    seeded in the plane); ``writes`` are every row the program ever stores
+    to (what `engine.execute` validates ``outputs`` against).
+    """
+
+    row_names: Tuple[str, ...]
+    table: np.ndarray
+    reads: Tuple[str, ...]
+    writes: Tuple[str, ...]
+    comment: str = ""
+
+    @property
+    def n_rows(self) -> int:
+        return len(self.row_names)
+
+    @property
+    def n_cmds(self) -> int:
+        return int(self.table.shape[0])
+
+    def row_index(self, name: str) -> int:
+        return self.row_names.index(name)
+
+
+class LoweringError(BuddyError):
+    """Raised at lowering time for analog-undefined command sequences —
+    the same sequences `Subarray.run` rejects at run time."""
+
+
+def _sense_wordlines(addr: str) -> Tuple[Tuple[str, str], ...]:
+    wls = resolve(addr)
+    if len(wls) == 2:
+        # Dual addresses (B8-B11) sense two cells from precharged state:
+        # majority of 2 is analog-undefined on disagreement — the
+        # interpreter raises at run time, the lowerer at compile time.
+        raise LoweringError(
+            f"{addr} raises 2 wordlines from precharged state; "
+            "majority of 2 is undefined on disagreement")
+    return wls
+
+
+def lower(program: Program) -> LoweredProgram:
+    """Compile a `Program` into a `LoweredProgram` (memoized on commands)."""
+    key = tuple(program.commands)
+    cached = _LOWER_CACHE.get(key)
+    if cached is not None:
+        return cached
+    lp = _lower_uncached(program)
+    if len(_LOWER_CACHE) > 512:
+        _LOWER_CACHE.clear()
+    _LOWER_CACHE[key] = lp
+    return lp
+
+
+_LOWER_CACHE: Dict[Tuple, LoweredProgram] = {}
+
+
+def _lower_uncached(program: Program) -> LoweredProgram:
+    names: List[str] = list(FIXED_ROWS) + [SINK]
+    index: Dict[str, int] = {n: i for i, n in enumerate(names)}
+
+    def idx_of(row: str) -> int:
+        if row not in index:
+            index[row] = len(names)
+            names.append(row)
+        return index[row]
+
+    rows_table: List[Tuple[int, int, int, int, int]] = []
+    written: set = set()
+    reads: List[str] = []
+
+    def note_read(row: str) -> None:
+        if row not in written and row not in reads:
+            reads.append(row)
+
+    for cmd in program.commands:
+        if isinstance(cmd, AAP):
+            addr1, addr2 = cmd.addr1, cmd.addr2
+        else:
+            assert isinstance(cmd, AP), cmd
+            addr1, addr2 = cmd.addr, None
+        wls = _sense_wordlines(addr1)
+
+        # sources: polarity-adjusted sensed cells; single sense replicates
+        # src0 so maj3(s0, s0, s0) == s0 needs no branch in the VM step
+        srcs = [(idx_of(r), pol != D_WL) for r, pol in wls]
+        for r, _ in wls:
+            note_read(r)
+        if len(srcs) == 1:
+            srcs = srcs * 3
+        kind = (KIND_TRA if len(wls) == 3 else 0) \
+            | (srcs[0][1] << 2) | (srcs[1][1] << 3) | (srcs[2][1] << 4)
+
+        # write set: the restore of a multi-wordline first ACTIVATE is
+        # destructive (TRA); a single-wordline restore rewrites the value
+        # it just sensed and is elided. The second ACTIVATE's targets are
+        # forced to the latched result and override on overlap.
+        write_pol: Dict[str, bool] = {}
+        if len(wls) > 1:
+            for r, pol in wls:
+                write_pol[r] = pol != D_WL
+        if addr2 is not None:
+            for r, pol in resolve(addr2):
+                write_pol[r] = pol != D_WL
+        pos_mask = neg_mask = 0
+        dst_idx = SINK_IDX
+        for r, negated in write_pol.items():
+            written.add(r)
+            i = idx_of(r)
+            if i < len(FIXED_ROWS):
+                if negated:
+                    neg_mask |= 1 << i
+                else:
+                    pos_mask |= 1 << i
+            else:
+                # D/C-group addresses raise exactly one d-wordline, so at
+                # most one non-fixed destination exists per command
+                assert dst_idx == SINK_IDX and not negated, (r, cmd)
+                dst_idx = i
+        aux = (dst_idx << 16) | (neg_mask << 8) | pos_mask
+        rows_table.append((kind, srcs[0][0], srcs[1][0], srcs[2][0], aux))
+
+    table = np.asarray(rows_table, dtype=np.int32).reshape(-1, 5)
+    return LoweredProgram(
+        row_names=tuple(names), table=table, reads=tuple(reads),
+        writes=tuple(sorted(written)), comment=program.comment)
+
+
+# ---------------------------------------------------------------------------
+# Plane tensor construction / readout
+# ---------------------------------------------------------------------------
+
+
+def make_plane(lp: LoweredProgram, data: Dict[str, jax.Array],
+               row_words: int, batch: Tuple[int, ...] = ()) -> jax.Array:
+    """Build the ``(n_rows,) + batch + (row_words,)`` uint32 plane tensor.
+
+    C1 is pre-initialized to all-ones (paper §3.5); every other row not
+    present in ``data`` starts zero, matching `engine.Subarray.create`.
+    """
+    shape = batch + (row_words,)
+    zeros = jnp.zeros(shape, jnp.uint32)
+    ones = jnp.full(shape, 0xFFFFFFFF, jnp.uint32)
+    rows = []
+    for i, name in enumerate(lp.row_names):
+        if data is not None and name in data:
+            rows.append(jnp.broadcast_to(
+                jnp.asarray(data[name], jnp.uint32), shape))
+        else:
+            rows.append(ones if i == C1_IDX else zeros)
+    return jnp.stack(rows)
+
+
+def read_rows(lp: LoweredProgram, plane: jax.Array,
+              names: List[str]) -> Dict[str, jax.Array]:
+    return {n: plane[lp.row_index(n)] for n in names}
+
+
+# ---------------------------------------------------------------------------
+# The scan VM: one lax.scan step per command, constant-size jaxpr
+# ---------------------------------------------------------------------------
+
+
+def _vm_step(plane: jax.Array, cmd: jax.Array):
+    """One command: sense (maj3 of polarity-adjusted sources) + write set.
+
+    Deliberately built from `lax.dynamic_slice` / `dynamic_update_slice`
+    rather than gather/scatter (`plane[i]` / `.at[i].set`): XLA compiles
+    the slice forms of a single-row access an order of magnitude faster,
+    and the VM's whole point is O(1) trace+compile.
+    """
+    kind = cmd[0]
+    full = jnp.uint32(0xFFFFFFFF)
+    zero = jnp.uint32(0)
+
+    def src(col: int, polbit: int) -> jax.Array:
+        row = jax.lax.dynamic_slice_in_dim(plane, cmd[col], 1, axis=0)
+        return row ^ jnp.where((kind >> polbit) & 1, full, zero)
+
+    s0, s1, s2 = src(1, 2), src(2, 3), src(3, 4)
+    v = (s0 & s1) | (s1 & s2) | (s2 & s0)       # maj3; == s0 when replicated
+
+    aux = cmd[4]
+    pos = aux & 0xFF
+    neg = (aux >> 8) & 0xFF
+    dst = aux >> 16
+    bits = jnp.arange(len(FIXED_ROWS), dtype=jnp.int32)
+    sel_shape = (len(FIXED_ROWS),) + (1,) * (plane.ndim - 1)
+    pos_sel = (((pos >> bits) & 1) == 1).reshape(sel_shape)
+    neg_sel = (((neg >> bits) & 1) == 1).reshape(sel_shape)
+    head = plane[:len(FIXED_ROWS)]
+    head = jnp.where(pos_sel, v, head)
+    head = jnp.where(neg_sel, ~v, head)
+    plane = jax.lax.dynamic_update_slice_in_dim(plane, head, 0, axis=0)
+    plane = jax.lax.dynamic_update_slice_in_dim(plane, v, dst, axis=0)
+    return plane, None
+
+
+@jax.jit
+def _scan_vm(table: jax.Array, plane: jax.Array) -> jax.Array:
+    out, _ = jax.lax.scan(_vm_step, plane, table)
+    return out
+
+
+def run_scan(lp: LoweredProgram, plane: jax.Array) -> jax.Array:
+    """Execute the opcode table over a plane tensor via the lax.scan VM.
+
+    The jaxpr size is independent of ``n_cmds`` (regression-tested) and the
+    jit cache key is purely the argument shapes, so every program lowered to
+    the same ``(n_cmds, n_rows, words)`` shape reuses one executable.
+    """
+    return _scan_vm(jnp.asarray(lp.table), plane)
+
+
+def aot_compile_timings(lp: LoweredProgram, data: Dict[str, jax.Array],
+                        outputs: Optional[List[str]] = None,
+                        backend: str = "scan") -> Dict[str, float]:
+    """Trace/compile wall times (us) of the production dispatch executable.
+
+    Lowers and compiles exactly the `_dispatch` computation that
+    `execute_lowered` would run for this binding, timing the two stages
+    separately (`benchmarks/vm_dispatch.py` reports these against the
+    jitted interpreter's O(program length) trace+compile).
+    """
+    import time
+
+    shapes = [tuple(jnp.asarray(v).shape) for v in data.values()]
+    lay = _layout(lp, tuple(sorted(data)),
+                  tuple(outputs) if outputs is not None else None)
+    args = (jnp.asarray(lay.table),
+            tuple(jnp.asarray(data[k], jnp.uint32) for k in lay.val_names),
+            ())
+    kw = dict(n_rows=lay.n_rows, out_runs=lay.out_runs,
+              row_words=int(max(s[-1] for s in shapes)),
+              batch=tuple(np.broadcast_shapes(*(s[:-1] for s in shapes))),
+              backend=backend, fixed_idx=())
+    t0 = time.perf_counter()
+    lowered = _dispatch.lower(*args, **kw)
+    t1 = time.perf_counter()
+    lowered.compile()
+    t2 = time.perf_counter()
+    return {"trace_us": (t1 - t0) * 1e6, "compile_us": (t2 - t1) * 1e6}
+
+
+def scan_vm_jaxpr(lp: LoweredProgram, plane_shape: Tuple[int, ...]):
+    """The VM's jaxpr for a given plane shape (for size regression tests)."""
+    table = jax.ShapeDtypeStruct(lp.table.shape, jnp.int32)
+    plane = jax.ShapeDtypeStruct(plane_shape, jnp.uint32)
+    return jax.make_jaxpr(
+        lambda t, p: jax.lax.scan(_vm_step, p, t)[0])(table, plane)
+
+
+# ---------------------------------------------------------------------------
+# One-shot lowered execution (the engine's default path)
+# ---------------------------------------------------------------------------
+
+
+def _coalesce(idx: Tuple[int, ...]) -> Tuple[Tuple[int, int], ...]:
+    """Consecutive index runs -> (start, stop) slices (order-preserving)."""
+    runs: List[Tuple[int, int]] = []
+    for i in idx:
+        if runs and runs[-1][1] == i:
+            runs[-1] = (runs[-1][0], i + 1)
+        else:
+            runs.append((i, i + 1))
+    return tuple(runs)
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class _Layout:
+    """A lowered program re-laid-out for one (data rows, outputs) binding.
+
+    Plane rows are renumbered so the seeded data rows form one contiguous
+    block right after the reserved rows and the output rows coalesce into
+    as few contiguous runs as possible. That makes the dispatch jaxpr
+    gather-free: plane build is a 3-piece concatenate, output extraction a
+    handful of static slices — the compile cost of the whole dispatch is
+    the scan body plus O(1) glue, however many operand planes there are.
+    """
+
+    table: np.ndarray               # opcode table over renumbered rows
+    # kept host-side on purpose: converting (and caching) a device array
+    # here would leak tracers when execute_lowered runs under an outer jit
+    val_names: Tuple[str, ...]      # data rows, in plane-block order
+    out_runs: Tuple[Tuple[int, int], ...]   # coalesced output row slices
+    out_names: Tuple[str, ...]
+    n_rows: int
+
+
+_LAYOUT_CACHE: Dict[Tuple, Tuple[LoweredProgram, _Layout]] = {}
+
+
+def _layout(lp: LoweredProgram, data_names: Tuple[str, ...],
+            outputs: Optional[Tuple[str, ...]]) -> _Layout:
+    key = (id(lp), data_names, outputs)
+    hit = _LAYOUT_CACHE.get(key)
+    if hit is not None and hit[0] is lp:
+        return hit[1]
+    index = {n: i for i, n in enumerate(lp.row_names)}
+    present = set(data_names)
+    seeded = [n for n in lp.row_names[N_RESERVED:] if n in present]
+    out_names = (tuple(o for o in outputs if o in index)
+                 if outputs is not None
+                 else tuple(n for n in lp.row_names if n != SINK))
+    # renumber: reserved rows keep indices 0..8 (the fixed-row write masks
+    # and the sink are hard-coded there), data rows next, then output rows
+    # not already seeded, then the rest
+    order = list(range(N_RESERVED))
+    order += [index[n] for n in seeded]
+    taken = set(order)
+    for o in out_names:
+        if index[o] not in taken:
+            order.append(index[o])
+            taken.add(index[o])
+    order += [i for i in range(lp.n_rows) if i not in taken]
+    remap = np.empty(lp.n_rows, dtype=np.int32)
+    remap[np.asarray(order, dtype=np.int32)] = np.arange(lp.n_rows,
+                                                         dtype=np.int32)
+    table = lp.table.copy()
+    table[:, 1:4] = remap[table[:, 1:4]]
+    aux = table[:, 4]
+    table[:, 4] = (remap[aux >> 16] << 16) | (aux & 0xFFFF)
+    layout = _Layout(
+        table=table, val_names=tuple(seeded),
+        out_runs=_coalesce(tuple(int(remap[index[o]]) for o in out_names)),
+        out_names=out_names, n_rows=lp.n_rows)
+    if len(_LAYOUT_CACHE) > 1024:
+        _LAYOUT_CACHE.clear()
+    _LAYOUT_CACHE[key] = (lp, layout)
+    return layout
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "n_rows", "out_runs", "row_words", "batch", "backend", "fixed_idx"))
+def _dispatch(table, vals, fixed_vals=(), *, n_rows, out_runs, row_words,
+              batch, backend, fixed_idx=()):
+    """Plane build + VM run + output extraction as ONE compiled dispatch.
+
+    The opcode table is a *traced* argument, so the compiled executable is
+    shared by every program whose shapes and layout counts match — only
+    ``(n_cmds, n_rows, words)`` and the static slice boundaries key the
+    jit cache, not program structure. Thanks to `_Layout` renumbering the
+    body is gather-free: concatenate [reserved rows | stacked operand
+    planes | zero tail], scan (or megakernel), slice the output runs.
+    """
+    shape = batch + (row_words,)
+    tail = n_rows - N_RESERVED - len(vals)
+    if vals:
+        block = jnp.concatenate(
+            [jnp.broadcast_to(v, (1,) + shape) for v in vals])
+        plane = jnp.pad(block, ((N_RESERVED, tail),) + ((0, 0),) * len(shape))
+    else:
+        plane = jnp.zeros((n_rows,) + shape, jnp.uint32)
+    plane = plane.at[C1_IDX].set(jnp.full(shape, 0xFFFFFFFF, jnp.uint32))
+    for i, v in zip(fixed_idx, fixed_vals):     # rare: seeded reserved rows
+        plane = plane.at[i].set(jnp.broadcast_to(v, shape))
+    if backend == "pallas":
+        from repro.kernels.vm import vm_megakernel
+
+        out_idx = tuple(i for a, b in out_runs for i in range(a, b))
+        return vm_megakernel(table, plane, out_idx)
+    out_plane, _ = jax.lax.scan(_vm_step, plane, table)
+    return jnp.concatenate([out_plane[a:b] for a, b in out_runs])
+
+
+def execute_lowered(lp: LoweredProgram, data: Dict[str, jax.Array],
+                    row_words: Optional[int] = None,
+                    outputs: Optional[List[str]] = None,
+                    backend: str = "scan") -> Dict[str, jax.Array]:
+    """Run a lowered program over named rows; returns named rows.
+
+    Mirrors `engine.execute`: rows the program references but ``data`` does
+    not provide are implicitly zero; rows in ``data`` the program never
+    touches pass through unchanged; with ``outputs=None`` the returned dict
+    covers exactly the rows the interpreter would return. ``backend`` picks
+    the `jax.lax.scan` VM (``"scan"``) or the Pallas megakernel
+    (``"pallas"``, `kernels.vm`), which loads the plane into VMEM once and
+    loops the command table on-chip. Either way the whole call — plane
+    build, program execution, output extraction — is one jitted dispatch.
+    """
+    if backend not in ("scan", "pallas"):
+        raise ValueError(f"unknown lowered backend {backend!r}")
+    # the plane's batch shape is the broadcast of every row's batch shape
+    # (right-aligned, like the interpreter's per-op jnp broadcasting):
+    # batched operands may be (..., X, W) while other rows are (W,)
+    shapes = [tuple(jnp.asarray(v).shape) for v in data.values()]
+    if row_words is None:
+        row_words = int(max(s[-1] for s in shapes))
+    batch = tuple(np.broadcast_shapes(*(s[:-1] for s in shapes)))
+    lay = _layout(lp, tuple(sorted(data)),
+                  tuple(outputs) if outputs is not None else None)
+    seeded_fixed = tuple(n for n in FIXED_ROWS if n in data)
+    out_rows = _dispatch(
+        lay.table,
+        tuple(jnp.asarray(data[k], jnp.uint32) for k in lay.val_names),
+        tuple(jnp.asarray(data[n], jnp.uint32) for n in seeded_fixed),
+        n_rows=lay.n_rows, out_runs=lay.out_runs,
+        row_words=row_words, batch=batch, backend=backend,
+        fixed_idx=tuple(FIXED_ROWS.index(n) for n in seeded_fixed))
+    result = {o: out_rows[k] for k, o in enumerate(lay.out_names)}
+    passthrough = outputs if outputs is not None else data
+    for name in passthrough:
+        if name not in result and name in data:
+            result[name] = jnp.asarray(data[name], jnp.uint32)
+    return result

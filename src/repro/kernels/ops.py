@@ -14,6 +14,7 @@ from repro.kernels.flashattn import flash_attention  # noqa: F401
 from repro.kernels.majority import majority_kernel
 from repro.kernels.popcount import popcount_kernel
 from repro.kernels.signpack import pack_signs_kernel, unpack_signs_kernel
+from repro.kernels.vm import run_megakernel, vm_megakernel  # noqa: F401
 
 
 def bitwise(op: str, *args: jax.Array, **kw) -> jax.Array:

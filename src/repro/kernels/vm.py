@@ -1,0 +1,131 @@
+"""Pallas megakernel VM: one kernel launch executes a whole AAP program.
+
+The lowered-program analog of the paper's §7 controller: instead of one
+`pallas_call` per operator (`kernels.bitwise` / `kernels.arith`), the whole
+subarray plane tensor is loaded into VMEM **once**, a `fori_loop` sequencer
+walks the static ``(n_cmds, 5)`` opcode table (scalar-prefetched, so the
+command stream is resident before the body runs — the TPU version of the
+dumb sequencer in SIMDRAM's µProgram engine), and only the requested output
+rows are written back to HBM. Data never leaves the "subarray" (VMEM) for
+the duration of the program — the TPU translation of "operands never cross
+the channel".
+
+Grid = word blocks (bitwise programs are word-local), so arbitrarily wide
+rows stream through a fixed VMEM footprint: one ``(n_rows, block_cols)``
+plane block plus the table. At the default 2048-word block a 128-row plane
+is 1 MiB — far under the ~16 MiB/core VMEM.
+
+Semantics are exactly `core.lowering._vm_step` (same encoding, same write
+order) and bit-identical to `core.engine.Subarray.run`
+(tests/test_property_lowering.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.lowering import FIXED_ROWS, LoweredProgram
+from repro.kernels.common import (LANE, SUBLANE, pad_to, pick_block, round_up,
+                                  use_interpret)
+
+_N_FIXED = len(FIXED_ROWS)
+
+
+def _vm_kernel(n_cmds: int, out_idx: tuple):
+    def kern(tbl_ref, plane_ref, out_ref, scratch):
+        # load the whole plane block into VMEM once; it stays resident for
+        # every command of the program
+        scratch[...] = plane_ref[...]
+        full = jnp.uint32(0xFFFFFFFF)
+        zero = jnp.uint32(0)
+        bits = jax.lax.broadcasted_iota(jnp.int32, (_N_FIXED, 1), 0)
+
+        def body(i, carry):
+            kind = tbl_ref[i, 0]
+
+            def src(col, polbit):
+                row = scratch[pl.ds(tbl_ref[i, col], 1), :]
+                mask = jnp.where((kind >> polbit) & 1, full, zero)
+                return row ^ mask
+
+            s0, s1, s2 = src(1, 2), src(2, 3), src(3, 4)
+            v = (s0 & s1) | (s1 & s2) | (s2 & s0)   # (1, bw) sensed value
+
+            aux = tbl_ref[i, 4]
+            pos_sel = (((aux >> bits) & 1) == 1)
+            neg_sel = ((((aux >> 8) >> bits) & 1) == 1)
+            head = scratch[0:_N_FIXED, :]
+            head = jnp.where(pos_sel, v, head)
+            head = jnp.where(neg_sel, ~v, head)
+            scratch[0:_N_FIXED, :] = head
+            scratch[pl.ds(aux >> 16, 1), :] = v     # D/C destination or sink
+            return carry
+
+        jax.lax.fori_loop(0, n_cmds, body, 0)
+        for k, ridx in enumerate(out_idx):          # static gather: only the
+            out_ref[k, :] = scratch[ridx, :]        # output rows leave VMEM
+
+    return kern
+
+
+@functools.partial(jax.jit, static_argnames=("out_idx", "block_cols"))
+def _vm_call(table: jax.Array, plane: jax.Array, out_idx: tuple,
+             block_cols: int) -> jax.Array:
+    n_rows, w = plane.shape
+    n_cmds = table.shape[0]
+    rp = round_up(n_rows, SUBLANE)
+    bw = pick_block(w, block_cols, LANE)
+    wp = round_up(w, bw)
+    plane_p = pad_to(plane, (rp, wp))
+    n_out = len(out_idx)
+    op = round_up(max(n_out, 1), SUBLANE)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(wp // bw,),
+        in_specs=[pl.BlockSpec((rp, bw), lambda j, tbl: (0, j))],
+        out_specs=pl.BlockSpec((op, bw), lambda j, tbl: (0, j)),
+        scratch_shapes=[pltpu.VMEM((rp, bw), jnp.uint32)],
+    )
+    out = pl.pallas_call(
+        _vm_kernel(n_cmds, out_idx),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((op, wp), jnp.uint32),
+        interpret=use_interpret(),
+    )(table, plane_p)
+    return out[:n_out, :w]
+
+
+def vm_megakernel(table: np.ndarray, plane: jax.Array, out_idx: tuple,
+                  block_cols: int = 2048) -> jax.Array:
+    """Run a lowered opcode table over a plane tensor in one kernel launch.
+
+    ``plane`` is ``(n_rows, words)`` uint32 (optionally with leading batch
+    axes, mapped over via vmap — the bank/query axis of
+    `core.bankgroup` / the service scheduler); returns the
+    ``(len(out_idx), words)`` output rows only.
+    """
+    plane = jnp.asarray(plane, jnp.uint32)
+    table = jnp.asarray(table, jnp.int32)
+    out_idx = tuple(int(i) for i in out_idx)
+    if use_interpret():
+        # off-TPU there is no VMEM budget and interpret-mode grid steps are
+        # the cost driver: one block per call
+        block_cols = max(block_cols, plane.shape[-1])
+    call = functools.partial(_vm_call, out_idx=out_idx,
+                             block_cols=block_cols)
+    fn = lambda p: call(table, p)  # noqa: E731
+    for _ in range(plane.ndim - 2):
+        fn = jax.vmap(fn, in_axes=-2, out_axes=-2)
+    return fn(plane)
+
+
+def run_megakernel(lp: LoweredProgram, plane: jax.Array,
+                   outputs: tuple, block_cols: int = 2048) -> jax.Array:
+    """Named-row convenience over `vm_megakernel`."""
+    out_idx = tuple(lp.row_index(o) for o in outputs)
+    return vm_megakernel(lp.table, plane, out_idx, block_cols)

@@ -14,7 +14,10 @@ Two execution paths per op, bit-identical (tests/test_arith.py):
   * the in-DRAM path (`add_columns_dram`, ...) lowers to the maj3+xor AAP
     microprograms of `core.arith_compiler` and executes them through
     `core.engine` — on one subarray or word-sharded across banks via
-    `n_banks=` (`core.bankgroup`).
+    `n_banks=` (`core.bankgroup`). By default the microprogram runs on the
+    lowered register-machine VM (`core.lowering`); `backend="pallas"`
+    selects the megakernel (`kernels.vm`, whole plane resident in VMEM for
+    the program) and `backend="interp"` the micro-op interpreter oracle.
 
 Tail lanes of a column (padding up to a multiple of 32 values) may hold
 garbage after an arithmetic op; every consumer here masks through
@@ -139,43 +142,56 @@ def _plane_state(col: VerticalColumn, prefix: str) -> dict:
     return {f"{prefix}{j}": col.planes[j] for j in range(col.n_bits)}
 
 
+def _engine_kw(backend: str) -> dict:
+    """Map the public `backend` knob onto `engine.execute` arguments."""
+    if backend == "interp":
+        return {"lowered": False}
+    if backend in ("scan", "pallas"):
+        return {"lowered": True, "backend": backend}
+    raise ValueError(f"unknown backend {backend!r}; "
+                     "expected 'scan', 'pallas', or 'interp'")
+
+
 def _add_dram(a: VerticalColumn, b: VerticalColumn, sub: bool,
-              n_banks: int) -> VerticalColumn:
+              n_banks: int, backend: str) -> VerticalColumn:
     _check_pair(a, b)
     res = arith_compiler.ripple_add_program(
         a.n_bits, _A_PREFIX, _B_PREFIX, _OUT_PREFIX, sub=sub)
     data = {**_plane_state(a, _A_PREFIX), **_plane_state(b, _B_PREFIX)}
     out = engine.execute(res.program, data, outputs=res.outputs,
-                         n_banks=n_banks)
+                         n_banks=n_banks, **_engine_kw(backend))
     return VerticalColumn(jnp.stack([out[o] for o in res.outputs]),
                           a.n_bits, a.n_values)
 
 
 def add_columns_dram(a: VerticalColumn, b: VerticalColumn,
-                     n_banks: int = 1) -> VerticalColumn:
+                     n_banks: int = 1,
+                     backend: str = "scan") -> VerticalColumn:
     """ADD through the maj3+xor AAP microprogram on the simulated machine."""
-    return _add_dram(a, b, False, n_banks)
+    return _add_dram(a, b, False, n_banks, backend)
 
 
 def sub_columns_dram(a: VerticalColumn, b: VerticalColumn,
-                     n_banks: int = 1) -> VerticalColumn:
+                     n_banks: int = 1,
+                     backend: str = "scan") -> VerticalColumn:
     """SUB (a + ~b + 1) through the AAP microprogram."""
-    return _add_dram(a, b, True, n_banks)
+    return _add_dram(a, b, True, n_banks, backend)
 
 
 def lt_columns_dram(a: VerticalColumn, b: VerticalColumn,
-                    n_banks: int = 1) -> BitVector:
+                    n_banks: int = 1, backend: str = "scan") -> BitVector:
     """Element-wise `a < b` as one fused single-output AAP program."""
     _check_pair(a, b)
     res = arith_compiler.compile_lt_columns(a.n_bits, "OUT",
                                             _A_PREFIX, _B_PREFIX)
     data = {**_plane_state(a, _A_PREFIX), **_plane_state(b, _B_PREFIX)}
     out = engine.execute(res.program, data, outputs=["OUT"],
-                         n_banks=n_banks)["OUT"]
+                         n_banks=n_banks, **_engine_kw(backend))["OUT"]
     return BitVector(out & _mask(a), a.n_values)
 
 
-def lt_const_dram(col: VerticalColumn, k: int, n_banks: int = 1) -> BitVector:
+def lt_const_dram(col: VerticalColumn, k: int, n_banks: int = 1,
+                  backend: str = "scan") -> BitVector:
     """`v < k` as a fused AAP program (trivial bounds short-circuit)."""
     if k <= 0:
         return BitVector.zeros(col.n_values)
@@ -184,16 +200,19 @@ def lt_const_dram(col: VerticalColumn, k: int, n_banks: int = 1) -> BitVector:
     res = arith_compiler.compile_lt_const(col.n_bits, k, "OUT", _A_PREFIX)
     assert res is not None
     out = engine.execute(res.program, _plane_state(col, _A_PREFIX),
-                         outputs=["OUT"], n_banks=n_banks)["OUT"]
+                         outputs=["OUT"], n_banks=n_banks,
+                         **_engine_kw(backend))["OUT"]
     return BitVector(out & _mask(col), col.n_values)
 
 
-def sum_column_dram(col: VerticalColumn, n_banks: int = 1) -> int:
+def sum_column_dram(col: VerticalColumn, n_banks: int = 1,
+                    backend: str = "scan") -> int:
     """SUM via the plane-readout program (planes staged through the engine,
     host-side weighted bitcount — the paper's §8.1 split)."""
     res = arith_compiler.plane_readout_program(col.n_bits, _A_PREFIX,
                                                _OUT_PREFIX)
     out = engine.execute(res.program, _plane_state(col, _A_PREFIX),
-                         outputs=res.outputs, n_banks=n_banks)
+                         outputs=res.outputs, n_banks=n_banks,
+                         **_engine_kw(backend))
     planes = jnp.stack([out[o] for o in res.outputs])
     return weighted_plane_sum(planes, _mask(col))

@@ -40,6 +40,7 @@ from typing import Dict, List, Mapping, Optional, Tuple, Union
 
 from repro.core import arith_compiler
 from repro.core import energy as energy_model
+from repro.core import lowering
 from repro.core import timing as timing_model
 from repro.core.commands import Program
 from repro.core.compiler import (CompileResult, Expr, compile_expr_fused,
@@ -299,6 +300,13 @@ class Plan:
     value is the plane stack or the weighted popcount scalar is the
     scheduler's per-query result mode, not a plan property — `sum(a + b)`
     and a bare `a + b` share one cached plan.
+
+    `lowered` is the plan's register-machine form (`core.lowering`): row
+    names resolved to plane indices plus the static opcode table. Caching
+    it here means the scheduler dispatches a plan-group straight into the
+    scan VM / Pallas megakernel with zero per-batch lowering work, and
+    every plan lowered to the same (n_cmds, n_rows) shape shares one jitted
+    executable.
     """
 
     key: Tuple                      # expr_key of the canonical DAG
@@ -308,6 +316,7 @@ class Plan:
     latency_ns_per_block: float     # one 8KB-row-block execution
     energy_nj_per_block: float
     outputs: Tuple[str, ...] = (DST,)
+    lowered: Optional[lowering.LoweredProgram] = None
 
     @property
     def n_aaps(self) -> int:
@@ -361,6 +370,7 @@ class PlanCache:
                 result.program, self.timing),
             energy_nj_per_block=energy_model.program_energy_nj(
                 result.program, self.energy),
+            lowered=lowering.lower(result.program),
         )
         self._plans[key] = plan
         return plan, False
@@ -405,6 +415,7 @@ class PlanCache:
             energy_nj_per_block=energy_model.program_energy_nj(
                 program, self.energy),
             outputs=tuple(res.outputs),
+            lowered=lowering.lower(program),
         )
         self._plans[key] = plan
         return plan, False

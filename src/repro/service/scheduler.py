@@ -6,7 +6,9 @@ rows concurrently (paper §5.4/§7, `core.bankgroup`). So the scheduler groups
 a batch's queries by their *canonical plan* — queries with the same program
 shape (every tenant's weekly OR-tree, every range scan of the same width)
 become one stacked dispatch where the "bank axis" is the query axis — and
-executes each group through the engine in a single traced run.
+executes each group through the plan's cached `core.lowering.LoweredProgram`
+in a single VM dispatch (scan VM or Pallas megakernel, `backend=`): one
+constant-size executable per plan shape, one kernel launch per plan-group.
 
 Three result modes per query (paper §8 workloads + the arithmetic layer):
   * `popcount`  — COUNT(*) of the predicate bitvector (the bitcount stays
@@ -44,7 +46,7 @@ from typing import Dict, List, Optional, Sequence, Tuple, Union
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import arith_compiler, engine
+from repro.core import arith_compiler, engine, lowering
 from repro.core.bitplane import ROW_BITS
 from repro.core.compiler import Expr, compile_expr_fused
 from repro.core.timing import DDR3_1600, DramTiming
@@ -117,6 +119,9 @@ class Scheduler:
     planner: Planner = dataclasses.field(default_factory=Planner)
     n_banks: int = 8
     timing: DramTiming = DDR3_1600
+    #: lowered-VM backend for plan-group dispatch: "scan" (lax.scan VM) or
+    #: "pallas" (megakernel, whole plane resident in VMEM per dispatch)
+    backend: str = "scan"
 
     def __post_init__(self):
         self.queries_served = 0
@@ -142,17 +147,20 @@ class Scheduler:
     def _run_group(self, members: List[Tuple[int, BoundPlan]],
                    need_words: bool
                    ) -> Tuple[Optional[np.ndarray], List[int]]:
-        """One stacked engine dispatch for all queries sharing a plan.
+        """One stacked VM dispatch for all queries sharing a plan.
 
         Stacks each canonical input IN{i} across the group's queries into a
         leading query axis — exactly the bank-axis layout of
-        `core.bankgroup.BankGroup` (one broadcast program, per-bank data).
-        Returns (masked result words (len(members), n_outputs, n_words) or
-        None when no member materializes, per-query scalars) — the scalar
-        is sum_j 2**j * popcount(output plane j), which for single-output
-        boolean plans is exactly the popcount. The reduction happens once
-        per group, on device, so for scalar-only groups just len(members)
-        ints cross to the host.
+        `core.bankgroup.BankGroup` (one broadcast program, per-bank data) —
+        and executes the plan's cached `LoweredProgram` through the scan VM
+        or Pallas megakernel: the whole group is ONE kernel launch over a
+        ``(n_rows, n_queries, n_words)`` plane tensor, no per-query
+        tracing. Returns (masked result words (len(members), n_outputs,
+        n_words) or None when no member materializes, per-query scalars) —
+        the scalar is sum_j 2**j * popcount(output plane j), which for
+        single-output boolean plans is exactly the popcount. The reduction
+        happens once per group, on device, so for scalar-only groups just
+        len(members) ints cross to the host.
         """
         input_rows = [bp.input_map() for _, bp in members]
         data = {
@@ -161,7 +169,14 @@ class Scheduler:
             for name in input_rows[0]
         }
         plan = members[0][1].plan
-        out = engine.execute(plan.program, data, outputs=list(plan.outputs))
+        if plan.lowered is not None:
+            out = lowering.execute_lowered(
+                plan.lowered, data, outputs=list(plan.outputs),
+                backend=self.backend)
+        else:   # plans built outside the cache fall back to the engine
+            out = engine.execute(plan.program, data,
+                                 outputs=list(plan.outputs),
+                                 backend=self.backend)
         mask = self.catalog.mask()
         # (n_outputs, len(members), n_words), output planes LSB-first
         masked = jnp.stack([out[o] & mask for o in plan.outputs])
@@ -262,10 +277,11 @@ def run_queries_unbatched(catalog: Catalog, queries: Sequence[Query],
     """Execute queries one at a time with fresh per-query compilation.
 
     This is the service's ground truth: no canonical renaming, no plan
-    cache, no stacking — each query compiles over its natural catalog row
-    names (arithmetic forms over the library's natural X/Y plane names)
-    and runs through `engine.execute` alone on a single bank. The batched
-    scheduler must produce bit-identical values.
+    cache, no stacking, no lowered VM — each query compiles over its
+    natural catalog row names (arithmetic forms over the library's natural
+    X/Y plane names) and runs through the micro-op interpreter
+    (`engine.execute(lowered=False)`) alone on a single bank. The batched
+    scheduler's VM dispatch must produce bit-identical values.
     """
     from repro.core.energy import DEFAULT_ENERGY, program_energy_nj
     from repro.core.timing import program_latency_ns
@@ -303,7 +319,11 @@ def run_queries_unbatched(catalog: Catalog, queries: Sequence[Query],
                                                              j)).words
                              for j in range(n_bits)})
             program, outputs = res.program, res.outputs
-            out = engine.execute(program, data, outputs=outputs)
+            # lowered=False: the reference path runs the micro-op
+            # interpreter so batched-VM bit-identity is checked against an
+            # independent executor, not the VM against itself
+            out = engine.execute(program, data, outputs=outputs,
+                                 lowered=False)
             planes = np.asarray(
                 jnp.stack([out[o] & mask for o in outputs]))
             n_leaves = len(data)
@@ -318,7 +338,7 @@ def run_queries_unbatched(catalog: Catalog, queries: Sequence[Query],
             program, outputs = compiled.program, [DST]
             leaves = expr_leaves(parsed, [])
             out = engine.execute(program, catalog.row_state(leaves),
-                                 outputs=[DST])[DST]
+                                 outputs=[DST], lowered=False)[DST]
             words = np.asarray(out & mask)
             n_leaves = len(leaves)
             if q.mode == MATERIALIZE:

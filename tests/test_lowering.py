@@ -1,0 +1,241 @@
+"""Lowered register-machine executor: encoding, scan VM, megakernel.
+
+The lowered paths must be bit-identical to the micro-op interpreter (the
+oracle) on every program, the scan VM's jaxpr must not grow with program
+length, and `engine.execute` must surface friendly errors instead of bare
+KeyErrors. Randomized cross-checking lives in test_property_lowering.py.
+"""
+import numpy as np
+import pytest
+
+from repro.core import compiler, engine, lowering
+from repro.core.arith_compiler import ripple_add_program, ripple_sub_program
+from repro.core.commands import AAP, AP, Program
+from repro.core.engine import BuddyError, Subarray
+from repro.kernels.vm import vm_megakernel
+
+W = 8
+
+
+def _data(rows, seed=0, words=W):
+    rng = np.random.default_rng(seed)
+    return {r: rng.integers(0, 1 << 32, words, dtype=np.uint32)
+            for r in rows}
+
+
+def _run_interp(program, data):
+    return engine.execute(program, data, lowered=False)
+
+
+def _assert_rows_equal(a, b):
+    assert set(a) == set(b)
+    for k in a:
+        np.testing.assert_array_equal(np.asarray(a[k]), np.asarray(b[k]),
+                                      err_msg=k)
+
+
+# ---------------------------------------------------------------------------
+# encoding
+# ---------------------------------------------------------------------------
+
+
+def test_lowered_layout_reserved_rows_first():
+    lp = lowering.lower(compiler.and_program("D0", "D1", "D2"))
+    assert lp.row_names[:8] == lowering.FIXED_ROWS
+    assert lp.row_names[8] == lowering.SINK
+    assert lp.table.shape[1] == 5
+    assert lp.n_cmds == 4
+
+
+def test_lower_memoizes_on_commands():
+    p1 = compiler.xor_program("D0", "D1", "D2")
+    p2 = Program(list(p1.commands), "other comment")
+    assert lowering.lower(p1) is lowering.lower(p2)
+
+
+def test_lowered_reads_and_writes():
+    lp = lowering.lower(compiler.and_program("D0", "D1", "D2"))
+    assert "D0" in lp.reads and "D1" in lp.reads
+    assert "D2" in lp.writes and "D2" not in lp.reads
+
+
+def test_lowering_rejects_dual_wordline_first_activate():
+    # B8 raises 2 wordlines from precharged state: analog-undefined, the
+    # interpreter raises at run time, the lowerer at compile time
+    with pytest.raises(BuddyError):
+        lowering.lower(Program([AAP("B8", "D0")]))
+
+
+# ---------------------------------------------------------------------------
+# bit-identity with the interpreter
+# ---------------------------------------------------------------------------
+
+PROGRAMS = {
+    "and": (compiler.and_program("D0", "D1", "D2"), ("D0", "D1")),
+    "xor": (compiler.xor_program("D0", "D1", "D2"), ("D0", "D1")),
+    "xnor": (compiler.xnor_program("D0", "D1", "D2"), ("D0", "D1")),
+    "not": (compiler.not_program("D0", "D1"), ("D0",)),
+    "maj3": (compiler.maj3_program("D0", "D1", "D2", "D3"),
+             ("D0", "D1", "D2")),
+    "andnot": (compiler.andnot_program("D0", "D1", "D2"), ("D0", "D1")),
+    "copy": (compiler.copy_program("D0", "D1"), ("D0",)),
+    "ap_tra": (Program([AAP("D0", "B0"), AAP("D1", "B1"), AAP("D2", "B2"),
+                        AP("B12"), AAP("B0", "D3")]),
+               ("D0", "D1", "D2")),
+}
+
+
+@pytest.mark.parametrize("name", sorted(PROGRAMS))
+def test_scan_vm_matches_interpreter_all_rows(name):
+    program, inputs = PROGRAMS[name]
+    data = _data(inputs, seed=hash(name) % 1000)
+    ref = _run_interp(program, data)
+    got = engine.execute(program, data, lowered=True)
+    _assert_rows_equal(ref, got)
+
+
+@pytest.mark.parametrize("name", sorted(PROGRAMS))
+def test_megakernel_matches_interpreter(name):
+    program, inputs = PROGRAMS[name]
+    data = _data(inputs, seed=hash(name) % 1000)
+    ref = _run_interp(program, data)
+    got = engine.execute(program, data, lowered=True, backend="pallas")
+    _assert_rows_equal(ref, got)
+
+
+@pytest.mark.parametrize("n_bits", [1, 3, 8])
+@pytest.mark.parametrize("sub", [False, True])
+def test_arith_microprograms_all_backends(n_bits, sub):
+    res = (ripple_sub_program if sub else ripple_add_program)(n_bits)
+    rows = [f"X{j}" for j in range(n_bits)] + [f"Y{j}" for j in range(n_bits)]
+    data = _data(rows, seed=n_bits)
+    ref = engine.execute(res.program, data, outputs=res.outputs,
+                         lowered=False)
+    for backend in ("scan", "pallas"):
+        got = engine.execute(res.program, data, outputs=res.outputs,
+                             lowered=True, backend=backend)
+        _assert_rows_equal(ref, got)
+
+
+def test_lowered_banked_and_batched():
+    program, inputs = PROGRAMS["maj3"]
+    data = _data(inputs, words=24)
+    ref = engine.execute(program, data, outputs=["D3"], lowered=False)
+    for banks in (2, 4):
+        got = engine.execute(program, data, outputs=["D3"], n_banks=banks)
+        _assert_rows_equal(ref, got)
+    batched = {k: np.stack([v, ~v]) for k, v in data.items()}
+    ref_b = engine.execute(program, batched, outputs=["D3"], lowered=False)
+    for backend in ("scan", "pallas"):
+        got_b = engine.execute(program, batched, outputs=["D3"],
+                               lowered=True, backend=backend)
+        _assert_rows_equal(ref_b, got_b)
+
+
+def test_bankgroup_run_lowered_with_extra_batch_dims():
+    # built-in rows are (B, W) while batched operands are (B, X, W): the
+    # lowered plane build must align on the bank axis, not right-align
+    # (regression: ValueError / silent transposition when X == B)
+    from repro.core.bankgroup import BankGroup
+
+    program, inputs = PROGRAMS["xor"]
+    for x in (3, 2):    # x == n_banks is the silent-mis-broadcast case
+        rng = np.random.default_rng(x)
+        data = {r: rng.integers(0, 1 << 32, (2, x, 4), dtype=np.uint32)
+                for r in inputs}
+        g = BankGroup.create(2, 4, data)
+        ref = g.run(program, lowered=False).read("D2")
+        for backend in ("scan", "pallas"):
+            got = g.run(program, backend=backend).read("D2")
+            np.testing.assert_array_equal(np.asarray(ref), np.asarray(got))
+
+
+def test_lowered_passthrough_rows_survive():
+    # rows in data the program never touches come back unchanged
+    program, _ = PROGRAMS["and"]
+    data = _data(("D0", "D1", "UNTOUCHED"))
+    out = engine.execute(program, data)
+    np.testing.assert_array_equal(np.asarray(out["UNTOUCHED"]),
+                                  data["UNTOUCHED"])
+
+
+def test_execute_lowered_matches_subarray_run_state():
+    # full-state equivalence against Subarray.run, including designated and
+    # DCC rows mutated along the way
+    program, inputs = PROGRAMS["xor"]
+    data = _data(inputs)
+    full = dict(data)
+    full["D2"] = np.zeros(W, np.uint32)
+    sub = Subarray.create(W, full)
+    ref = sub.run(program).rows
+    lp = lowering.lower(program)
+    plane = lowering.make_plane(lp, data, W)
+    out_plane = lowering.run_scan(lp, plane)
+    got = lowering.read_rows(lp, out_plane,
+                             [n for n in lp.row_names if n != lowering.SINK])
+    for k, v in got.items():
+        np.testing.assert_array_equal(np.asarray(ref[k]), np.asarray(v),
+                                      err_msg=k)
+
+
+def test_vm_megakernel_output_selection():
+    program, inputs = PROGRAMS["xor"]
+    data = _data(inputs)
+    lp = lowering.lower(program)
+    plane = lowering.make_plane(lp, data, W)
+    out = vm_megakernel(lp.table, plane, (lp.row_index("D2"),))
+    ref = _run_interp(program, data)["D2"]
+    np.testing.assert_array_equal(np.asarray(out[0]), np.asarray(ref))
+
+
+# ---------------------------------------------------------------------------
+# constant-size executable: the perf contract
+# ---------------------------------------------------------------------------
+
+
+def test_scan_vm_jaxpr_size_independent_of_program_length():
+    lp8 = lowering.lower(ripple_add_program(8).program)
+    lp32 = lowering.lower(ripple_add_program(32).program)
+    assert lp32.n_cmds > 4 * lp8.n_cmds  # genuinely longer program
+    j8 = lowering.scan_vm_jaxpr(lp8, (lp8.n_rows, W))
+    j32 = lowering.scan_vm_jaxpr(lp32, (lp32.n_rows, W))
+    assert len(j8.jaxpr.eqns) == len(j32.jaxpr.eqns)
+    # the scan body (first eqn's inner jaxpr) is also identical in size
+    b8 = j8.jaxpr.eqns[0].params["jaxpr"].jaxpr.eqns
+    b32 = j32.jaxpr.eqns[0].params["jaxpr"].jaxpr.eqns
+    assert len(b8) == len(b32)
+
+
+def test_structurally_distinct_programs_share_executable_shape():
+    # add and a same-length command shuffle lower to identical table shapes,
+    # which is what keys the VM's jit cache
+    lp = lowering.lower(ripple_add_program(8).program)
+    renamed = lowering.lower(
+        ripple_add_program(8, a_prefix="P", b_prefix="Q",
+                           out_prefix="R").program)
+    assert lp is not renamed
+    assert lp.table.shape == renamed.table.shape
+    assert lp.n_rows == renamed.n_rows
+
+
+# ---------------------------------------------------------------------------
+# error handling (the former bare KeyError)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("lowered", [True, False])
+def test_unknown_output_raises_buddy_error_listing_produced(lowered):
+    program, inputs = PROGRAMS["and"]
+    data = _data(inputs)
+    with pytest.raises(BuddyError) as exc:
+        engine.execute(program, data, outputs=["NOT_A_ROW"],
+                       lowered=lowered)
+    assert "NOT_A_ROW" in str(exc.value)
+    assert "D2" in str(exc.value)  # the row the program does produce
+
+
+def test_unknown_output_raises_banked_too():
+    program, inputs = PROGRAMS["and"]
+    data = _data(inputs)
+    with pytest.raises(BuddyError):
+        engine.execute(program, data, outputs=["NOT_A_ROW"], n_banks=2)
