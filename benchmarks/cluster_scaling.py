@@ -1,0 +1,138 @@
+"""Cluster scaling: bulk-bitwise throughput across chips x banks.
+
+The 2019 in-DRAM bulk-bitwise execution engine (Seshadri & Mutlu) extends
+the paper's bank-level scaling argument across chips: every chip
+contributes its own internal buses, banks, and sense amplifiers, so bulk
+bitwise throughput scales near-linearly with the chip count as long as
+operands never cross a chip boundary. `core.cluster.ChipCluster` is that
+layer; this benchmark reports both sides of it:
+
+  * **modeled** rows: `cluster_latency_ns` makespans for a fixed 32 MB
+    workload at 1/2/4/8 chips x 8 banks — per-chip copy/compute pipelines
+    in parallel plus the log2-depth reduction tree. These rows are
+    deterministic and use the SAME workload in smoke mode, so the CI perf
+    gate (`benchmarks/perf_gate.py`) compares them against the committed
+    baseline exactly.
+  * **measured** rows: wall-clock of the sharded shard_map VM dispatch on
+    however many host devices are visible (CI forces 8 with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8``; chip counts
+    beyond the visible device count are reported as modeled only), with
+    bit-identity against the single-chip oracle asserted on every run.
+
+Acceptance gates: modeled makespan strictly improves with each chip
+doubling, and 8 chips are >= 4x over 1 chip end-to-end.
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+if "jax" not in sys.modules:    # must precede any jax import to take effect
+    os.environ.setdefault(
+        "XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import jax
+import numpy as np
+
+from benchmarks.common import (Row, emit, measure_wall, smoke_mode,
+                               write_bench_json)
+from repro.core import compiler, engine, timing
+from repro.core.cluster import (ChipCluster, cluster_latency_ns,
+                                cluster_throughput_gbps)
+
+OPS = ["and", "xor"]
+CHIPS = (1, 2, 4, 8)
+N_BANKS = 8
+MODEL_BYTES = 32 << 20      # fixed even in smoke: gate-comparable rows
+MEASURE_BYTES = 8 << 20
+SMOKE_MEASURE_BYTES = 256 << 10
+GATE_MIN_8CHIP_SPEEDUP = 4.0
+
+
+def _program(op: str):
+    srcs = ["D0"] if op == "not" else ["D0", "D1"]
+    return compiler.op_program(op, srcs, "D2")
+
+
+def run() -> list[Row]:
+    smoke = smoke_mode()
+    n_dev = len(jax.devices())
+    rows: list[Row] = []
+    jrows: list[dict] = []
+
+    # -- modeled scaling (deterministic; identical in smoke mode) ------------
+    n_blocks = MODEL_BYTES // timing.DDR3_1600.row_bytes
+    for op in OPS:
+        prog = _program(op)
+        base_ns = cluster_latency_ns(n_blocks, 1, N_BANKS, prog).total_ns
+        prev_ns = None
+        for chips in CHIPS:
+            sched = cluster_latency_ns(n_blocks, chips, N_BANKS, prog)
+            gbps = cluster_throughput_gbps(n_blocks, chips, N_BANKS, prog)
+            speedup = base_ns / sched.total_ns
+            if prev_ns is not None:
+                assert sched.total_ns < prev_ns, \
+                    f"{op}: no gain at {chips} chips"
+            prev_ns = sched.total_ns
+            rows.append((
+                f"cluster_scaling/modeled_{op}_c{chips}", 0.0,
+                f"modeled_ms={sched.total_ns / 1e6:.2f} "
+                f"gbps={gbps:.1f} speedup={speedup:.2f}x "
+                f"reduce_ns={sched.reduce_ns:.0f} blocks={n_blocks}"))
+            jrows.append({
+                "name": f"cluster_scaling/modeled_{op}_c{chips}",
+                "bytes": MODEL_BYTES,
+                "n_chips": chips,
+                "n_banks": N_BANKS,
+                "n_blocks": n_blocks,
+                "modeled_ns": sched.total_ns,
+                "reduce_ns": sched.reduce_ns,
+                "speedup": speedup,
+                "gbps": gbps,
+            })
+        final = base_ns / prev_ns
+        assert final >= GATE_MIN_8CHIP_SPEEDUP, \
+            f"{op}: {CHIPS[-1]}-chip speedup {final:.1f}x < " \
+            f"{GATE_MIN_8CHIP_SPEEDUP}x"
+
+    # -- measured: the sharded shard_map VM dispatch on real devices ---------
+    meas_bytes = SMOKE_MEASURE_BYTES if smoke else MEASURE_BYTES
+    words = meas_bytes // 4
+    rng = np.random.default_rng(0)
+    data = {"D0": rng.integers(0, 1 << 32, words, dtype=np.uint32),
+            "D1": rng.integers(0, 1 << 32, words, dtype=np.uint32)}
+    prog = _program("and")
+    oracle = np.asarray(engine.execute(prog, data, outputs=["D2"])["D2"])
+    measured = [c for c in CHIPS if c <= n_dev]
+    for chips in measured:
+        cl = ChipCluster.create(chips, n_banks=N_BANKS, max_chips=CHIPS[-1])
+        out = np.asarray(cl.execute(prog, data, outputs=["D2"])["D2"])
+        assert np.array_equal(out, oracle), f"{chips}-chip mismatch"
+        w = measure_wall(
+            lambda: cl.execute(prog, data, outputs=["D2"])["D2"],
+            iters=3 if smoke else 5)
+        rows.append((
+            f"cluster_scaling/measured_and_c{chips}", w["wall_steady_us"],
+            f"first_us={w['wall_first_us']:.0f} chips={chips} "
+            f"devices={n_dev} bytes={meas_bytes} bit_identity=yes"))
+        jrows.append({
+            "name": f"cluster_scaling/measured_and_c{chips}",
+            "bytes": meas_bytes,
+            "n_chips": chips,
+            "n_banks": N_BANKS,
+            **{k: round(v, 1) for k, v in w.items()},
+        })
+    if len(measured) < len(CHIPS):
+        # no silent caps: say what was dropped and why
+        rows.append((
+            "cluster_scaling/coverage", 0.0,
+            f"measured_chips={measured} (only {n_dev} devices visible; "
+            f"set XLA_FLAGS=--xla_force_host_platform_device_count=8 "
+            f"before jax imports to measure all of {list(CHIPS)})"))
+
+    write_bench_json("cluster_scaling", jrows)
+    return rows
+
+
+if __name__ == "__main__":
+    emit(run(), header=True)

@@ -42,9 +42,13 @@ def write_bench_json(bench: str, rows: List[Dict],
     `modeled_ns`, and `speedup` (plus optional `wall_*_us` measured
     fields) so successive PRs can diff the trajectory. The file lands at
     the repo root — the single copy cross-PR trajectory tooling and CI
-    read (the old `benchmarks/` mirror is gone).
+    read (the old `benchmarks/` mirror is gone). The payload records
+    whether the run was a smoke run: `benchmarks/perf_gate.py` only
+    treats a baseline row missing from the current run as a coverage
+    regression when both runs are the same mode (smoke runs legitimately
+    drop cases).
     """
-    payload = {"bench": bench, "rows": rows}
+    payload = {"bench": bench, "rows": rows, "smoke": smoke_mode()}
     text = json.dumps(payload, indent=2, sort_keys=True) + "\n"
     path = pathlib.Path(directory or REPO_ROOT) / f"BENCH_{bench}.json"
     path.write_text(text)

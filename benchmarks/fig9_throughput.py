@@ -39,6 +39,11 @@ _FNS = {
 
 
 def run(e2e_banks: int = E2E_BANKS, n_bytes: int = N_BYTES) -> list[Row]:
+    # the schedule model always uses the full paper-size workload so the
+    # modeled rows (and BENCH json) are identical in smoke mode — that is
+    # what lets the CI perf gate compare them against committed baselines;
+    # only the functionally-executed operands shrink under BENCH_SMOKE=1
+    model_bytes = n_bytes
     if smoke_mode():
         n_bytes = min(n_bytes, 2 << 20)
     rows: list[Row] = []
@@ -49,7 +54,7 @@ def run(e2e_banks: int = E2E_BANKS, n_bytes: int = N_BYTES) -> list[Row]:
     words = n_bytes // 4
     a = rng.integers(0, 2**32, (words,), dtype=np.uint32)
     b = rng.integers(0, 2**32, (words,), dtype=np.uint32)
-    n_blocks = n_bytes // timing.DDR3_1600.row_bytes  # row-granular blocks
+    n_blocks = model_bytes // timing.DDR3_1600.row_bytes  # row-granular
 
     for op in OPS:
         args = (a,) if op == "not" else (a, b)
@@ -94,7 +99,7 @@ def run(e2e_banks: int = E2E_BANKS, n_bytes: int = N_BYTES) -> list[Row]:
             f"bitwise_match=yes"))
         jrows.append({
             "name": f"fig9_e2e/{op}",
-            "bytes": n_bytes,
+            "bytes": model_bytes,
             "modeled_ns": sn.total_ns,
             "speedup": speedup,
             "modeled_ns_1bank": s1.total_ns,

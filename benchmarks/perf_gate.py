@@ -1,0 +1,174 @@
+"""CI perf-regression gate: compare BENCH_*.json runs against baselines.
+
+Replaces the old existence/parseability-only CI check with an actual
+comparison. For every benchmark json present in the baseline directory,
+rows are matched by ``name`` against the freshly generated run and every
+shared metric is compared with a tolerance band:
+
+  * wall-clock-like metrics (``*_us`` / ``*_ns``, lower is better) and
+    throughput-like metrics (``gbps`` / ``qps`` / ``*speedup*`` /
+    ``*hit_rate*``, higher is better) FAIL the gate when they regress by
+    more than ``FAIL_RATIO`` (2x) and WARN beyond ``WARN_RATIO`` (1.3x);
+  * rows are only compared when their size/configuration fields
+    (``bytes``, ``n_cmds``, ``n_chips``, ...) agree — CI smoke runs shrink
+    operands, and comparing a 256 KB wall time against a committed 8 MB
+    baseline would be noise, so mismatched rows are reported as skipped
+    (deterministic *modeled* rows keep full-size workloads even in smoke
+    mode — see `benchmarks/cluster_scaling.py` — and are always compared);
+  * a baseline row missing from the current run is a coverage regression
+    and fails the gate, as does a missing or unparseable json — except
+    when the two runs differ in smoke mode (the payload records it):
+    smoke runs drop cases by design, so cross-mode missing rows only
+    count as skipped.
+
+Usage:
+    python benchmarks/perf_gate.py --baseline <dir> [--current <dir>] \
+        [bench ...]
+
+Exit status 0 = all comparisons within the band, 1 = any failure.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+from typing import Dict, List, Tuple
+
+FAIL_RATIO = 2.0
+WARN_RATIO = 1.3
+
+#: benches every CI run must produce (bare names, without BENCH_/.json)
+REQUIRED = ["fig9_throughput", "serve_qps", "arith_throughput",
+            "vm_dispatch", "cluster_scaling"]
+
+#: configuration fields that must agree for metric comparison to be fair
+SIZE_KEYS = ("bytes", "row_words", "n_cmds", "n_rows", "n_banks",
+             "n_chips", "n_blocks", "n_bits", "n_values", "n_queries")
+
+
+def _lower_better(key: str) -> bool:
+    return key.endswith("_us") or key.endswith("_ns")
+
+
+def _higher_better(key: str) -> bool:
+    return key in ("gbps", "qps") or "speedup" in key or "hit_rate" in key
+
+
+def load_payload(path: pathlib.Path) -> Tuple[Dict[str, dict], bool]:
+    """(rows by name, was-a-smoke-run) of one BENCH_*.json."""
+    payload = json.loads(path.read_text())
+    rows = payload.get("rows") or []
+    if not rows:
+        raise ValueError(f"{path}: empty rows")
+    return {r["name"]: r for r in rows}, bool(payload.get("smoke"))
+
+
+def load_rows(path: pathlib.Path) -> Dict[str, dict]:
+    return load_payload(path)[0]
+
+
+def comparable(base: dict, cur: dict) -> bool:
+    """Same workload configuration on both sides?"""
+    return all(base[k] == cur[k] for k in SIZE_KEYS
+               if k in base and k in cur)
+
+
+def compare_rows(name: str, base: dict, cur: dict
+                 ) -> Tuple[List[str], List[str], int]:
+    """Compare one row pair; returns (failures, warnings, n_compared)."""
+    fails: List[str] = []
+    warns: List[str] = []
+    n = 0
+    for key in sorted(set(base) & set(cur)):
+        b, c = base[key], cur[key]
+        if not isinstance(b, (int, float)) or not isinstance(c, (int, float)):
+            continue
+        if _lower_better(key):
+            ratio = c / b if b > 0 else (1.0 if c <= 0 else float("inf"))
+        elif _higher_better(key):
+            ratio = b / c if c > 0 else (1.0 if b <= 0 else float("inf"))
+        else:
+            continue
+        n += 1
+        msg = (f"{name}.{key}: baseline {b:.6g} -> current {c:.6g} "
+               f"({ratio:.2f}x worse)")
+        if ratio > FAIL_RATIO:
+            fails.append(msg)
+        elif ratio > WARN_RATIO:
+            warns.append(msg)
+    return fails, warns, n
+
+
+def run_gate(baseline_dir: pathlib.Path, current_dir: pathlib.Path,
+             benches: List[str]) -> Tuple[List[str], List[str], int, int]:
+    """Gate `benches`; returns (failures, warnings, compared, skipped)."""
+    fails: List[str] = []
+    warns: List[str] = []
+    compared = skipped = 0
+    for bench in benches:
+        fname = f"BENCH_{bench}.json"
+        bpath, cpath = baseline_dir / fname, current_dir / fname
+        if not bpath.exists():
+            # nothing committed to compare against (e.g. a brand-new
+            # benchmark): presence of the current file is still required
+            if not cpath.exists():
+                fails.append(f"{fname}: missing from current run")
+            continue
+        try:
+            base_rows, base_smoke = load_payload(bpath)
+        except Exception as e:
+            fails.append(f"{fname}: unreadable baseline ({e})")
+            continue
+        try:
+            cur_rows, cur_smoke = load_payload(cpath)
+        except Exception as e:
+            fails.append(f"{fname}: missing/unparseable current run ({e})")
+            continue
+        same_mode = base_smoke == cur_smoke
+        for name, base in sorted(base_rows.items()):
+            cur = cur_rows.get(name)
+            if cur is None:
+                # smoke runs legitimately drop cases a full baseline has;
+                # only same-mode runs must cover every baseline row
+                if same_mode:
+                    fails.append(f"{name}: row missing from current run "
+                                 f"(coverage regression)")
+                else:
+                    skipped += 1
+                continue
+            if not comparable(base, cur):
+                skipped += 1
+                continue
+            f, w, n = compare_rows(name, base, cur)
+            fails.extend(f)
+            warns.extend(w)
+            compared += n
+    return fails, warns, compared, skipped
+
+
+def main(argv: List[str] = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--baseline", required=True, type=pathlib.Path,
+                    help="directory holding the committed BENCH_*.json")
+    ap.add_argument("--current", default=pathlib.Path("."),
+                    type=pathlib.Path,
+                    help="directory holding the fresh run (default: .)")
+    ap.add_argument("benches", nargs="*", default=None,
+                    help=f"bench names to gate (default: {REQUIRED})")
+    args = ap.parse_args(argv)
+    benches = args.benches or REQUIRED
+    fails, warns, compared, skipped = run_gate(
+        args.baseline, args.current, benches)
+    for msg in warns:
+        print(f"WARN  {msg}")
+    for msg in fails:
+        print(f"FAIL  {msg}")
+    print(f"perf gate: {compared} metrics compared, {skipped} rows skipped "
+          f"(size or smoke-mode mismatch), {len(warns)} warnings, "
+          f"{len(fails)} failures")
+    return 1 if fails else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -20,13 +20,22 @@ SECTIONS = [
     "serve_qps",
     "arith_throughput",
     "vm_dispatch",
+    "cluster_scaling",
     "extra_apps",
     "perf_summary",
 ]
 
 
-def main() -> None:
-    want = sys.argv[1:] or SECTIONS
+def main(argv: list = None) -> None:
+    want = sys.argv[1:] if argv is None else list(argv)
+    # a typo'd section name used to be silently skipped (the run printed
+    # only the CSV header and exited 0) — reject unknown names instead
+    unknown = [w for w in want if w not in SECTIONS]
+    if unknown:
+        print(f"unknown section(s): {', '.join(unknown)}", file=sys.stderr)
+        print(f"valid sections: {', '.join(SECTIONS)}", file=sys.stderr)
+        raise SystemExit(2)
+    want = want or SECTIONS
     print("name,us_per_call,derived")
     for section in SECTIONS:
         if section not in want:

@@ -38,7 +38,7 @@ def main():
 
     t_base = query_time_ns(args.users, args.weeks, use_buddy=False)
     t_buddy = query_time_ns(args.users, args.weeks, use_buddy=True)
-    print(f"\nmodeled end-to-end time (paper cost model):")
+    print("\nmodeled end-to-end time (paper cost model):")
     print(f"  baseline (SIMD CPU): {t_base/1e6:.2f} ms")
     print(f"  Buddy (in-DRAM):     {t_buddy/1e6:.2f} ms")
     print(f"  speedup: {speedup(args.users, args.weeks):.1f}x "

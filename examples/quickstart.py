@@ -3,11 +3,10 @@
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 # ---- 1. Bulk bitwise ops (the paper's core primitive) ----------------------
-from repro.ops.bitwise import bitwise_and, bitwise_or, bitwise_xor, majority3
+from repro.ops.bitwise import bitwise_and, bitwise_or, majority3
 from repro.core.bitplane import pack_bits, unpack_bits
 
 key = jax.random.PRNGKey(0)

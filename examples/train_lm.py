@@ -7,7 +7,6 @@ trains the full assigned configs under the production mesh.
 Run:  PYTHONPATH=src python examples/train_lm.py [--steps 200] [--signum]
 """
 import argparse
-import sys
 
 from repro.launch.train import main as train_main
 

@@ -19,7 +19,6 @@ import jax
 import jax.numpy as jnp
 
 from repro.apps.cost import DEFAULT_APP_SYSTEM, AppSystem
-from repro.core.bitplane import BitVector
 from repro.ops.bitwise import bitwise_and, bitwise_or
 from repro.ops.popcount import popcount_words
 

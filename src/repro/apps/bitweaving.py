@@ -8,11 +8,9 @@ runs on the CPU for both (streaming popcount).
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Dict
 
 import jax
-import jax.numpy as jnp
 
 from repro.apps.cost import DEFAULT_APP_SYSTEM, AppSystem
 from repro.ops.predicate import VerticalColumn

@@ -17,7 +17,6 @@ import json
 import os
 import shutil
 import threading
-import time
 import uuid
 from typing import Any, Dict, List, Optional, Tuple
 

@@ -10,7 +10,6 @@ from __future__ import annotations
 
 import dataclasses
 import importlib
-import math
 from typing import Dict, List, Optional, Tuple
 
 VOCAB_PAD = 2048  # pad vocab to a multiple (sharding divisibility; standard)
@@ -100,7 +99,6 @@ class ModelConfig:
         elif self.family == "ssm":
             total += self.n_layers * self.ssm_layer_params()
         elif self.family == "hybrid":
-            n_attn_applications = self.n_layers // max(self.attn_every, 1)
             total += self.n_layers * self.ssm_layer_params()
             total += attn + mlp_params(self.d_ff)  # ONE shared block
         elif self.family == "encdec":

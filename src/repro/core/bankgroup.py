@@ -24,7 +24,7 @@ execution (asserted by tests/test_bankgroup.py); only the schedule differs.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import List, Optional
 
 import jax
 import jax.numpy as jnp

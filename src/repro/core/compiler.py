@@ -23,7 +23,7 @@ tests/test_compiler.py).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence, Tuple, Union
+from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.core import addressing
 from repro.core.commands import AAP, AP, Command, Program

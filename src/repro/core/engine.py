@@ -19,7 +19,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import addressing
-from repro.core.addressing import D_WL, N_WL, resolve
+from repro.core.addressing import D_WL, resolve
 from repro.core.commands import Activate, Precharge, Program
 
 RowState = Dict[str, jax.Array]
@@ -134,7 +134,8 @@ def _check_outputs(outputs: List[str], available, program: Program) -> None:
 
 def execute(program: Program, data: RowState, row_words: Optional[int] = None,
             outputs: Optional[List[str]] = None, n_banks: int = 1,
-            lowered: bool = True, backend: str = "scan") -> RowState:
+            n_chips: int = 1, lowered: bool = True,
+            backend: str = "scan") -> RowState:
     """One-shot helper: run `program` over `data` rows, return named rows.
 
     Rows referenced by the program but missing from `data` (e.g. destination
@@ -143,7 +144,9 @@ def execute(program: Program, data: RowState, row_words: Optional[int] = None,
     `n_banks > 1` partitions each operand row word-wise across that many
     independent subarray states and executes the program on all of them in
     one vmapped dispatch (see `core.bankgroup`) — bit-identical results,
-    bank-parallel schedule.
+    bank-parallel schedule. `n_chips > 1` additionally lays a leading chip
+    axis onto the JAX device mesh and executes per-chip shards under
+    `shard_map` (`core.cluster`, lowered VM only) — still bit-identical.
 
     By default the program is compiled to a `core.lowering.LoweredProgram`
     and executed by the constant-size scan VM (``backend="scan"``) or the
@@ -151,6 +154,19 @@ def execute(program: Program, data: RowState, row_words: Optional[int] = None,
     to the micro-op interpreter above (the oracle — bit-identical by
     construction, re-traced per program).
     """
+    if n_chips > 1:
+        from repro.core import cluster
+
+        if not lowered:
+            raise ValueError(
+                "n_chips > 1 dispatches through the lowered VM; the "
+                "micro-op interpreter is single-process (lowered=False)")
+        if row_words is not None:
+            raise ValueError(
+                "row_words cannot be overridden with n_chips > 1: the "
+                "sharded layout derives per-slot widths from the data rows")
+        cl = cluster.get_cluster(n_chips, n_banks)
+        return cl.execute(program, data, outputs, backend=backend)
     if n_banks > 1:
         from repro.core import bankgroup
 

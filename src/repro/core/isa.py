@@ -10,14 +10,14 @@ results are bit-identical.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import compiler, engine, timing
 from repro.core.allocator import DramAllocator
-from repro.core.rowclone import DEFAULT_ROWCLONE, op_latency_with_placement
+from repro.core.rowclone import op_latency_with_placement
 from repro.core.timing import DDR3_1600
 
 

@@ -23,7 +23,7 @@ the latency table are then *derived*.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -21,8 +21,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict
 
-from repro.core.commands import AAP, AP, Program
-from repro.core.addressing import wordlines_raised
+from repro.core.commands import Program
 
 
 @dataclasses.dataclass(frozen=True)

@@ -11,14 +11,14 @@ scans, yielding the eligible-document bitmap that drives sampling.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.bitplane import pack_bits, unpack_bits
-from repro.ops.bitwise import bitwise_and, bitwise_not, bitwise_or
+from repro.ops.bitwise import bitwise_and, bitwise_not
 from repro.ops.popcount import popcount_words
 from repro.ops.predicate import VerticalColumn
 

@@ -32,7 +32,15 @@ Rules = Dict[str, Tuple[str, ...]]
 # rule tables (policy variants used by launch/plans.py cells)
 # ---------------------------------------------------------------------------
 
+# bulk-bitwise cluster execution (core/cluster.py): the word-shard "chip"
+# axis maps onto the physical chip mesh axis; the per-chip "bank" axis
+# stays a local batch dimension (banks never leave their chip — a Buddy op
+# is contained in one subarray). Single source for the chip-axis mapping;
+# DEFAULT_RULES folds it in so `constrain`-style callers resolve it too.
+CLUSTER_RULES: Rules = {"chip": ("chip",), "bank": ()}
+
 DEFAULT_RULES: Rules = {
+    **CLUSTER_RULES,
     # activations
     "batch": ("pod", "data"),
     "seq": (),

@@ -14,13 +14,11 @@ the (8, 128k)-aligned tiles keep loads on the native (8,128) int32 tile.
 from __future__ import annotations
 
 import functools
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.kernels import ref
 from repro.kernels.common import (LANE, SUBLANE, pad_to, pick_block, round_up,
                                   use_interpret)
 

@@ -4,7 +4,6 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.kernels import ref
 from repro.kernels.arith import bitserial_add_kernel, bitserial_lt_kernel
 from repro.kernels.bitwise import banked_bitwise_kernel, bitwise_kernel
 from repro.kernels.bittranspose import (bit_transpose_kernel,

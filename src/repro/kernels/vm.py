@@ -104,10 +104,14 @@ def vm_megakernel(table: np.ndarray, plane: jax.Array, out_idx: tuple,
                   block_cols: int = 2048) -> jax.Array:
     """Run a lowered opcode table over a plane tensor in one kernel launch.
 
-    ``plane`` is ``(n_rows, words)`` uint32 (optionally with leading batch
-    axes, mapped over via vmap — the bank/query axis of
-    `core.bankgroup` / the service scheduler); returns the
-    ``(len(out_idx), words)`` output rows only.
+    ``plane`` is ``(n_rows, words)`` uint32, optionally with inner batch
+    axes (``(n_rows, *batch, words)``) — the bank/query axes of
+    `core.bankgroup` / the service scheduler, or the chip-local
+    ``(1, local_banks, ...)`` block a `core.cluster.ChipCluster` shard
+    executes under `shard_map`. All batch axes collapse into ONE vmapped
+    kernel axis (a single flat launch grid per shard, instead of one
+    nested vmap level per axis), then reshape back; returns the
+    ``(len(out_idx), *batch, words)`` output rows only.
     """
     plane = jnp.asarray(plane, jnp.uint32)
     table = jnp.asarray(table, jnp.int32)
@@ -118,10 +122,14 @@ def vm_megakernel(table: np.ndarray, plane: jax.Array, out_idx: tuple,
         block_cols = max(block_cols, plane.shape[-1])
     call = functools.partial(_vm_call, out_idx=out_idx,
                              block_cols=block_cols)
-    fn = lambda p: call(table, p)  # noqa: E731
-    for _ in range(plane.ndim - 2):
-        fn = jax.vmap(fn, in_axes=-2, out_axes=-2)
-    return fn(plane)
+    if plane.ndim == 2:
+        return call(table, plane)
+    batch = plane.shape[1:-1]
+    flat = jnp.moveaxis(plane, 0, -2).reshape((-1,) + (plane.shape[0],
+                                                       plane.shape[-1]))
+    out = jax.vmap(lambda p: call(table, p))(flat)
+    out = out.reshape(batch + out.shape[-2:])
+    return jnp.moveaxis(out, -2, 0)
 
 
 def run_megakernel(lp: LoweredProgram, plane: jax.Array,

@@ -8,14 +8,13 @@ everything is abstract until `.lower().compile()`.
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.configs.base import (ModelConfig, SHAPES, ShapeConfig, get_config)
+from repro.configs.base import SHAPES, ShapeConfig, get_config
 from repro.dist.sharding import (DECODE_SP_RULES, DEFAULT_RULES, DP_RULES,
                                  SP_RULES, axis_rules, resolve_spec,
                                  tree_shardings)

@@ -19,7 +19,6 @@ import json
 import time
 import traceback
 
-import jax
 
 from repro.configs.base import SHAPES, cells, get_config
 from repro.launch.cells import build_cell

@@ -20,7 +20,6 @@ per-chip peak constants.
 from __future__ import annotations
 
 import dataclasses
-import json
 import re
 from typing import Dict, List, Optional, Tuple
 

@@ -7,7 +7,7 @@ and smoke tests/benches must keep seeing 1 device.
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 from jax.sharding import Mesh

@@ -9,7 +9,7 @@ models use Adafactor (factored second moments) because full Adam state for
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional, Tuple
+from typing import Dict, Optional
 
 from repro.configs.base import ModelConfig, ShapeConfig
 

@@ -19,10 +19,8 @@ remat recompute and routing/dispatch waste.
 from __future__ import annotations
 
 import dataclasses
-import json
-import math
 import re
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, Optional
 
 from repro.configs.base import ModelConfig, ShapeConfig
 

@@ -11,7 +11,6 @@ configs — the mesh is built from whatever devices exist.
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import time
 
 import jax
@@ -21,7 +20,7 @@ from repro.checkpoint import Checkpointer
 from repro.configs.base import get_config, reduced
 from repro.data import SyntheticLM
 from repro.dist.fault_tolerance import ResilientRunner, StragglerMonitor
-from repro.dist.sharding import axis_rules, tree_shardings
+from repro.dist.sharding import axis_rules
 from repro.launch.mesh import make_host_mesh
 from repro.models import build
 from repro.optim.optimizers import get_optimizer
@@ -51,7 +50,8 @@ def main(argv=None):
         cfg = reduced(cfg)
     bundle = build(cfg)
     mesh = make_host_mesh(model=args.model_parallel)
-    print(f"arch={cfg.name} family={cfg.family} mesh={dict(zip(mesh.axis_names, mesh.devices.shape))}")
+    mesh_shape = dict(zip(mesh.axis_names, mesh.devices.shape))
+    print(f"arch={cfg.name} family={cfg.family} mesh={mesh_shape}")
 
     params = bundle.init(jax.random.PRNGKey(0))
     n_params = sum(x.size for x in jax.tree.leaves(params))

@@ -62,7 +62,6 @@ def encdec_init(key, cfg: ModelConfig) -> Tuple[Params, Params]:
 def encode(params: Params, frames: jax.Array, cfg: ModelConfig,
            remat: str = "block") -> jax.Array:
     """frames: (B, Sf, Df) stub embeddings -> (B, Sf, D) encoder output."""
-    from repro.models.transformer import dense_block
     x = jnp.einsum("bsf,fd->bsd", frames.astype(L._dtype(cfg)),
                    params["frontend_proj"])
     x = constrain(x, "batch", "seq", "embed_act")

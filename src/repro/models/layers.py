@@ -16,8 +16,6 @@ Conventions
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -88,7 +86,8 @@ def attn_init(key, cfg: ModelConfig, d_model: Optional[int] = None
         "wq": dense_init(ks[0], (D, H, hd), dt),
         "wk": dense_init(ks[1], (D, KV, hd), dt),
         "wv": dense_init(ks[2], (D, KV, hd), dt),
-        "wo": dense_init(ks[3], (H, hd, D), dt, std=INIT_STD / np.sqrt(2 * max(cfg.n_layers, 1))),
+        "wo": dense_init(ks[3], (H, hd, D), dt,
+                         std=INIT_STD / np.sqrt(2 * max(cfg.n_layers, 1))),
     }
     s = {
         "wq": ("fsdp", "heads", "head_dim"),

@@ -14,8 +14,7 @@ input of a given (arch x shape) cell, including the stub modality frontends.
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Callable, Dict
 
 import jax
 import jax.numpy as jnp

@@ -8,7 +8,6 @@ the HLO O(1) in depth at 61-100 layers.
 """
 from __future__ import annotations
 
-import dataclasses
 import functools
 from typing import Any, Callable, Dict, Optional, Tuple
 

@@ -7,12 +7,11 @@ the data pipeline for streaming dedup statistics.
 from __future__ import annotations
 
 import dataclasses
-from typing import Sequence
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.bitplane import BitVector, n_words
+from repro.core.bitplane import BitVector
 from repro.ops.bitwise import bitwise_or
 
 

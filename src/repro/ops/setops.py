@@ -9,12 +9,12 @@ way §7 scales Fig. 9.
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterable, Sequence
+from typing import Sequence
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.bitplane import BitVector, n_words
+from repro.core.bitplane import BitVector
 from repro.ops.bitwise import andnot, bitwise_and, bitwise_or
 
 

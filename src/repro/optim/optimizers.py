@@ -12,7 +12,7 @@ full Adam moments cannot fit the single-pod HBM budget — see DESIGN.md.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Callable
 
 import jax
 import jax.numpy as jnp

@@ -22,13 +22,10 @@ inside a `jax.shard_map(axis_names={"data"})` region (model axis stays auto).
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.kernels import ops as kops
 from repro.kernels import ref as kref

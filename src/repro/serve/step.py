@@ -1,8 +1,7 @@
 """Serving: jit'd decode step + batched greedy/temperature generation loop."""
 from __future__ import annotations
 
-import functools
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Callable, Dict, Optional
 
 import jax
 import jax.numpy as jnp

@@ -32,10 +32,20 @@ overlaps across banks — the same copy/compute pipeline as
 `core.bankgroup.pipeline_latency_ns`, lifted to query granularity. Energy
 comes from `core.energy` command counts.
 
+Distributed mode (``cluster=ChipCluster(...)``, `core.cluster`): the same
+plan-grouping applies, but each group executes as ONE `shard_map` VM launch
+over the catalog's chip-sharded vectors — plane tensor
+``(n_rows, n_chips, local_banks, n_queries, local_words)``, chip axis on
+the device mesh — and popcount/aggregate results reduce with a chip-axis
+tree psum, so only count scalars ever cross a chip boundary. The timeline
+model gains per-chip buses (transfers serialize per chip, chips are
+parallel) plus a ceil(log2 chips)-hop reduction term.
+
 `run_queries_unbatched` is the independent reference path (fresh compile per
 query over its natural row names, one engine run per query, 1-bank serial
 schedule); the batched scheduler must match it bit-for-bit (asserted by
-tests/test_service.py and benchmarks/serve_qps.py).
+tests/test_service.py and benchmarks/serve_qps.py) — in distributed mode
+too, for every chip count (tests/test_cluster.py).
 """
 from __future__ import annotations
 
@@ -86,6 +96,7 @@ class QueryResult:
     n_aaps: int
     energy_nj: float
     tenant: Optional[str] = None
+    chip: int = 0                 # distributed mode: serving chip
 
 
 @dataclasses.dataclass
@@ -96,6 +107,7 @@ class BatchReport:
     makespan_ns: float
     n_banks: int
     n_plan_groups: int
+    n_chips: int = 1
 
     @property
     def qps(self) -> float:
@@ -122,6 +134,11 @@ class Scheduler:
     #: lowered-VM backend for plan-group dispatch: "scan" (lax.scan VM) or
     #: "pallas" (megakernel, whole plane resident in VMEM per dispatch)
     backend: str = "scan"
+    #: distributed mode: a `core.cluster.ChipCluster` — plan-groups become
+    #: ONE sharded shard_map launch over (chips x banks x queries) and
+    #: popcounts aggregate with a chip-axis tree psum. None = the
+    #: single-process path (one device, bank axis only).
+    cluster: Optional["ChipCluster"] = None  # noqa: F821 (forward ref)
 
     def __post_init__(self):
         self.queries_served = 0
@@ -162,6 +179,8 @@ class Scheduler:
         happens once per group, on device, so for scalar-only groups just
         len(members) ints cross to the host.
         """
+        if self.cluster is not None:
+            return self._run_group_sharded(members, need_words)
         input_rows = [bp.input_map() for _, bp in members]
         data = {
             name: jnp.stack([self.catalog.get(rows[name]).words
@@ -187,6 +206,58 @@ class Scheduler:
         words = (np.asarray(jnp.moveaxis(masked, 0, 1))
                  if need_words else None)
         return words, scalars
+
+    def _run_group_sharded(self, members: List[Tuple[int, BoundPlan]],
+                           need_words: bool
+                           ) -> Tuple[Optional[np.ndarray], List[int]]:
+        """Distributed twin of `_run_group`: one shard_map VM launch.
+
+        Each canonical input stacks the group's queries along an inner
+        axis of the catalog's chip-sharded copies, so the plane tensor is
+        ``(n_rows, n_chips, local_banks, n_queries, local_words)`` with
+        the chip axis laid onto the device mesh. Popcounts reduce with
+        the chip-axis tree psum (`ChipCluster.popcounts`) — for
+        scalar-only groups nothing but the count matrix leaves the
+        shards; materialize gathers the output rows once per group.
+        """
+        cluster = self.cluster
+        input_rows = [bp.input_map() for _, bp in members]
+        data = {
+            name: jnp.stack([self.catalog.shards(rows[name])
+                             for rows in input_rows], axis=2)
+            for name in input_rows[0]
+        }
+        plan = members[0][1].plan
+        lp = plan.lowered
+        if lp is None:      # plans built outside the cache lower here
+            lp = lowering.lower(plan.program)
+        if not need_words:
+            # scalar-only group: one shard_map launch, only the count
+            # matrix crosses the chip boundary
+            counts = cluster.popcounts(lp, data, plan.outputs,
+                                       self.catalog.mask_shards(),
+                                       backend=self.backend)
+            return None, [sum(int(counts[j, s]) << j
+                              for j in range(len(plan.outputs)))
+                          for s in range(len(members))]
+        # materialize group: the output rows must be gathered anyway, so
+        # run ONCE and derive the counts from the gathered masked planes
+        # (exactly as the single-process twin does)
+        out = cluster.run_lowered(lp, data, plan.outputs,
+                                  backend=self.backend)
+        n_words = self.catalog.get(
+            next(iter(input_rows[0].values()))).words.shape[0]
+        mask = self.catalog.mask()
+        # (n_outputs, len(members), n_words) -> query-major, as in the
+        # single-process path
+        masked = jnp.stack(
+            [cluster.unshard_words(out[o], int(n_words)) & mask
+             for o in plan.outputs])
+        counts = np.asarray(popcount_words(masked, axis=-1))
+        scalars = [sum(int(counts[j, s]) << j
+                       for j in range(len(plan.outputs)))
+                   for s in range(len(members))]
+        return np.asarray(jnp.moveaxis(masked, 0, 1)), scalars
 
     # -- the scheduler proper ------------------------------------------------
 
@@ -221,19 +292,28 @@ class Scheduler:
                     words_by_idx[idx] = w[0] if is_boolean else w
                 count_by_idx[idx] = scalars[slot]
 
-        # 3. modeled timeline: queries placed on least-loaded banks; operand
-        #    transfers serialize on the shared bus, compute overlaps
+        # 3. modeled timeline: queries placed on least-loaded (chip, bank)
+        #    slots; operand transfers serialize on each chip's own internal
+        #    bus, compute overlaps across banks, chips are fully parallel.
+        #    Aggregate readout of a multi-chip query pays the reduction
+        #    tree (ceil(log2 chips) serialized hops) on top — with one
+        #    chip this degenerates to exactly the pre-cluster model.
+        n_chips = self.cluster.n_chips if self.cluster is not None else 1
+        reduce_ns = (math.ceil(math.log2(n_chips)) * self.timing.aap_ns
+                     if n_chips > 1 else 0.0)
         n_blocks = self._n_blocks
-        bus_free = 0.0
-        bank_free = [0.0] * self.n_banks
+        bus_free = [0.0] * n_chips
+        bank_free = [[0.0] * self.n_banks for _ in range(n_chips)]
         results: List[QueryResult] = []
         for idx, (q, bp) in enumerate(zip(queries, bound)):
-            b = min(range(self.n_banks), key=bank_free.__getitem__)
+            c, b = min(((ci, bi) for ci in range(n_chips)
+                        for bi in range(self.n_banks)),
+                       key=lambda cb: bank_free[cb[0]][cb[1]])
             xfer = self._xfer_ns(bp.plan)
             for _ in range(n_blocks):
-                start = max(bus_free, bank_free[b])
-                bus_free = start + xfer
-                bank_free[b] = bus_free + bp.plan.latency_ns_per_block
+                start = max(bus_free[c], bank_free[c][b])
+                bus_free[c] = start + xfer
+                bank_free[c][b] = bus_free[c] + bp.plan.latency_ns_per_block
             energy = bp.plan.energy_nj_per_block * n_blocks
             value: Union[int, np.ndarray]
             if q.mode == MATERIALIZE:
@@ -242,15 +322,16 @@ class Scheduler:
                 value = count_by_idx[idx]
             results.append(QueryResult(
                 index=idx, mode=q.mode, value=value,
-                latency_ns=bank_free[b], bank=b,
+                latency_ns=bank_free[c][b] + reduce_ns, bank=b,
                 cache_hit=bp.cache_hit, n_aaps=bp.plan.n_aaps,
-                energy_nj=energy, tenant=q.tenant))
+                energy_nj=energy, tenant=q.tenant, chip=c))
 
-        makespan = max(bank_free)
+        makespan = max(max(per_chip) for per_chip in bank_free) + reduce_ns
         self.queries_served += len(queries)
         self.total_modeled_ns += makespan
         self.total_energy_nj += sum(r.energy_nj for r in results)
-        return BatchReport(results, makespan, self.n_banks, len(groups))
+        return BatchReport(results, makespan, self.n_banks, len(groups),
+                           n_chips=n_chips)
 
 
 def results_bit_identical(a: Sequence[QueryResult],

@@ -28,7 +28,7 @@ Registered columns also unlock the bit-serial arithmetic grammar
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence, Union
+from typing import Dict, Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
@@ -39,23 +39,48 @@ from repro.core.timing import DDR3_1600, DramTiming
 from repro.ops.predicate import VerticalColumn, between_scan, range_scan_expr
 from repro.service.catalog import Catalog, CatalogEntry
 from repro.service.planner import Planner
-from repro.service.scheduler import (AGGREGATE, MATERIALIZE, POPCOUNT,
-                                     BatchReport, Query, QueryResult,
-                                     Scheduler)
+from repro.service.scheduler import (MATERIALIZE, POPCOUNT, BatchReport,
+                                     Query, QueryResult, Scheduler)
 
 
 @dataclasses.dataclass
 class QueryService:
-    """Catalog + planner + scheduler behind one serving interface."""
+    """Catalog + planner + scheduler behind one serving interface.
+
+    ``n_chips=None`` (default) is the single-process deployment: one
+    device, bank-axis batching only. ``n_chips=C`` is the distributed
+    deployment mode: a `core.cluster.ChipCluster` over C mesh devices,
+    catalog vectors word-sharded across chips (placement recorded per
+    vector, affinity groups chip-local), every plan-group dispatched as
+    one `shard_map` VM launch, popcounts tree-psum'd. `rescale(C')`
+    re-plans the layout through `dist.elastic.plan_rescale` and re-places
+    the catalog without losing a single registered vector.
+    """
 
     n_banks: int = 8
     timing: DramTiming = DDR3_1600
+    #: distributed deployment: number of mesh chips (None = single-process)
+    n_chips: Optional[int] = None
+    #: placement granularity — vectors shard over max_chips*n_banks slots,
+    #: fixed across rescales; defaults to the smallest multiple of n_chips
+    #: >= 8 (see `core.cluster.ChipCluster.create`)
+    max_chips: Optional[int] = None
 
     def __post_init__(self):
         self.catalog = Catalog()
         self.planner = Planner()
+        self.cluster = None
+        if self.n_chips is not None:
+            from repro.core.cluster import ChipCluster
+
+            self.cluster = ChipCluster.create(
+                self.n_chips, n_banks=self.n_banks,
+                max_chips=self.max_chips)
+            self.max_chips = self.cluster.max_chips
+            self.catalog.attach_cluster(self.cluster)
         self.scheduler = Scheduler(catalog=self.catalog, planner=self.planner,
-                                   n_banks=self.n_banks, timing=self.timing)
+                                   n_banks=self.n_banks, timing=self.timing,
+                                   cluster=self.cluster)
         self._columns: Dict[str, VerticalColumn] = {}
 
     # -- catalog management --------------------------------------------------
@@ -145,6 +170,44 @@ class QueryService:
         bv = between_scan(col.planes, lo, hi, col.n_bits)
         return np.asarray(bv & np.asarray(self.catalog.mask()))
 
+    # -- elastic deployment --------------------------------------------------
+
+    def rescale(self, n_chips: int):
+        """Elastically change the chip count of a distributed deployment.
+
+        The placement granularity (``max_chips * n_banks`` word-slots) is
+        the preserved "global batch" of `dist.elastic.plan_rescale`: each
+        chip always drives `n_banks` physical banks per sweep
+        (``per_shard_batch``), and the slot grid is re-divided so the new
+        chips cover it in ``plan.grad_accum`` sequential sweeps. Raises
+        `ValueError` (from `plan_rescale`) when the layout cannot be
+        preserved exactly — e.g. 3 chips over an 8-chip-granular
+        placement. On success the catalog is re-placed onto the new mesh:
+        every registered vector keeps its bits (slot contents are
+        invariant, only slot->chip assignment moves) and every derived
+        column / affinity group survives. Returns the `RescalePlan`.
+        """
+        if self.cluster is None:
+            raise ValueError(
+                "rescale() needs a distributed service; construct with "
+                "QueryService(n_chips=...)")
+        from repro.core.cluster import ChipCluster
+        from repro.dist.elastic import plan_rescale
+
+        old = self.cluster
+        plan = plan_rescale(global_batch=old.slots,
+                            old_mesh_shards=old.n_chips,
+                            new_mesh_shards=n_chips,
+                            old_accum=old.sweeps)
+        assert plan.per_shard_batch == self.n_banks
+        self.cluster = ChipCluster.create(
+            n_chips, n_banks=self.n_banks, max_chips=old.max_chips)
+        assert self.cluster.sweeps == plan.grad_accum
+        self.n_chips = n_chips
+        self.catalog.attach_cluster(self.cluster)
+        self.scheduler.cluster = self.cluster
+        return plan
+
     # -- observability -------------------------------------------------------
 
     def stats(self) -> Dict[str, float]:
@@ -158,4 +221,6 @@ class QueryService:
             "compile_count": self.planner.compile_count,
             "total_modeled_ns": self.scheduler.total_modeled_ns,
             "total_energy_nj": self.scheduler.total_energy_nj,
+            "n_chips": self.n_chips or 1,
+            "chip_sweeps": self.cluster.sweeps if self.cluster else 0,
         }

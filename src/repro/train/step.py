@@ -17,14 +17,13 @@ Two variants:
 from __future__ import annotations
 
 import functools
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
-from repro.dist.sharding import (axis_rules, current_mesh, current_rules,
-                                 match_vma, strip_axes)
+from repro.dist.sharding import axis_rules
 from repro.optim.optimizers import Optimizer, clip_by_global_norm
 
 

@@ -6,7 +6,6 @@ import numpy as np
 import pytest
 
 from repro.core import arith_compiler, engine
-from repro.core.commands import Program
 from repro.kernels import ref
 from repro.ops import arith as oar
 from repro.ops.predicate import VerticalColumn

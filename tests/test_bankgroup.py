@@ -8,7 +8,7 @@ from repro.core import bankgroup, compiler, engine
 from repro.core.bankgroup import (BankGroup, execute_banked,
                                   pipeline_latency_ns, shard_words,
                                   unshard_words)
-from repro.core.compiler import Expr, compile_expr_fused, maj
+from repro.core.compiler import Expr, compile_expr_fused
 
 RNG = np.random.default_rng(11)
 W = 96  # not divisible by every bank count on purpose

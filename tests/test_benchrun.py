@@ -1,0 +1,149 @@
+"""Benchmark harness: section-name validation and the perf-regression gate.
+
+`benchmarks.run` used to ignore unknown section names silently (a typo'd
+``python -m benchmarks.run fig9_thruoghput`` printed only the CSV header
+and exited 0); it must now exit non-zero listing the valid names.
+`benchmarks.perf_gate` is the CI comparison that replaced the
+existence-only BENCH_*.json check.
+"""
+import json
+import pathlib
+import sys
+
+import pytest
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(REPO))
+
+from benchmarks import perf_gate  # noqa: E402
+from benchmarks import run as benchrun  # noqa: E402
+
+
+# ---------------------------------------------------------------------------
+# benchmarks.run section validation
+# ---------------------------------------------------------------------------
+
+
+def test_unknown_section_exits_nonzero(capsys):
+    with pytest.raises(SystemExit) as exc:
+        benchrun.main(["fig9_thruoghput"])
+    assert exc.value.code == 2
+    err = capsys.readouterr().err
+    assert "fig9_thruoghput" in err
+    assert "fig9_throughput" in err        # valid names are listed
+    assert "cluster_scaling" in err
+
+
+def test_mixed_known_unknown_rejected_before_running(capsys):
+    with pytest.raises(SystemExit) as exc:
+        benchrun.main(["perf_summary", "nope"])
+    assert exc.value.code == 2
+    out = capsys.readouterr().out
+    assert "name,us_per_call" not in out   # nothing ran
+
+
+def test_section_modules_exist():
+    for section in benchrun.SECTIONS:
+        assert (REPO / "benchmarks" / f"{section}.py").exists(), section
+
+
+# ---------------------------------------------------------------------------
+# perf gate
+# ---------------------------------------------------------------------------
+
+
+def _write(directory, bench, rows, smoke=False):
+    p = directory / f"BENCH_{bench}.json"
+    p.write_text(json.dumps({"bench": bench, "rows": rows, "smoke": smoke}))
+    return p
+
+
+def test_gate_passes_within_band(tmp_path):
+    base = tmp_path / "base"
+    cur = tmp_path / "cur"
+    base.mkdir(), cur.mkdir()
+    _write(base, "x", [{"name": "x/a", "bytes": 64, "modeled_ns": 100.0,
+                        "speedup": 4.0, "wall_steady_us": 10.0}])
+    _write(cur, "x", [{"name": "x/a", "bytes": 64, "modeled_ns": 110.0,
+                       "speedup": 3.8, "wall_steady_us": 12.0}])
+    fails, warns, compared, skipped = perf_gate.run_gate(base, cur, ["x"])
+    assert not fails and not warns
+    assert compared == 3 and skipped == 0
+
+
+def test_gate_fails_on_2x_wall_regression(tmp_path):
+    base, cur = tmp_path / "base", tmp_path / "cur"
+    base.mkdir(), cur.mkdir()
+    _write(base, "x", [{"name": "x/a", "bytes": 64, "wall_steady_us": 10.0}])
+    _write(cur, "x", [{"name": "x/a", "bytes": 64, "wall_steady_us": 25.0}])
+    fails, warns, _, _ = perf_gate.run_gate(base, cur, ["x"])
+    assert len(fails) == 1 and "wall_steady_us" in fails[0]
+
+
+def test_gate_warns_between_1p3x_and_2x(tmp_path):
+    base, cur = tmp_path / "base", tmp_path / "cur"
+    base.mkdir(), cur.mkdir()
+    _write(base, "x", [{"name": "x/a", "bytes": 64, "speedup": 4.0}])
+    _write(cur, "x", [{"name": "x/a", "bytes": 64, "speedup": 2.5}])
+    fails, warns, _, _ = perf_gate.run_gate(base, cur, ["x"])
+    assert not fails and len(warns) == 1 and "speedup" in warns[0]
+
+
+def test_gate_skips_size_mismatched_rows(tmp_path):
+    """Smoke runs shrink operands; cross-size wall comparisons are noise."""
+    base, cur = tmp_path / "base", tmp_path / "cur"
+    base.mkdir(), cur.mkdir()
+    _write(base, "x", [{"name": "x/a", "bytes": 1 << 20,
+                        "wall_steady_us": 10.0}])
+    _write(cur, "x", [{"name": "x/a", "bytes": 1 << 10,
+                       "wall_steady_us": 500.0}])
+    fails, warns, compared, skipped = perf_gate.run_gate(base, cur, ["x"])
+    assert not fails and not warns
+    assert compared == 0 and skipped == 1
+
+
+def test_gate_fails_on_missing_row_and_missing_file(tmp_path):
+    base, cur = tmp_path / "base", tmp_path / "cur"
+    base.mkdir(), cur.mkdir()
+    _write(base, "x", [{"name": "x/a", "bytes": 64, "modeled_ns": 1.0},
+                       {"name": "x/b", "bytes": 64, "modeled_ns": 1.0}])
+    _write(cur, "x", [{"name": "x/a", "bytes": 64, "modeled_ns": 1.0}])
+    fails, _, _, _ = perf_gate.run_gate(base, cur, ["x", "y"])
+    assert any("x/b" in f for f in fails)          # coverage regression
+    assert any("BENCH_y.json" in f for f in fails)  # required file missing
+
+
+def test_gate_tolerates_dropped_rows_across_modes(tmp_path):
+    """A smoke run may drop cases a full baseline has (e.g. vm_dispatch
+    keeps only the gate programs) — that is not a coverage regression."""
+    base, cur = tmp_path / "base", tmp_path / "cur"
+    base.mkdir(), cur.mkdir()
+    _write(base, "x", [{"name": "x/a", "bytes": 64, "modeled_ns": 1.0},
+                       {"name": "x/b", "bytes": 64, "modeled_ns": 1.0}])
+    _write(cur, "x", [{"name": "x/a", "bytes": 64, "modeled_ns": 1.0}],
+           smoke=True)
+    fails, warns, compared, skipped = perf_gate.run_gate(base, cur, ["x"])
+    assert not fails and not warns
+    assert compared == 1 and skipped == 1
+
+
+def test_gate_on_committed_baselines_vs_themselves():
+    """The committed root baselines must gate cleanly against themselves
+    (this is exactly what CI sees when a PR changes no perf behavior)."""
+    fails, warns, compared, _ = perf_gate.run_gate(
+        REPO, REPO, perf_gate.REQUIRED)
+    assert not fails, fails
+    assert not warns, warns
+    assert compared > 0
+
+
+def test_cluster_scaling_baseline_shows_modeled_scaling():
+    """Acceptance: BENCH_cluster_scaling.json at the repo root carries the
+    modeled cross-chip scaling rows the CI gate compares."""
+    rows = perf_gate.load_rows(REPO / "BENCH_cluster_scaling.json")
+    for op in ("and", "xor"):
+        speedups = [rows[f"cluster_scaling/modeled_{op}_c{c}"]["speedup"]
+                    for c in (1, 2, 4, 8)]
+        assert speedups[0] == 1.0
+        assert all(b > a for a, b in zip(speedups, speedups[1:])), speedups
+        assert speedups[-1] >= 4.0

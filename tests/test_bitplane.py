@@ -3,7 +3,7 @@ import numpy as np
 import pytest
 
 from repro.core.bitplane import (BitVector, pack_bits, unpack_bits, n_words,
-                                 tail_mask, WORD_BITS)
+                                 tail_mask)
 
 
 @pytest.mark.parametrize("n", [1, 31, 32, 33, 64, 100, 4096])

@@ -1,0 +1,333 @@
+"""Multi-chip sharded execution (`core.cluster.ChipCluster`).
+
+Sharded execution must be bit-identical to the single-chip oracle for
+every chip count, bank count, backend, and word count (including uneven
+widths that exercise the padding path); the distributed query service must
+match the single-process service and the unbatched reference bit-for-bit;
+elastic rescale must preserve every registered catalog vector.
+
+Multi-chip cases need forced host devices — the CI multi-device job runs
+this file under ``XLA_FLAGS=--xla_force_host_platform_device_count=8``.
+On a single-device host those cases are covered by the subprocess test at
+the bottom (which forces 8 host devices itself), so tier-1 coverage never
+degrades.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.core import compiler, engine, lowering
+from repro.core.arith_compiler import ripple_add_program
+from repro.core.bitplane import tail_mask
+from repro.core.cluster import ChipCluster, ClusterError, cluster_latency_ns
+from repro.dist.sharding import CLUSTER_RULES, DEFAULT_RULES
+from repro.service import QueryService
+from repro.service.scheduler import (MATERIALIZE, Query,
+                                     results_bit_identical,
+                                     run_queries_unbatched)
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+N_DEV = len(jax.devices())
+
+multichip = pytest.mark.skipif(
+    N_DEV < 2,
+    reason="needs >=2 devices (set XLA_FLAGS="
+           "--xla_force_host_platform_device_count=8 before jax imports); "
+           "the CI multi-device job runs these in-process")
+
+
+def _xor_program():
+    return compiler.op_program("xor", ["D0", "D1"], "D2")
+
+
+def _data(rng, n_words, rows=("D0", "D1")):
+    return {r: rng.integers(0, 1 << 32, n_words, dtype=np.uint32)
+            for r in rows}
+
+
+# ---------------------------------------------------------------------------
+# layout + construction
+# ---------------------------------------------------------------------------
+
+
+def test_create_validates_device_count():
+    with pytest.raises(ClusterError, match="xla_force_host_platform"):
+        ChipCluster.create(N_DEV + 1)
+
+
+def test_chips_must_divide_placement():
+    with pytest.raises(ClusterError, match="divide"):
+        ChipCluster(mesh=None, n_chips=2, n_banks=2, max_chips=3)
+
+
+def test_default_placement_granularity():
+    cl = ChipCluster.create(1, n_banks=2)
+    assert cl.max_chips == 8 and cl.sweeps == 8 and cl.local_banks == 16
+    assert cl.slots == 16
+
+
+def test_spec_resolves_through_dist_rules():
+    """The chip/bank logical axes live in dist.sharding's rule tables."""
+    assert DEFAULT_RULES["chip"] == ("chip",)
+    assert DEFAULT_RULES["bank"] == ()
+    assert CLUSTER_RULES == {"chip": ("chip",), "bank": ()}
+    cl = ChipCluster.create(1, n_banks=2)
+    assert cl.spec(3) == P("chip", None, None)
+    assert cl.spec(4) == P("chip", None, None, None)
+
+
+def test_shard_unshard_roundtrip_uneven():
+    rng = np.random.default_rng(0)
+    cl = ChipCluster.create(1, n_banks=3, max_chips=4)   # 12 slots
+    for n_words in (1, 5, 12, 13, 40):
+        x = rng.integers(0, 1 << 32, n_words, dtype=np.uint32)
+        s = cl.shard_words(jnp.asarray(x))
+        assert s.shape == (1, cl.local_banks, cl.local_words(n_words))
+        back = np.asarray(cl.unshard_words(s, n_words))
+        assert np.array_equal(back, x), n_words
+
+
+# ---------------------------------------------------------------------------
+# sharded execution == single-chip oracle
+# ---------------------------------------------------------------------------
+
+
+def test_single_chip_identity():
+    rng = np.random.default_rng(1)
+    data = _data(rng, 13)
+    ref = engine.execute(_xor_program(), data, lowered=False)
+    cl = ChipCluster.create(1, n_banks=4)
+    out = cl.execute(_xor_program(), data)
+    assert set(out) == set(ref)
+    for k in ref:
+        np.testing.assert_array_equal(np.asarray(out[k]),
+                                      np.asarray(ref[k]), err_msg=k)
+
+
+@multichip
+@pytest.mark.parametrize("n_chips", sorted({2, min(4, N_DEV), N_DEV}))
+def test_multichip_identity(n_chips):
+    rng = np.random.default_rng(2)
+    data = _data(rng, 29)   # uneven: exercises zero-padding on every layout
+    ref = engine.execute(_xor_program(), data, outputs=["D2"],
+                         lowered=False)
+    cl = ChipCluster.create(n_chips, n_banks=2,
+                            max_chips=n_chips * 2)
+    out = cl.execute(_xor_program(), data, outputs=["D2"])
+    np.testing.assert_array_equal(np.asarray(out["D2"]),
+                                  np.asarray(ref["D2"]))
+
+
+@multichip
+@pytest.mark.parametrize("backend", ["scan", "pallas"])
+def test_multichip_arith_backends(backend):
+    rng = np.random.default_rng(3)
+    res = ripple_add_program(8)
+    data = _data(rng, 7, rows=[f"X{j}" for j in range(8)]
+                 + [f"Y{j}" for j in range(8)])
+    ref = engine.execute(res.program, data, outputs=list(res.outputs),
+                         lowered=False)
+    cl = ChipCluster.create(2, n_banks=2, max_chips=4)
+    out = cl.execute(res.program, data, outputs=list(res.outputs),
+                     backend=backend)
+    for k in res.outputs:
+        np.testing.assert_array_equal(np.asarray(out[k]),
+                                      np.asarray(ref[k]),
+                                      err_msg=f"{backend}/{k}")
+
+
+@multichip
+def test_popcounts_tree_psum():
+    rng = np.random.default_rng(4)
+    n_words, n_bits = 11, 11 * 32 - 9
+    data = _data(rng, n_words)
+    cl = ChipCluster.create(2, n_banks=3, max_chips=4)
+    lp = lowering.lower(_xor_program())
+    sharded = {k: cl.shard_words(jnp.asarray(v, jnp.uint32))
+               for k, v in data.items()}
+    mask = cl.shard_words(jnp.asarray(tail_mask(n_bits)))
+    counts = cl.popcounts(lp, sharded, ["D2"], mask)
+    flat = np.asarray(engine.execute(_xor_program(), data,
+                                     outputs=["D2"])["D2"])
+    flat = flat & np.asarray(tail_mask(n_bits))
+    expect = int(np.unpackbits(flat.view(np.uint8)).sum())
+    assert counts.shape == (1,) and int(counts[0]) == expect
+
+
+def test_engine_execute_rejects_interpreter_with_chips():
+    rng = np.random.default_rng(5)
+    with pytest.raises(ValueError, match="lowered"):
+        engine.execute(_xor_program(), _data(rng, 9), n_chips=2,
+                       lowered=False)
+
+
+@multichip
+def test_engine_execute_n_chips_param():
+    """`engine.execute(n_chips=C)` is the one-shot chips x banks dispatch."""
+    rng = np.random.default_rng(5)
+    data = _data(rng, 9)
+    ref = engine.execute(_xor_program(), data, outputs=["D2"],
+                         lowered=False)
+    out = engine.execute(_xor_program(), data, outputs=["D2"],
+                         n_banks=2, n_chips=2)
+    np.testing.assert_array_equal(np.asarray(out["D2"]),
+                                  np.asarray(ref["D2"]))
+
+
+def test_modeled_scaling_monotone():
+    prog = _xor_program()
+    total = [cluster_latency_ns(512, c, 8, prog).total_ns
+             for c in (1, 2, 4, 8)]
+    assert all(a > b for a, b in zip(total, total[1:])), total
+    # near-linear: 8 chips must be >= 4x over 1 chip on a bulk workload
+    assert total[0] / total[-1] >= 4.0
+
+
+# ---------------------------------------------------------------------------
+# distributed service deployment
+# ---------------------------------------------------------------------------
+
+N_BITS = 700    # uneven domain: 22 words, tail mask in play
+
+
+def _build_service(**kw):
+    rng = np.random.default_rng(7)
+    svc = QueryService(n_banks=4, **kw)
+    for t in range(2):
+        for d in ("mon", "tue"):
+            svc.register_bits(f"t{t}/{d}", rng.integers(0, 2, N_BITS),
+                              group=f"t{t}")
+    svc.register_column("age", rng.integers(0, 100, N_BITS), 7,
+                        group="cols")
+    svc.register_column("spend", rng.integers(0, 100, N_BITS), 7,
+                        group="cols")
+    return svc
+
+
+_QUERIES = [
+    Query("t0/mon & t0/tue"),
+    Query("t1/mon | t1/tue ^ t0/mon"),
+    Query("age < 30 & t0/mon"),
+    Query("sum(age)"),
+    Query("age + spend"),
+    Query("t0/mon | t1/tue", mode=MATERIALIZE),
+    Query("age + spend", mode=MATERIALIZE),
+]
+
+
+@pytest.mark.parametrize("n_chips", [1] + ([2] if N_DEV >= 2 else []))
+def test_service_distributed_bit_identical(n_chips):
+    base = _build_service()
+    dist = _build_service(n_chips=n_chips)
+    r0 = base.query_batch(list(_QUERIES))
+    r1 = dist.query_batch(list(_QUERIES))
+    assert results_bit_identical(r0.results, r1.results)
+    ru = run_queries_unbatched(base.catalog, list(_QUERIES))
+    assert results_bit_identical(r1.results, ru.results)
+    assert r1.n_chips == n_chips
+
+
+def test_service_records_chip_placement():
+    svc = _build_service(n_chips=1)
+    for name in svc.catalog.names():
+        pl = svc.catalog.placement(name)
+        assert pl is not None and pl.n_chips == 1
+        assert pl.slots == pl.n_chips * pl.local_banks
+    # affinity group members share one layout -> chip-local groups
+    pls = {svc.catalog.placement(n) for n in ("t0/mon", "t0/tue")}
+    assert len(pls) == 1
+
+
+@multichip
+def test_multichip_service_faster_modeled():
+    base = _build_service()
+    dist = _build_service(n_chips=2)
+    r0 = base.query_batch(list(_QUERIES))
+    r1 = dist.query_batch(list(_QUERIES))
+    assert r1.makespan_ns < r0.makespan_ns
+
+
+def test_rescale_requires_distributed_service():
+    svc = _build_service()
+    with pytest.raises(ValueError, match="n_chips"):
+        svc.rescale(2)
+
+
+def test_rescale_rejects_unpreservable_layout():
+    svc = _build_service(n_chips=1, max_chips=8)
+    with pytest.raises(ValueError, match="not preservable"):
+        svc.rescale(3)
+
+
+@multichip
+def test_rescale_preserves_catalog_and_results():
+    svc = _build_service(n_chips=1, max_chips=4)
+    svc.materialize("both", "t0/mon & t0/tue", group="t0")
+    r_before = svc.query_batch(list(_QUERIES))
+    before = {n: np.asarray(svc.catalog.get(n).words)
+              for n in svc.catalog.names()}
+    plan = svc.rescale(2)
+    assert plan.new_mesh_shards == 2
+    assert plan.grad_accum == svc.cluster.sweeps
+    after = {n: np.asarray(svc.catalog.get(n).words)
+             for n in svc.catalog.names()}
+    assert before.keys() == after.keys()
+    for n in before:
+        assert np.array_equal(before[n], after[n]), n
+        gathered = np.asarray(svc.cluster.unshard_words(
+            svc.catalog.shards(n), before[n].shape[0]))
+        assert np.array_equal(gathered, before[n]), n
+        assert svc.catalog.placement(n).n_chips == 2
+    r_after = svc.query_batch(list(_QUERIES))
+    assert results_bit_identical(r_before.results, r_after.results)
+    assert svc.stats()["n_chips"] == 2
+
+
+# ---------------------------------------------------------------------------
+# subprocess: the >=2-forced-host-devices acceptance run, independent of
+# this process's device count (tier-1 keeps multi-chip coverage everywhere)
+# ---------------------------------------------------------------------------
+
+
+def test_multichip_identity_subprocess():
+    code = textwrap.dedent(f"""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import sys; sys.path.insert(0, {REPO!r} + "/src")
+        import numpy as np
+        from repro.core import compiler, engine
+        from repro.core.cluster import ChipCluster
+        from repro.service import QueryService
+
+        rng = np.random.default_rng(0)
+        data = {{r: rng.integers(0, 1 << 32, 13, dtype=np.uint32)
+                 for r in ("D0", "D1")}}
+        prog = compiler.op_program("xor", ["D0", "D1"], "D2")
+        ref = np.asarray(engine.execute(prog, data, outputs=["D2"],
+                                        lowered=False)["D2"])
+        for chips in (2, 4, 8):
+            cl = ChipCluster.create(chips, n_banks=2, max_chips=8)
+            out = np.asarray(cl.execute(prog, data, outputs=["D2"])["D2"])
+            assert np.array_equal(out, ref), chips
+
+        svc = QueryService(n_banks=2, n_chips=2, max_chips=8)
+        svc.register_bits("a", rng.integers(0, 2, 97))
+        svc.register_bits("b", rng.integers(0, 2, 97))
+        n = svc.query("a & b").value
+        expect = svc.query("a & b", mode="materialize").value
+        assert n == int(np.unpackbits(
+            np.asarray(expect, np.uint32).view(np.uint8)).sum())
+        svc.rescale(8)
+        assert svc.query("a & b").value == n
+        print("CLUSTER_OK")
+    """)
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, timeout=600)
+    assert "CLUSTER_OK" in r.stdout, r.stderr[-2000:]

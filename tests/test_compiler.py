@@ -2,7 +2,6 @@
 CSE + dead-store elimination, and the fusion pass emits strictly smaller
 programs with bit-identical semantics."""
 import numpy as np
-import pytest
 
 from repro.core import compiler, engine
 from repro.core.compiler import Expr, compile_expr_fused, fuse_expr, maj
@@ -67,7 +66,6 @@ def test_cse_shares_subexpressions():
 
 
 def test_dead_store_elim_writes_root_directly():
-    data = rows(2)
     expr = Expr.of("D0") & Expr.of("D1")
     res = compiler.compile_expr(expr, "OUT")
     # root materialized straight into OUT: last command's target addr is OUT
@@ -125,7 +123,8 @@ def _random_exprs(n_rows=4):
         (~a & ~b, lambda A, B, C, D: ~(A | B)),
         ((a & ~b) | (~a & b), lambda A, B, C, D: A ^ B),
         ((a & b) | (~a & ~b), lambda A, B, C, D: ~(A ^ B)),
-        (((a & b) | ~(c ^ d)) ^ (a | ~d), lambda A, B, C, D: ((A & B) | ~(C ^ D)) ^ (A | ~D)),
+        (((a & b) | ~(c ^ d)) ^ (a | ~d),
+         lambda A, B, C, D: ((A & B) | ~(C ^ D)) ^ (A | ~D)),
         (~~~(a | (b & ~c)), lambda A, B, C, D: ~(A | (B & ~C))),
         (maj(a ^ b, b | c, ~d), lambda A, B, C, D:
          ((A ^ B) & (B | C)) | ((B | C) & ~D) | (~D & (A ^ B))),

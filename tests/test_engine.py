@@ -1,6 +1,5 @@
 """Engine semantics: every Fig. 8 program must match its jnp oracle, and the
 hardware's destructive/TRA/DCC side effects must hold exactly."""
-import jax.numpy as jnp
 import numpy as np
 import pytest
 

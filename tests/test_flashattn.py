@@ -5,8 +5,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels.flashattn import (flash_attention, flash_attention_kernel,
-                                     flash_attention_fwd_kernel)
+from repro.kernels.flashattn import flash_attention, flash_attention_fwd_kernel
 
 KEY = jax.random.PRNGKey(0)
 

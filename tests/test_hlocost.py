@@ -3,10 +3,9 @@ HloCostAnalysis on unrolled modules (where XLA is trustworthy), and against
 the unrolled module for scanned ones (where XLA under-counts)."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
-from repro.launch.hlocost import HloCostModel, analyze_text, shape_info
+from repro.launch.hlocost import analyze_text, shape_info
 
 
 def test_shape_info():

@@ -1,10 +1,9 @@
 """ops layer: functional correctness vs numpy/python oracles."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core.bitplane import BitVector, pack_bits, unpack_bits
+from repro.core.bitplane import pack_bits, unpack_bits
 from repro.ops import (BitSet, BloomFilter, VerticalColumn, field_mask,
                        masked_fill_constant, masked_init, scan_count,
                        xor_decrypt, xor_encrypt)
@@ -178,6 +177,7 @@ def test_dna_with_mismatches():
     mutated[5] = "A" if read[5] != "A" else "C"
     mutated = "".join(mutated)
     exact = dna.find_matches(genome, mutated)
+    assert int(exact.popcount()) == 0   # 1 mismatch: no exact hit
     approx = dna.find_matches_with_mismatches(genome, mutated, max_mismatch=1)
     bits = np.asarray(approx.to_bits())
     assert bits[1500]  # found despite 1 mismatch

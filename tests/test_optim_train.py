@@ -129,8 +129,6 @@ def test_checkpointer_keeps_last_k_and_atomic():
 
 
 def test_resilient_runner_recovers_and_resumes():
-    calls = {"n": 0}
-
     def step_fn(state, step, batch):
         return state + 1, {"loss": jnp.float32(1.0 / (step + 1))}
 

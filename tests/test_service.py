@@ -52,7 +52,7 @@ def test_catalog_affinity_group_colocates():
     cat = Catalog()
     h1 = cat.register_bits("x", _bits(64), group="g").handle
     h2 = cat.register_bits("y", _bits(64), group="g").handle
-    h3 = cat.register_bits("z", _bits(64)).handle
+    cat.register_bits("z", _bits(64))   # no group: placed independently
     assert (h1.bank, h1.subarray) == (h2.bank, h2.subarray)
     assert h1.row != h2.row
     # grouped ops need zero PSM copies; ungrouped generally cost one

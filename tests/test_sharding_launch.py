@@ -1,7 +1,6 @@
 """Logical sharding resolution, cell construction, and (subprocess) the
 multi-device distributed pieces: majority all-reduce, compressed train step,
 reduced-config cell lowering on an 8-device host mesh."""
-import json
 import os
 import subprocess
 import sys
@@ -13,8 +12,8 @@ import numpy as np
 import pytest
 from jax.sharding import PartitionSpec as P
 
-from repro.dist.sharding import (DEFAULT_RULES, axis_rules, constrain,
-                                 resolve_spec, strip_axes, tree_shardings)
+from repro.dist.sharding import (DEFAULT_RULES, constrain, resolve_spec,
+    strip_axes)
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 

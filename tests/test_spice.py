@@ -1,6 +1,5 @@
 """Charge-sharing model must reproduce Table 1's structure and values."""
 import jax
-import numpy as np
 import pytest
 
 from repro.core import spice
