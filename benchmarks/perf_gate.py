@@ -40,7 +40,7 @@ WARN_RATIO = 1.3
 
 #: benches every CI run must produce (bare names, without BENCH_/.json)
 REQUIRED = ["fig9_throughput", "serve_qps", "arith_throughput",
-            "vm_dispatch", "cluster_scaling"]
+            "vm_dispatch", "cluster_scaling", "reliability"]
 
 #: configuration fields that must agree for metric comparison to be fair
 SIZE_KEYS = ("bytes", "row_words", "n_cmds", "n_rows", "n_banks",

@@ -1,0 +1,163 @@
+"""Reliability modes: TRA fault rates and the cost of mitigating them.
+
+The 2024 DDR4 characterization (arXiv:2402.18736) behind
+`core.errors.TRAErrorModel` makes analog MAJ-of-3 a probabilistic
+primitive; this benchmark quantifies both halves of the reliability story
+the service exposes as `QueryService(reliability=...)`:
+
+  * **fault-rate** rows: raw bit-error rate of seeded injection vs the
+    residual rate after k=3 majority voting, at several per-bit flip
+    probabilities — deterministic (fixed keys), so the vote's correction
+    factor is a stable trajectory number.
+  * **modeled** rows: scheduler-timeline latency/energy/qps of the same
+    query batch under ``none`` / ``vote`` / ``ecc`` — the mitigation
+    overhead the paper-style cost model charges (k x AAP compute + one
+    vote AAP per output plane; transfers are not repeated). Fixed
+    workload even in smoke mode, so the CI perf gate
+    (`benchmarks/perf_gate.py`) compares these rows exactly.
+  * **measured** rows: wall-clock of the mitigated VM dispatch (operands
+    shrink under ``BENCH_SMOKE=1``; the gate skips mismatched sizes).
+
+Acceptance gates: every mode is bit-identical to the unmitigated service
+at rate 0, and voting strictly reduces the injected bit-error rate.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from benchmarks.common import (Row, emit, measure_wall, smoke_mode,
+                               write_bench_json)
+from repro.core import compiler, engine, errors, lowering
+from repro.core.errors import ReliabilityConfig, TRAErrorModel
+from repro.service import Query, QueryService, results_bit_identical
+
+MODES = ("none", "vote", "ecc")
+#: modeled workload — fixed even in smoke mode: gate-comparable rows
+N_BITS = 1536
+N_QUERIES = 24
+#: fault-rate workload (fixed): one maj3 program over this many words
+FAULT_WORDS = 512
+FAULT_PROBS = (1e-4, 1e-3)
+#: measured workload — shrinks in smoke mode (gate skips size mismatches)
+MEAS_BITS = 1 << 16
+SMOKE_MEAS_BITS = 1 << 11
+
+_QUERY_SHAPES = ["a & b", "a | c & ~d", "(a ^ b) | (c & d)", "b ^ d"]
+
+
+def _batch() -> list:
+    return [Query(_QUERY_SHAPES[i % len(_QUERY_SHAPES)])
+            for i in range(N_QUERIES)]
+
+
+def _service(n_bits: int, mode: str) -> QueryService:
+    rel = (None if mode == "none" else ReliabilityConfig(
+        mode=mode, model=TRAErrorModel(p_flip=0.0)))
+    rng = np.random.default_rng(5)
+    svc = QueryService(n_banks=8, reliability=rel)
+    for n in "abcd":
+        svc.register_bits(n, rng.integers(0, 2, n_bits).astype(bool),
+                          group="t0")
+    return svc
+
+
+def _bit_error_rate(a: dict, b: dict, outs: list) -> float:
+    total = diff = 0
+    for o in outs:
+        x, y = np.asarray(a[o]), np.asarray(b[o])
+        diff += int(np.unpackbits((x ^ y).view(np.uint8)).sum())
+        total += x.size * 32
+    return diff / total
+
+
+def run() -> list[Row]:
+    smoke = smoke_mode()
+    rows: list[Row] = []
+    jrows: list[dict] = []
+
+    # -- fault rates: raw injection vs k=3 vote (deterministic) --------------
+    program = compiler.maj3_program("D0", "D1", "D2", "D3")
+    lp = lowering.lower(program)
+    rng = np.random.default_rng(0)
+    data = {f"D{i}": rng.integers(0, 1 << 32, FAULT_WORDS, dtype=np.uint32)
+            for i in range(3)}
+    outs = ["D3"]
+    clean = engine.execute(program, data, outputs=outs, lowered=False)
+    for p in FAULT_PROBS:
+        model = TRAErrorModel(p_flip=p)
+        raw = errors.execute_injected(lp, data, outputs=outs, model=model,
+                                      key=jax.random.PRNGKey(1))
+        voted = errors.execute_voted(lp, data, outs, model=model,
+                                     key=jax.random.PRNGKey(1))
+        raw_rate = _bit_error_rate(clean, raw, outs)
+        voted_rate = _bit_error_rate(clean, voted, outs)
+        assert raw_rate > 0.0, f"p={p}: injection drew no faults"
+        assert voted_rate < raw_rate, \
+            f"p={p}: vote did not reduce the error rate"
+        corr = ("complete" if voted_rate == 0.0
+                else f"{raw_rate / voted_rate:.0f}x")
+        rows.append((
+            f"reliability/fault_rate_p{p:g}", 0.0,
+            f"raw_ber={raw_rate:.2e} voted_ber={voted_rate:.2e} "
+            f"correction={corr} words={FAULT_WORDS}"))
+        jrows.append({
+            "name": f"reliability/fault_rate_p{p:g}",
+            "n_bits": FAULT_WORDS * 32,
+            "raw_bit_error_rate": raw_rate,
+            "voted_bit_error_rate": voted_rate,
+        })
+
+    # -- modeled mitigation overhead (fixed workload; gate-compared) ---------
+    batch = _batch()
+    reports = {}
+    for mode in MODES:
+        svc = _service(N_BITS, mode)
+        reports[mode] = svc.query_batch(batch)
+    for mode in MODES:
+        rep = reports[mode]
+        assert results_bit_identical(reports["none"].results, rep.results), \
+            f"{mode}: not bit-identical to the unmitigated service at rate 0"
+        energy = sum(r.energy_nj for r in rep.results)
+        overhead = rep.makespan_ns / reports["none"].makespan_ns
+        rows.append((
+            f"reliability/modeled_{mode}", 0.0,
+            f"modeled_ms={rep.makespan_ns / 1e6:.3f} qps={rep.qps:.0f} "
+            f"energy_uj={energy / 1e3:.2f} overhead={overhead:.2f}x "
+            f"queries={N_QUERIES}"))
+        jrows.append({
+            "name": f"reliability/modeled_{mode}",
+            "n_bits": N_BITS,
+            "n_queries": N_QUERIES,
+            "modeled_ns": rep.makespan_ns,
+            "qps": rep.qps,
+            "energy_nj": energy,
+            "latency_overhead": overhead,
+        })
+    # fault-free ecc dual-runs (2x), vote always runs k=3 (3x)
+    assert reports["vote"].makespan_ns > reports["ecc"].makespan_ns \
+        > reports["none"].makespan_ns
+
+    # -- measured: wall-clock of the mitigated dispatch ----------------------
+    meas_bits = SMOKE_MEAS_BITS if smoke else MEAS_BITS
+    for mode in MODES:
+        svc = _service(meas_bits, mode)
+        w = measure_wall(lambda s=svc: s.query_batch(batch),
+                         iters=3 if smoke else 5)
+        rows.append((
+            f"reliability/measured_{mode}", w["wall_steady_us"],
+            f"first_us={w['wall_first_us']:.0f} bits={meas_bits} "
+            f"queries={N_QUERIES}"))
+        jrows.append({
+            "name": f"reliability/measured_{mode}",
+            "n_bits": meas_bits,
+            "n_queries": N_QUERIES,
+            **{k: round(v, 1) for k, v in w.items()},
+        })
+
+    write_bench_json("reliability", jrows)
+    return rows
+
+
+if __name__ == "__main__":
+    emit(run(), header=True)

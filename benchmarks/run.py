@@ -21,6 +21,7 @@ SECTIONS = [
     "arith_throughput",
     "vm_dispatch",
     "cluster_scaling",
+    "reliability",
     "extra_apps",
     "perf_summary",
 ]

@@ -112,11 +112,30 @@ class Checkpointer:
                 ) -> Tuple[int, Any, Dict]:
         """Restore into the structure of `like`. `shardings` (optional tree
         of NamedSharding mirroring `like`) re-lays-out for the current mesh
-        (elastic restart)."""
-        if step is None:
-            step = self.latest_step()
-        if step is None:
+        (elastic restart).
+
+        With ``step=None``, a checkpoint that turns out damaged on read (a
+        crash can truncate or delete leaf files even after the manifest
+        landed — e.g. a torn filesystem, or an operator partially cleaning
+        the directory) is skipped and the next-older intact step is used;
+        an explicitly requested ``step`` still raises on damage.
+        """
+        if step is not None:
+            return self._restore_step(step, like, shardings)
+        steps = self.all_steps()
+        if not steps:
             raise FileNotFoundError(f"no checkpoint in {self.dir}")
+        last_err: Optional[Exception] = None
+        for s in reversed(steps):
+            try:
+                return self._restore_step(s, like, shardings)
+            except (OSError, ValueError, KeyError) as e:
+                last_err = e    # damaged: fall back to the next-older step
+        raise FileNotFoundError(
+            f"no intact checkpoint in {self.dir}: {last_err}")
+
+    def _restore_step(self, step: int, like: Any,
+                      shardings: Optional[Any]) -> Tuple[int, Any, Dict]:
         path = os.path.join(self.dir, f"step_{step:08d}")
         with open(os.path.join(path, "manifest.json")) as f:
             manifest = json.load(f)

@@ -19,3 +19,6 @@ from repro.core.energy import (EnergyModel, DEFAULT_ENERGY, program_energy_nj,
                                buddy_energy_nj_per_kb, ddr3_energy_nj_per_kb,
                                energy_table)
 from repro.core.isa import BuddyDevice, BopResult
+from repro.core.errors import (TRAErrorModel, ReliabilityConfig, error_planes,
+                               single_fault_planes, execute_injected,
+                               execute_voted, execute_ecc, vote_outputs)

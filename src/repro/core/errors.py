@@ -1,0 +1,293 @@
+"""TRA reliability: seeded per-cell/per-row error model + mitigation.
+
+Triple-row activation is an analog mechanism. The 2024 characterization of
+off-the-shelf DDR4 parts ("Functionally-Complete Boolean Logic in Real DRAM
+Chips", arXiv:2402.18736) measured that MAJ-of-3 success rates are
+
+  * **per-cell**: individual cells flip with different probabilities
+    (process variation), modeled here as an i.i.d. per-bit flip drawn from
+    a seeded PRNG;
+  * **per-pattern**: the *operand data pattern* matters — mixed patterns
+    (one or two charged cells among the three sensed) sit closer to the
+    sense amplifier's metastable point and fail orders of magnitude more
+    often than unanimous all-0/all-1 patterns (`pattern_scale`, indexed by
+    the number of charged operands);
+  * **spatially variable**: rows differ systematically (`row_sigma`, a
+    deterministic lognormal factor hashed from the sensed row triple); and
+  * **temperature-dependent**: error rates grow with temperature
+    (`temperature_c` / `temp_coeff` around `NOMINAL_C`).
+
+`error_planes` compiles a `LoweredProgram`'s opcode table plus a PRNG key
+into per-command, per-pattern-class XOR masks that the lowered VMs apply
+**at TRA compute time** (`core.lowering._vm_exec`, `kernels.vm`), not on
+final outputs — faulty sensed values propagate through the rest of the
+program exactly like real analog failures would. The masks are indexed by
+command position, so `core.lowering._Layout` row renumbering never changes
+which faults land where, and a fixed key yields bit-identical fault
+patterns on the scan VM and the Pallas megakernel (tests/test_errors.py).
+
+Mitigation (SIMDRAM, arXiv:2012.11890, treats these margins as first-class
+deployability constraints):
+
+  * `execute_voted` — run the program k (odd) times with independent fault
+    draws and take a bitwise majority over the replicas' output planes,
+    reusing the native MAJ-of-k kernel (`kernels.majority`, the lifted TRA
+    primitive). Any fault confined to a single replica is corrected.
+  * `execute_ecc` — dual-modular redundancy with a vote tie-break: run
+    twice, accept on agreement (2x cost), run a third replica and majority
+    vote on disagreement (3x). The catalog side of ECC (XOR parity planes
+    over registered vectors) lives in `service.catalog`.
+
+Both are surfaced as `QueryService(reliability=ReliabilityConfig(...))`
+modes with modeled AAP/latency/energy overhead (`service.scheduler`,
+`benchmarks/reliability.py`).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import lowering
+from repro.core.lowering import KIND_TRA, LoweredProgram
+
+#: characterization nominal temperature (°C): `temp_coeff` scales the flip
+#: probability exponentially around this point
+NOMINAL_C = 50.0
+
+#: number of operand pattern classes: 0, 1, 2, or 3 charged cells sensed
+N_PATTERNS = 4
+
+RELIABILITY_MODES = ("none", "vote", "ecc")
+
+
+@dataclasses.dataclass(frozen=True)
+class TRAErrorModel:
+    """Per-cell/per-row/per-pattern TRA flip-probability model.
+
+    ``p_flip`` is the base per-bit flip probability of a TRA at the
+    nominal temperature on a median row under the worst pattern class;
+    ``pattern_scale[k]`` scales it for k charged operands (mixed patterns
+    1/2 dominate, matching the 2402.18736 measurements); ``row_sigma`` is
+    the std-dev of the deterministic lognormal spatial factor hashed from
+    the sensed row triple; temperature scales everything by
+    ``exp(temp_coeff * (temperature_c - NOMINAL_C))``.
+    """
+
+    p_flip: float = 1e-3
+    pattern_scale: Tuple[float, float, float, float] = (0.05, 1.0, 1.0, 0.05)
+    row_sigma: float = 0.5
+    temperature_c: float = NOMINAL_C
+    temp_coeff: float = 0.03
+
+    def __post_init__(self):
+        if not 0.0 <= self.p_flip <= 1.0:
+            raise ValueError(f"p_flip {self.p_flip} outside [0, 1]")
+        if len(self.pattern_scale) != N_PATTERNS:
+            raise ValueError("pattern_scale needs one factor per pattern "
+                             f"class (4), got {len(self.pattern_scale)}")
+
+    def row_factors(self, table: np.ndarray) -> np.ndarray:
+        """Deterministic per-command spatial factor (lognormal, median 1).
+
+        Hashed from the sensed row triple, so commands activating the same
+        physical rows share their factor — the model's stand-in for "this
+        subarray region is weak" spatial variation.
+        """
+        src = np.asarray(table)[:, 1:4].astype(np.uint64)
+        h = ((src[:, 0] * np.uint64(73856093))
+             ^ (src[:, 1] * np.uint64(19349663))
+             ^ (src[:, 2] * np.uint64(83492791)))
+        out = np.empty(len(h), np.float64)
+        for i, hi in enumerate(h):
+            z = float(np.random.default_rng(int(hi)).standard_normal())
+            out[i] = math.exp(self.row_sigma * z)
+        return out
+
+    def flip_probs(self, table: np.ndarray) -> np.ndarray:
+        """(n_cmds, 4) per-command, per-pattern-class flip probabilities.
+
+        Rows of non-TRA commands (single-wordline senses) are exactly
+        zero: only the analog triple-row majority can fail.
+        """
+        table = np.asarray(table)
+        temp = math.exp(self.temp_coeff * (self.temperature_c - NOMINAL_C))
+        probs = (self.p_flip * temp
+                 * self.row_factors(table)[:, None]
+                 * np.asarray(self.pattern_scale, np.float64)[None, :])
+        probs[(table[:, 0] & KIND_TRA) == 0] = 0.0
+        return np.clip(probs, 0.0, 1.0).astype(np.float32)
+
+
+def error_planes(table: np.ndarray, key: jax.Array,
+                 batch: Tuple[int, ...], row_words: int,
+                 model: TRAErrorModel) -> jax.Array:
+    """Seeded XOR fault masks: ``(n_cmds, 4) + batch + (row_words,)``.
+
+    Plane ``[i, k]`` flips the bits of command i's sensed value wherever
+    the operand pattern at that bit position has k charged cells — the VMs
+    select the matching class per bit at run time (data-dependent), so the
+    same mask tensor reproduces the same physical fault pattern whatever
+    data flows through. ``p_flip == 0`` short-circuits to exact zeros,
+    which is what makes rate-0 injection bit-identical to the clean path.
+    """
+    table = np.asarray(table)
+    n_cmds = int(table.shape[0])
+    shape = (n_cmds, N_PATTERNS) + tuple(batch) + (row_words,)
+    probs = model.flip_probs(table)
+    if not probs.any():
+        return jnp.zeros(shape, jnp.uint32)
+    p = jnp.asarray(probs).reshape(
+        (n_cmds, N_PATTERNS) + (1,) * (len(batch) + 2))
+    u = jax.random.uniform(key, shape + (32,), dtype=jnp.float32)
+    bits = (u < p).astype(jnp.uint32)
+    weights = jnp.left_shift(jnp.uint32(1),
+                             jnp.arange(32, dtype=jnp.uint32))
+    return jnp.sum(bits * weights, axis=-1, dtype=jnp.uint32)
+
+
+def single_fault_planes(table: np.ndarray, batch: Tuple[int, ...],
+                        row_words: int, cmd: int, word: int,
+                        bit: int) -> jax.Array:
+    """A deterministic one-bit fault: flip bit `bit` of word `word` of
+    command `cmd`'s sensed value, whatever the operand pattern is (all
+    four pattern planes carry the bit, so exactly one flip happens iff the
+    command is a TRA). The property suite's injection primitive."""
+    table = np.asarray(table)
+    planes = np.zeros((int(table.shape[0]), N_PATTERNS) + tuple(batch)
+                      + (row_words,), np.uint32)
+    if table[cmd, 0] & KIND_TRA:
+        planes[(cmd, slice(None)) + (Ellipsis, word)] = np.uint32(1) << bit
+    return jnp.asarray(planes)
+
+
+# ---------------------------------------------------------------------------
+# Injected / mitigated execution over lowered programs
+# ---------------------------------------------------------------------------
+
+
+def _plane_batch(data: Dict[str, jax.Array]) -> Tuple[Tuple[int, ...], int]:
+    """The (batch, row_words) `execute_lowered` will derive for `data`."""
+    shapes = [tuple(jnp.asarray(v).shape) for v in data.values()]
+    return (tuple(np.broadcast_shapes(*(s[:-1] for s in shapes))),
+            int(max(s[-1] for s in shapes)))
+
+
+def execute_injected(lp: LoweredProgram, data: Dict[str, jax.Array],
+                     outputs: Optional[List[str]] = None,
+                     backend: str = "scan",
+                     model: Optional[TRAErrorModel] = None,
+                     key: Optional[jax.Array] = None
+                     ) -> Dict[str, jax.Array]:
+    """One execution with seeded TRA faults injected at compute time."""
+    model = model or TRAErrorModel(p_flip=0.0)
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    batch, row_words = _plane_batch(data)
+    errs = error_planes(lp.table, key, batch, row_words, model)
+    return lowering.execute_lowered(lp, data, outputs=outputs,
+                                    backend=backend, errors=errs)
+
+
+def vote_outputs(replicas: Sequence[Dict[str, jax.Array]],
+                 outputs: Sequence[str]) -> Dict[str, jax.Array]:
+    """Bitwise per-plane majority across replica output dicts.
+
+    Reuses the MAJ-of-k carry-save-adder kernel (`kernels.majority`) — the
+    paper's TRA primitive lifted to k operands — so the vote itself is the
+    same packed bit-plane machinery as the computation it protects.
+    """
+    from repro.kernels.majority import majority_kernel
+
+    k = len(replicas)
+    voted: Dict[str, jax.Array] = {}
+    for o in outputs:
+        stack = jnp.stack([jnp.asarray(r[o], jnp.uint32) for r in replicas])
+        flat = stack.reshape(k, -1, stack.shape[-1])
+        voted[o] = majority_kernel(flat).reshape(stack.shape[1:])
+    return voted
+
+
+def execute_voted(lp: LoweredProgram, data: Dict[str, jax.Array],
+                  outputs: List[str], backend: str = "scan",
+                  model: Optional[TRAErrorModel] = None,
+                  key: Optional[jax.Array] = None,
+                  k: int = 3) -> Dict[str, jax.Array]:
+    """Majority-vote execution: k independent fault draws, bitwise vote.
+
+    Corrects every fault confined to a single replica (any number of bit
+    flips, any command) — the property the test suite pins down.
+    """
+    if k < 3 or k % 2 == 0:
+        raise ValueError(f"vote needs an odd k >= 3, got {k}")
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    replicas = [execute_injected(lp, data, outputs=outputs, backend=backend,
+                                 model=model, key=jax.random.fold_in(key, r))
+                for r in range(k)]
+    out = vote_outputs(replicas, outputs)
+    for name in replicas[0]:            # pass-through rows need no vote
+        out.setdefault(name, replicas[0][name])
+    return out
+
+
+def execute_ecc(lp: LoweredProgram, data: Dict[str, jax.Array],
+                outputs: List[str], backend: str = "scan",
+                model: Optional[TRAErrorModel] = None,
+                key: Optional[jax.Array] = None
+                ) -> Tuple[Dict[str, jax.Array], int]:
+    """Dual-modular redundancy with a vote tie-break.
+
+    Two replicas that agree are accepted (2x cost — the common case when
+    faults are rare); a disagreement triggers a third replica and a
+    bitwise majority (3x). Returns (outputs, replicas_run).
+    """
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    a = execute_injected(lp, data, outputs=outputs, backend=backend,
+                         model=model, key=jax.random.fold_in(key, 0))
+    b = execute_injected(lp, data, outputs=outputs, backend=backend,
+                         model=model, key=jax.random.fold_in(key, 1))
+    if all(np.array_equal(np.asarray(a[o]), np.asarray(b[o]))
+           for o in outputs):
+        return a, 2
+    c = execute_injected(lp, data, outputs=outputs, backend=backend,
+                         model=model, key=jax.random.fold_in(key, 2))
+    out = vote_outputs([a, b, c], outputs)
+    for name in a:
+        out.setdefault(name, a[name])
+    return out, 3
+
+
+@dataclasses.dataclass(frozen=True)
+class ReliabilityConfig:
+    """How a `QueryService` computes through TRA faults.
+
+    ``mode``:
+      * ``"none"`` — trust the analog majority (the paper's assumption);
+      * ``"vote"`` — every TRA-bearing plan-group runs ``k`` times with
+        independent fault draws and output planes are bitwise-voted;
+      * ``"ecc"`` — dual-run compare with vote tie-break, plus a catalog
+        XOR-parity integrity check per batch (`Catalog.verify_parity`).
+
+    ``model`` draws the injected faults (None = fault-free replicas: pure
+    mitigation-overhead measurement); ``seed`` roots the per-group PRNG
+    chain, so a served batch is reproducible fault-for-fault.
+    """
+
+    mode: str = "none"
+    k: int = 3
+    model: Optional[TRAErrorModel] = None
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.mode not in RELIABILITY_MODES:
+            raise ValueError(f"unknown reliability mode {self.mode!r}; "
+                             f"expected one of {RELIABILITY_MODES}")
+        if self.k < 3 or self.k % 2 == 0:
+            raise ValueError(f"replica count k must be odd >= 3, "
+                             f"got {self.k}")

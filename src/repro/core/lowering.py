@@ -242,13 +242,20 @@ def read_rows(lp: LoweredProgram, plane: jax.Array,
 # ---------------------------------------------------------------------------
 
 
-def _vm_step(plane: jax.Array, cmd: jax.Array):
+def _vm_exec(plane: jax.Array, cmd: jax.Array,
+             err: Optional[jax.Array]) -> jax.Array:
     """One command: sense (maj3 of polarity-adjusted sources) + write set.
 
     Deliberately built from `lax.dynamic_slice` / `dynamic_update_slice`
     rather than gather/scatter (`plane[i]` / `.at[i].set`): XLA compiles
     the slice forms of a single-row access an order of magnitude faster,
     and the VM's whole point is O(1) trace+compile.
+
+    ``err`` (None on the clean path) is this command's ``(4, ...)`` XOR
+    fault-mask stack from `core.errors.error_planes`: plane k flips the
+    sensed value wherever the operand pattern has k charged cells, so
+    injection happens at TRA compute time and faulty values propagate
+    through the remaining commands like real analog failures.
     """
     kind = cmd[0]
     full = jnp.uint32(0xFFFFFFFF)
@@ -260,6 +267,15 @@ def _vm_step(plane: jax.Array, cmd: jax.Array):
 
     s0, s1, s2 = src(1, 2), src(2, 3), src(3, 4)
     v = (s0 & s1) | (s1 & s2) | (s2 & s0)       # maj3; == s0 when replicated
+    if err is not None:
+        # pattern classes partition the bit positions, so exactly one of
+        # the four masks applies per bit; non-TRA commands carry all-zero
+        # masks (the model zeroes them at generation)
+        ones3 = s0 & s1 & s2
+        lit = s0 | s1 | s2
+        flip = ((err[0] & ~lit) | (err[1] & (lit & ~v))
+                | (err[2] & (v & ~ones3)) | (err[3] & ones3))
+        v = v ^ flip
 
     aux = cmd[4]
     pos = aux & 0xFF
@@ -274,7 +290,16 @@ def _vm_step(plane: jax.Array, cmd: jax.Array):
     head = jnp.where(neg_sel, ~v, head)
     plane = jax.lax.dynamic_update_slice_in_dim(plane, head, 0, axis=0)
     plane = jax.lax.dynamic_update_slice_in_dim(plane, v, dst, axis=0)
-    return plane, None
+    return plane
+
+
+def _vm_step(plane: jax.Array, cmd: jax.Array):
+    return _vm_exec(plane, cmd, None), None
+
+
+def _vm_step_err(plane: jax.Array, cmd_err):
+    cmd, err = cmd_err
+    return _vm_exec(plane, cmd, err), None
 
 
 @jax.jit
@@ -283,14 +308,28 @@ def _scan_vm(table: jax.Array, plane: jax.Array) -> jax.Array:
     return out
 
 
-def run_scan(lp: LoweredProgram, plane: jax.Array) -> jax.Array:
+@jax.jit
+def _scan_vm_err(table: jax.Array, plane: jax.Array,
+                 errors: jax.Array) -> jax.Array:
+    out, _ = jax.lax.scan(_vm_step_err, plane, (table, errors))
+    return out
+
+
+def run_scan(lp: LoweredProgram, plane: jax.Array,
+             errors: Optional[jax.Array] = None) -> jax.Array:
     """Execute the opcode table over a plane tensor via the lax.scan VM.
 
     The jaxpr size is independent of ``n_cmds`` (regression-tested) and the
     jit cache key is purely the argument shapes, so every program lowered to
     the same ``(n_cmds, n_rows, words)`` shape reuses one executable.
+    ``errors`` (optional, `core.errors.error_planes`) injects per-command
+    TRA fault masks — it rides the scan as data, so the jaxpr stays
+    constant-size with injection on too.
     """
-    return _scan_vm(jnp.asarray(lp.table), plane)
+    if errors is None:
+        return _scan_vm(jnp.asarray(lp.table), plane)
+    return _scan_vm_err(jnp.asarray(lp.table), plane,
+                        jnp.asarray(errors, jnp.uint32))
 
 
 def aot_compile_timings(lp: LoweredProgram, data: Dict[str, jax.Array],
@@ -413,8 +452,8 @@ def _layout(lp: LoweredProgram, data_names: Tuple[str, ...],
 
 @functools.partial(jax.jit, static_argnames=(
     "n_rows", "out_runs", "row_words", "batch", "backend", "fixed_idx"))
-def _dispatch(table, vals, fixed_vals=(), *, n_rows, out_runs, row_words,
-              batch, backend, fixed_idx=()):
+def _dispatch(table, vals, fixed_vals=(), errors=None, *, n_rows, out_runs,
+              row_words, batch, backend, fixed_idx=()):
     """Plane build + VM run + output extraction as ONE compiled dispatch.
 
     The opcode table is a *traced* argument, so the compiled executable is
@@ -423,6 +462,8 @@ def _dispatch(table, vals, fixed_vals=(), *, n_rows, out_runs, row_words,
     jit cache, not program structure. Thanks to `_Layout` renumbering the
     body is gather-free: concatenate [reserved rows | stacked operand
     planes | zero tail], scan (or megakernel), slice the output runs.
+    ``errors`` (also traced; None on the clean path) carries the
+    per-command TRA fault masks of `core.errors` into the VM.
     """
     shape = batch + (row_words,)
     tail = n_rows - N_RESERVED - len(vals)
@@ -439,15 +480,20 @@ def _dispatch(table, vals, fixed_vals=(), *, n_rows, out_runs, row_words,
         from repro.kernels.vm import vm_megakernel
 
         out_idx = tuple(i for a, b in out_runs for i in range(a, b))
-        return vm_megakernel(table, plane, out_idx)
-    out_plane, _ = jax.lax.scan(_vm_step, plane, table)
+        return vm_megakernel(table, plane, out_idx, errors=errors)
+    if errors is None:
+        out_plane, _ = jax.lax.scan(_vm_step, plane, table)
+    else:
+        out_plane, _ = jax.lax.scan(_vm_step_err, plane, (table, errors))
     return jnp.concatenate([out_plane[a:b] for a, b in out_runs])
 
 
 def execute_lowered(lp: LoweredProgram, data: Dict[str, jax.Array],
                     row_words: Optional[int] = None,
                     outputs: Optional[List[str]] = None,
-                    backend: str = "scan") -> Dict[str, jax.Array]:
+                    backend: str = "scan",
+                    errors: Optional[jax.Array] = None
+                    ) -> Dict[str, jax.Array]:
     """Run a lowered program over named rows; returns named rows.
 
     Mirrors `engine.execute`: rows the program references but ``data`` does
@@ -458,6 +504,11 @@ def execute_lowered(lp: LoweredProgram, data: Dict[str, jax.Array],
     (``"pallas"``, `kernels.vm`), which loads the plane into VMEM once and
     loops the command table on-chip. Either way the whole call — plane
     build, program execution, output extraction — is one jitted dispatch.
+
+    ``errors`` injects seeded TRA fault masks (`core.errors.error_planes`,
+    shape ``(n_cmds, 4[, *batch], row_words)``) at compute time; masks are
+    indexed by command position, so the `_Layout` row renumbering below
+    never changes where a fault lands.
     """
     if backend not in ("scan", "pallas"):
         raise ValueError(f"unknown lowered backend {backend!r}")
@@ -470,11 +521,20 @@ def execute_lowered(lp: LoweredProgram, data: Dict[str, jax.Array],
     batch = tuple(np.broadcast_shapes(*(s[:-1] for s in shapes)))
     lay = _layout(lp, tuple(sorted(data)),
                   tuple(outputs) if outputs is not None else None)
+    if errors is not None:
+        errors = jnp.asarray(errors, jnp.uint32)
+        target = (lp.n_cmds, 4) + batch + (row_words,)
+        if errors.shape != target:   # un-batched masks broadcast per query
+            errors = jnp.broadcast_to(
+                errors.reshape(errors.shape[:2]
+                               + (1,) * (len(target) - errors.ndim)
+                               + errors.shape[2:]), target)
     seeded_fixed = tuple(n for n in FIXED_ROWS if n in data)
     out_rows = _dispatch(
         lay.table,
         tuple(jnp.asarray(data[k], jnp.uint32) for k in lay.val_names),
         tuple(jnp.asarray(data[n], jnp.uint32) for n in seeded_fixed),
+        errors,
         n_rows=lay.n_rows, out_runs=lay.out_runs,
         row_words=row_words, batch=batch, backend=backend,
         fixed_idx=tuple(FIXED_ROWS.index(n) for n in seeded_fixed))

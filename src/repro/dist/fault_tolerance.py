@@ -1,10 +1,17 @@
-"""Fault-tolerant training loop: checkpointed execution with failure
-recovery, plus an EMA-based straggler detector.
+"""Fault-tolerant execution: checkpointed loops with failure recovery, an
+EMA-based straggler detector, and the scheduler-facing chaos policy.
 
 `ResilientRunner` wraps a step function with periodic checkpointing and
 replay-from-last-checkpoint on (simulated or real) failures; a fresh runner
 pointed at the same checkpoint directory resumes where the previous job
-stopped — the crash/preemption story for long training runs.
+stopped — the crash/preemption story for long runs (serving streams use it
+through `QueryService.serve_stream`).
+
+`FaultTolerance` is the per-dispatch policy `service.scheduler.Scheduler`
+consults around every plan-group launch: failures are replayed (after an
+optional chip-failure recovery hook — `QueryService` installs an elastic
+rescale-down there), slow groups are flagged by the `StragglerMonitor`, and
+everything lands on a timeline the chaos suite asserts against.
 """
 from __future__ import annotations
 
@@ -16,6 +23,14 @@ from repro.checkpoint.checkpointer import Checkpointer
 
 class SimulatedFailure(RuntimeError):
     """Injected failure (chaos testing); treated exactly like a real one."""
+
+
+class ChipFailure(SimulatedFailure):
+    """A chip died mid-dispatch (chaos-injected or real device loss)."""
+
+    def __init__(self, chip: int, message: str = ""):
+        super().__init__(message or f"chip {chip} failed mid-dispatch")
+        self.chip = chip
 
 
 @dataclasses.dataclass
@@ -51,6 +66,10 @@ class ResilientRunner:
 
     def _restore(self, init_state, rep: RunReport, event: str
                  ) -> Tuple[int, Any]:
+        # an async save may still be writing the newest checkpoint: without
+        # draining it first, latest_step()/restore() race the background
+        # thread and can resume from a stale (or mid-rename) step
+        self.ck.wait()
         latest = self.ck.latest_step()
         if latest is None:
             rep.timeline.append(f"{event}@start")
@@ -65,6 +84,7 @@ class ResilientRunner:
         rep = RunReport()
         state = init_state
         step = 0
+        self.ck.wait()      # see _restore: never race an async save
         if self.ck.latest_step() is not None:
             step, state = self._restore(init_state, rep, "resume")
             rep.restores += 1
@@ -122,3 +142,38 @@ class StragglerMonitor:
             return True  # straggler; EMA untouched
         self.ema = self.alpha * seconds + (1 - self.alpha) * self.ema
         return False
+
+
+@dataclasses.dataclass
+class FaultTolerance:
+    """Per-plan-group fault policy + live chaos state for the scheduler.
+
+    The scheduler wraps every plan-group dispatch: on an exception the
+    group is replayed up to ``max_replays`` times, calling
+    ``on_chip_failure`` first (`QueryService` installs an elastic
+    rescale-down handler there, so a dead chip's work re-lands on the
+    surviving mesh); each successful dispatch is timed through ``monitor``
+    and flagged groups are recorded. ``failure_injector(group_idx)`` is
+    the chaos hook — it runs *inside* the timed/guarded window, so an
+    injector that raises simulates a chip dying mid-dispatch and one that
+    sleeps registers as a straggler.
+
+    ``timeline`` collects ``failure@groupN:Exc`` / ``replay@groupN`` /
+    ``straggler@groupN`` / ``rescale@C->C'`` events in dispatch order —
+    the observable record tests/test_chaos.py asserts against.
+    """
+
+    max_replays: int = 2
+    monitor: StragglerMonitor = dataclasses.field(
+        default_factory=StragglerMonitor)
+    #: chaos hook: called with the global plan-group index before dispatch
+    failure_injector: Optional[Callable[[int], None]] = None
+    #: recovery hook: called with the exception before each replay
+    on_chip_failure: Optional[Callable[[BaseException], None]] = None
+
+    def __post_init__(self):
+        self.timeline: List[str] = []
+        self.stragglers: List[int] = []
+        self.failures = 0
+        self.replays = 0
+        self.groups_dispatched = 0

@@ -36,8 +36,13 @@ from repro.kernels.common import (LANE, SUBLANE, pad_to, pick_block, round_up,
 _N_FIXED = len(FIXED_ROWS)
 
 
-def _vm_kernel(n_cmds: int, out_idx: tuple):
-    def kern(tbl_ref, plane_ref, out_ref, scratch):
+def _vm_kernel(n_cmds: int, out_idx: tuple, with_err: bool = False):
+    def kern(tbl_ref, plane_ref, *refs):
+        if with_err:
+            err_ref, out_ref, scratch = refs
+        else:
+            err_ref = None
+            out_ref, scratch = refs
         # load the whole plane block into VMEM once; it stays resident for
         # every command of the program
         scratch[...] = plane_ref[...]
@@ -55,6 +60,20 @@ def _vm_kernel(n_cmds: int, out_idx: tuple):
 
             s0, s1, s2 = src(1, 2), src(2, 3), src(3, 4)
             v = (s0 & s1) | (s1 & s2) | (s2 & s0)   # (1, bw) sensed value
+            if with_err:
+                # TRA fault injection at compute time: command i's four
+                # pattern-class XOR masks live at rows 4i..4i+3 of the
+                # flattened error block; exactly one class matches per bit
+                # (same selection as `core.lowering._vm_exec`)
+                e0 = err_ref[pl.ds(4 * i, 1), :]
+                e1 = err_ref[pl.ds(4 * i + 1, 1), :]
+                e2 = err_ref[pl.ds(4 * i + 2, 1), :]
+                e3 = err_ref[pl.ds(4 * i + 3, 1), :]
+                ones3 = s0 & s1 & s2
+                lit = s0 | s1 | s2
+                flip = ((e0 & ~lit) | (e1 & (lit & ~v))
+                        | (e2 & (v & ~ones3)) | (e3 & ones3))
+                v = v ^ flip
 
             aux = tbl_ref[i, 4]
             pos_sel = (((aux >> bits) & 1) == 1)
@@ -74,8 +93,8 @@ def _vm_kernel(n_cmds: int, out_idx: tuple):
 
 
 @functools.partial(jax.jit, static_argnames=("out_idx", "block_cols"))
-def _vm_call(table: jax.Array, plane: jax.Array, out_idx: tuple,
-             block_cols: int) -> jax.Array:
+def _vm_call(table: jax.Array, plane: jax.Array, errors=None, *,
+             out_idx: tuple, block_cols: int) -> jax.Array:
     n_rows, w = plane.shape
     n_cmds = table.shape[0]
     rp = round_up(n_rows, SUBLANE)
@@ -84,24 +103,33 @@ def _vm_call(table: jax.Array, plane: jax.Array, out_idx: tuple,
     plane_p = pad_to(plane, (rp, wp))
     n_out = len(out_idx)
     op = round_up(max(n_out, 1), SUBLANE)
+    with_err = errors is not None
+    in_specs = [pl.BlockSpec((rp, bw), lambda j, tbl: (0, j))]
+    operands = [table, plane_p]
+    if with_err:
+        # flattened (n_cmds * 4, words) XOR-mask block, row-padded to the
+        # sublane tile; rides VMEM next to the plane for the whole program
+        ep = round_up(errors.shape[0], SUBLANE)
+        operands.append(pad_to(jnp.asarray(errors, jnp.uint32), (ep, wp)))
+        in_specs.append(pl.BlockSpec((ep, bw), lambda j, tbl: (0, j)))
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=(wp // bw,),
-        in_specs=[pl.BlockSpec((rp, bw), lambda j, tbl: (0, j))],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((op, bw), lambda j, tbl: (0, j)),
         scratch_shapes=[pltpu.VMEM((rp, bw), jnp.uint32)],
     )
     out = pl.pallas_call(
-        _vm_kernel(n_cmds, out_idx),
+        _vm_kernel(n_cmds, out_idx, with_err),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((op, wp), jnp.uint32),
         interpret=use_interpret(),
-    )(table, plane_p)
+    )(*operands)
     return out[:n_out, :w]
 
 
 def vm_megakernel(table: np.ndarray, plane: jax.Array, out_idx: tuple,
-                  block_cols: int = 2048) -> jax.Array:
+                  block_cols: int = 2048, errors=None) -> jax.Array:
     """Run a lowered opcode table over a plane tensor in one kernel launch.
 
     ``plane`` is ``(n_rows, words)`` uint32, optionally with inner batch
@@ -112,6 +140,13 @@ def vm_megakernel(table: np.ndarray, plane: jax.Array, out_idx: tuple,
     kernel axis (a single flat launch grid per shard, instead of one
     nested vmap level per axis), then reshape back; returns the
     ``(len(out_idx), *batch, words)`` output rows only.
+
+    ``errors`` (optional) is the ``(n_cmds, 4, *batch, words)`` TRA
+    fault-mask tensor of `core.errors.error_planes`; per vmap slice it is
+    flattened to a ``(n_cmds * 4, words)`` block resident in VMEM beside
+    the plane, so injection happens inside the sequencer loop at TRA
+    compute time — bit-identical to the scan VM's injection for the same
+    masks (tests/test_errors.py).
     """
     plane = jnp.asarray(plane, jnp.uint32)
     table = jnp.asarray(table, jnp.int32)
@@ -122,12 +157,24 @@ def vm_megakernel(table: np.ndarray, plane: jax.Array, out_idx: tuple,
         block_cols = max(block_cols, plane.shape[-1])
     call = functools.partial(_vm_call, out_idx=out_idx,
                              block_cols=block_cols)
+    n_cmds, words = table.shape[0], plane.shape[-1]
+    if errors is not None:
+        errors = jnp.broadcast_to(
+            jnp.asarray(errors, jnp.uint32),
+            (n_cmds, 4) + plane.shape[1:-1] + (words,))
     if plane.ndim == 2:
-        return call(table, plane)
+        if errors is None:
+            return call(table, plane)
+        return call(table, plane, errors.reshape(n_cmds * 4, words))
     batch = plane.shape[1:-1]
     flat = jnp.moveaxis(plane, 0, -2).reshape((-1,) + (plane.shape[0],
                                                        plane.shape[-1]))
-    out = jax.vmap(lambda p: call(table, p))(flat)
+    if errors is None:
+        out = jax.vmap(lambda p: call(table, p))(flat)
+    else:
+        eflat = jnp.moveaxis(errors, (0, 1), (-3, -2)).reshape(
+            (-1, n_cmds * 4, words))
+        out = jax.vmap(lambda p, e: call(table, p, e))(flat, eflat)
     out = out.reshape(batch + out.shape[-2:])
     return jnp.moveaxis(out, -2, 0)
 

@@ -120,6 +120,11 @@ class Catalog:
         # (None = single-process catalog, the pre-cluster behavior)
         self._cluster = None
         self._mask_shards: Optional[jax.Array] = None
+        # ECC: running XOR parity plane per affinity group (None key =
+        # ungrouped), maintained incrementally at registration time —
+        # `verify_parity` recomputes from scratch and cross-checks, the
+        # integrity probe of the service's "ecc" reliability mode
+        self._parity: Dict[Optional[str], jax.Array] = {}
 
     # -- registration -------------------------------------------------------
 
@@ -152,6 +157,9 @@ class Catalog:
         handle = self.allocator.alloc(name, n_bits, group=group)
         entry = CatalogEntry(name, words, n_bits, handle, group=group)
         self._entries[name] = entry
+        prev = self._parity.get(group)
+        cur = jnp.asarray(words, jnp.uint32)
+        self._parity[group] = cur if prev is None else prev ^ cur
         if self._cluster is not None:
             self._place(entry)
         return entry
@@ -203,6 +211,34 @@ class Catalog:
         """Tail mask zeroing the padding bits of the last packed word."""
         assert self.n_bits is not None, "empty catalog has no domain"
         return jnp.asarray(tail_mask(self.n_bits))
+
+    # -- ECC parity planes ----------------------------------------------------
+
+    def parity_plane(self, group: Optional[str] = None) -> jax.Array:
+        """The maintained XOR parity of one affinity group's vectors.
+
+        Word-level XOR over the *unsharded* packed words, so the plane is
+        invariant across elastic rescales (only slot->chip assignment
+        moves, never the words) — what lets the chaos suite assert catalog
+        integrity after a chip-kill recovery.
+        """
+        if group not in self._parity:
+            raise CatalogError(f"no vectors registered in group {group!r}")
+        return self._parity[group]
+
+    def verify_parity(self) -> bool:
+        """Recompute every group's XOR parity and cross-check the
+        maintained planes — False means some registered vector's words
+        were corrupted (or parity maintenance has a bug)."""
+        fresh: Dict[Optional[str], jax.Array] = {}
+        for entry in self._entries.values():
+            w = jnp.asarray(entry.words, jnp.uint32)
+            prev = fresh.get(entry.group)
+            fresh[entry.group] = w if prev is None else prev ^ w
+        if set(fresh) != set(self._parity):
+            return False
+        return all(bool(jnp.array_equal(self._parity[g], fresh[g]))
+                   for g in fresh)
 
     # -- chip placement (distributed mode) ------------------------------------
 

@@ -51,8 +51,10 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import time
 from typing import Dict, List, Optional, Sequence, Tuple, Union
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -139,11 +141,32 @@ class Scheduler:
     #: popcounts aggregate with a chip-axis tree psum. None = the
     #: single-process path (one device, bank axis only).
     cluster: Optional["ChipCluster"] = None  # noqa: F821 (forward ref)
+    #: TRA reliability mode (`core.errors.ReliabilityConfig`): "vote" runs
+    #: every lowered plan-group k times with independent seeded fault draws
+    #: and bitwise-votes the output planes; "ecc" dual-runs with a vote
+    #: tie-break plus a catalog parity check per batch. Injection targets
+    #: the single-process VM path; distributed deployments handle faults
+    #: at chip granularity through `fault_tolerance` instead.
+    reliability: Optional["ReliabilityConfig"] = None  # noqa: F821
+    #: chip/straggler fault policy (`dist.fault_tolerance.FaultTolerance`):
+    #: plan-group dispatches are timed, replayed on failure (after the
+    #: recovery hook — QueryService installs an elastic rescale-down), and
+    #: flagged when they straggle past the EMA threshold.
+    fault_tolerance: Optional["FaultTolerance"] = None  # noqa: F821
 
     def __post_init__(self):
         self.queries_served = 0
         self.total_modeled_ns = 0.0
         self.total_energy_nj = 0.0
+        self.parity_checks = 0
+        self._group_seq = 0      # deterministic per-dispatch PRNG chain
+        if (self.reliability is not None
+                and self.reliability.mode != "none"
+                and self.cluster is not None):
+            raise ValueError(
+                "reliability injection modes run on the single-process VM "
+                "path; distributed deployments recover at chip granularity "
+                "(fault_tolerance=...), not per-TRA")
 
     # -- plumbing -----------------------------------------------------------
 
@@ -163,7 +186,7 @@ class Scheduler:
 
     def _run_group(self, members: List[Tuple[int, BoundPlan]],
                    need_words: bool
-                   ) -> Tuple[Optional[np.ndarray], List[int]]:
+                   ) -> Tuple[Optional[np.ndarray], List[int], int]:
         """One stacked VM dispatch for all queries sharing a plan.
 
         Stacks each canonical input IN{i} across the group's queries into a
@@ -173,14 +196,17 @@ class Scheduler:
         or Pallas megakernel: the whole group is ONE kernel launch over a
         ``(n_rows, n_queries, n_words)`` plane tensor, no per-query
         tracing. Returns (masked result words (len(members), n_outputs,
-        n_words) or None when no member materializes, per-query scalars) —
-        the scalar is sum_j 2**j * popcount(output plane j), which for
-        single-output boolean plans is exactly the popcount. The reduction
-        happens once per group, on device, so for scalar-only groups just
-        len(members) ints cross to the host.
+        n_words) or None when no member materializes, per-query scalars,
+        replicas run) — the scalar is sum_j 2**j * popcount(output plane
+        j), which for single-output boolean plans is exactly the popcount.
+        The reduction happens once per group, on device, so for scalar-only
+        groups just len(members) ints cross to the host. Replicas is 1 on
+        the clean path, k under vote, 2 or 3 under ecc — the multiplier the
+        modeled timeline charges for mitigation.
         """
         if self.cluster is not None:
-            return self._run_group_sharded(members, need_words)
+            words, scalars = self._run_group_sharded(members, need_words)
+            return words, scalars, 1
         input_rows = [bp.input_map() for _, bp in members]
         data = {
             name: jnp.stack([self.catalog.get(rows[name]).words
@@ -188,7 +214,12 @@ class Scheduler:
             for name in input_rows[0]
         }
         plan = members[0][1].plan
-        if plan.lowered is not None:
+        rel = self.reliability
+        replicas = 1
+        if (rel is not None and rel.mode != "none"
+                and plan.lowered is not None):
+            out, replicas = self._run_reliable(plan, data)
+        elif plan.lowered is not None:
             out = lowering.execute_lowered(
                 plan.lowered, data, outputs=list(plan.outputs),
                 backend=self.backend)
@@ -205,7 +236,72 @@ class Scheduler:
                    for s in range(len(members))]
         words = (np.asarray(jnp.moveaxis(masked, 0, 1))
                  if need_words else None)
-        return words, scalars
+        return words, scalars, replicas
+
+    def _run_reliable(self, plan: Plan, data: Dict[str, jax.Array]
+                      ) -> Tuple[Dict[str, jax.Array], int]:
+        """Mitigated dispatch: vote or ecc over the lowered program.
+
+        Each plan-group consumes one link of a deterministic PRNG chain
+        rooted at the config seed, so a served batch reproduces the same
+        fault pattern run-to-run (and the replay of a failed group draws
+        fresh faults, as a re-executed TRA would).
+        """
+        from repro.core import errors as errmod
+
+        rel = self.reliability
+        key = jax.random.fold_in(jax.random.PRNGKey(rel.seed),
+                                 self._group_seq)
+        self._group_seq += 1
+        model = rel.model or errmod.TRAErrorModel(p_flip=0.0)
+        if rel.mode == "vote":
+            out = errmod.execute_voted(
+                plan.lowered, data, list(plan.outputs),
+                backend=self.backend, model=model, key=key, k=rel.k)
+            return out, rel.k
+        return errmod.execute_ecc(
+            plan.lowered, data, list(plan.outputs),
+            backend=self.backend, model=model, key=key)
+
+    def _run_group_resilient(self, members: List[Tuple[int, BoundPlan]],
+                             need_words: bool
+                             ) -> Tuple[Optional[np.ndarray], List[int], int]:
+        """`_run_group` under the fault policy: timed, replayed, flagged.
+
+        The chaos injector runs inside the guarded+timed window, so a
+        raising injector is indistinguishable from a chip dying
+        mid-dispatch and a sleeping one from a straggling chip. On failure
+        the recovery hook runs first (elastic rescale-down when a
+        QueryService owns this scheduler — `self.cluster` is re-read on
+        replay, so the group re-lands on the surviving mesh), then the
+        whole group is re-dispatched; results are whatever the successful
+        attempt produced, which the chaos suite asserts bit-identical to a
+        never-failed run.
+        """
+        ft = self.fault_tolerance
+        g = ft.groups_dispatched
+        ft.groups_dispatched += 1
+        for attempt in range(ft.max_replays + 1):
+            t0 = time.perf_counter()
+            try:
+                if ft.failure_injector is not None:
+                    ft.failure_injector(g)
+                out = self._run_group(members, need_words)
+            except Exception as e:  # noqa: BLE001 - any failure is replayable
+                ft.failures += 1
+                ft.timeline.append(f"failure@group{g}:{type(e).__name__}")
+                if attempt >= ft.max_replays:
+                    raise
+                if ft.on_chip_failure is not None:
+                    ft.on_chip_failure(e)
+                ft.replays += 1
+                ft.timeline.append(f"replay@group{g}")
+                continue
+            if ft.monitor.observe(g, time.perf_counter() - t0):
+                ft.stragglers.append(g)
+                ft.timeline.append(f"straggler@group{g}")
+            return out
+        raise AssertionError("unreachable: loop exits via return or raise")
 
     def _run_group_sharded(self, members: List[Tuple[int, BoundPlan]],
                            need_words: bool
@@ -266,6 +362,16 @@ class Scheduler:
         if not queries:
             return BatchReport([], 0.0, self.n_banks, 0)
 
+        if self.reliability is not None and self.reliability.mode == "ecc":
+            # ecc mode opens every batch with a catalog integrity probe:
+            # the maintained per-group XOR parity must match a fresh
+            # recomputation, or some operand vector was corrupted at rest
+            self.parity_checks += 1
+            if not self.catalog.verify_parity():
+                raise RuntimeError(
+                    "catalog parity check failed: a registered vector's "
+                    "words no longer match the maintained XOR parity plane")
+
         # 1. plan every query through the cache (hits skip recompilation)
         bound: List[BoundPlan] = [
             self.planner.plan(q.query, columns=self.catalog.columns)
@@ -277,10 +383,13 @@ class Scheduler:
             groups.setdefault(bp.plan.key, []).append((idx, bp))
         words_by_idx: Dict[int, np.ndarray] = {}
         count_by_idx: Dict[int, int] = {}
+        replicas_by_idx: Dict[int, int] = {}
+        dispatch = (self._run_group_resilient
+                    if self.fault_tolerance is not None else self._run_group)
         for members in groups.values():
             need_words = any(queries[idx].mode == MATERIALIZE
                              for idx, _ in members)
-            stacked, scalars = self._run_group(members, need_words)
+            stacked, scalars, replicas = dispatch(members, need_words)
             plan = members[0][1].plan
             # boolean plans (single DST row) materialize as a flat word
             # vector; arithmetic plans as the (n_outputs, n_words) plane
@@ -291,6 +400,7 @@ class Scheduler:
                     w = stacked[slot]          # (n_outputs, n_words)
                     words_by_idx[idx] = w[0] if is_boolean else w
                 count_by_idx[idx] = scalars[slot]
+                replicas_by_idx[idx] = replicas
 
         # 3. modeled timeline: queries placed on least-loaded (chip, bank)
         #    slots; operand transfers serialize on each chip's own internal
@@ -310,11 +420,20 @@ class Scheduler:
                         for bi in range(self.n_banks)),
                        key=lambda cb: bank_free[cb[0]][cb[1]])
             xfer = self._xfer_ns(bp.plan)
+            # mitigation overhead is charged where it runs: a k-replica
+            # dispatch repeats the in-bank AAP compute k times (operands
+            # are already placed, so transfers are NOT repeated) and a
+            # voted readout adds one maj-AAP per output plane
+            replicas = replicas_by_idx.get(idx, 1)
+            vote_ns = (len(bp.plan.outputs) * self.timing.aap_ns
+                       if replicas > 1 else 0.0)
             for _ in range(n_blocks):
                 start = max(bus_free[c], bank_free[c][b])
                 bus_free[c] = start + xfer
-                bank_free[c][b] = bus_free[c] + bp.plan.latency_ns_per_block
-            energy = bp.plan.energy_nj_per_block * n_blocks
+                bank_free[c][b] = (bus_free[c]
+                                   + bp.plan.latency_ns_per_block * replicas
+                                   + vote_ns)
+            energy = bp.plan.energy_nj_per_block * n_blocks * replicas
             value: Union[int, np.ndarray]
             if q.mode == MATERIALIZE:
                 value = words_by_idx[idx]

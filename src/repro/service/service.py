@@ -65,6 +65,15 @@ class QueryService:
     #: fixed across rescales; defaults to the smallest multiple of n_chips
     #: >= 8 (see `core.cluster.ChipCluster.create`)
     max_chips: Optional[int] = None
+    #: TRA reliability mode (`core.errors.ReliabilityConfig`): "vote" /
+    #: "ecc" mitigated execution of every plan-group, with the replica and
+    #: vote overhead charged on the modeled timeline. Single-process only.
+    reliability: Optional["ReliabilityConfig"] = None  # noqa: F821
+    #: chip/straggler fault policy (`dist.fault_tolerance.FaultTolerance`).
+    #: Unless the policy already carries a recovery hook, the service
+    #: installs `_recover_chip_failure` — elastic rescale-down on a
+    #: `ChipFailure`, preserving every registered vector.
+    fault_tolerance: Optional["FaultTolerance"] = None  # noqa: F821
 
     def __post_init__(self):
         self.catalog = Catalog()
@@ -78,9 +87,14 @@ class QueryService:
                 max_chips=self.max_chips)
             self.max_chips = self.cluster.max_chips
             self.catalog.attach_cluster(self.cluster)
+        if (self.fault_tolerance is not None
+                and self.fault_tolerance.on_chip_failure is None):
+            self.fault_tolerance.on_chip_failure = self._recover_chip_failure
         self.scheduler = Scheduler(catalog=self.catalog, planner=self.planner,
                                    n_banks=self.n_banks, timing=self.timing,
-                                   cluster=self.cluster)
+                                   cluster=self.cluster,
+                                   reliability=self.reliability,
+                                   fault_tolerance=self.fault_tolerance)
         self._columns: Dict[str, VerticalColumn] = {}
 
     # -- catalog management --------------------------------------------------
@@ -208,6 +222,88 @@ class QueryService:
         self.scheduler.cluster = self.cluster
         return plan
 
+    # -- fault tolerance -----------------------------------------------------
+
+    def _recover_chip_failure(self, exc: BaseException) -> None:
+        """Default `FaultTolerance.on_chip_failure` hook: rescale down.
+
+        A `dist.fault_tolerance.ChipFailure` on a distributed deployment
+        means one chip of the mesh is gone; recovery elastically re-plans
+        the placement onto the largest valid smaller chip count (the slot
+        grid constrains which counts divide evenly — `rescale` raises
+        `ValueError` for the rest) and re-places every catalog vector, so
+        the replayed plan-group lands on the surviving mesh with nothing
+        lost. Non-chip failures (a transient kernel fault) need no
+        topology change; the scheduler's replay alone recovers them.
+        """
+        from repro.dist.fault_tolerance import ChipFailure
+
+        if not isinstance(exc, ChipFailure) or self.cluster is None:
+            return
+        old = self.cluster.n_chips
+        for c in range(old - 1, 0, -1):
+            try:
+                self.rescale(c)
+            except ValueError:
+                continue    # slot grid not divisible by c chips
+            if self.fault_tolerance is not None:
+                self.fault_tolerance.timeline.append(f"rescale@{old}->{c}")
+            return
+        raise RuntimeError(
+            f"chip failure on a {old}-chip mesh with no valid smaller "
+            "layout") from exc
+
+    def serve_stream(self, batches: Sequence[Sequence[Query]],
+                     checkpoint_dir: str, ckpt_every: int = 2,
+                     failure_injector=None, max_restores: int = 16):
+        """Serve a stream of query batches with checkpointed recovery.
+
+        Each batch is one step of a `dist.fault_tolerance.ResilientRunner`:
+        scalar results land in a flat values array inside the runner state,
+        which is checkpointed every ``ckpt_every`` batches
+        (`checkpoint.Checkpointer`, atomic + async). A failure mid-stream
+        replays from the last checkpoint; a *fresh* service pointed at the
+        same directory resumes where the previous job stopped and skips
+        the already-served prefix. Returns ``(values, RunReport)`` with
+        ``values[i]`` the scalar of the i-th query in stream order.
+
+        Scalar modes only — a materialized word vector has no slot in the
+        fixed-structure checkpoint state.
+        """
+        from repro.checkpoint.checkpointer import Checkpointer
+        from repro.dist.fault_tolerance import ResilientRunner
+
+        batches = [list(b) for b in batches]
+        for b in batches:
+            for q in b:
+                if q.mode == MATERIALIZE:
+                    raise ValueError(
+                        "serve_stream checkpoints scalar results; "
+                        "materialize queries don't fit the stream state")
+        sizes = [len(b) for b in batches]
+        offsets = np.concatenate([[0], np.cumsum(sizes)])
+        n_total = int(offsets[-1])
+
+        def step_fn(state, step, batch):
+            report = self.query_batch(batch)
+            # restore round-trips through jnp.asarray, so re-host + re-cast
+            # instead of mutating (state may be a device array)
+            values = np.asarray(state["values"]).astype(np.int64).copy()
+            lo = int(offsets[step])
+            values[lo:lo + len(batch)] = [int(r.value)
+                                          for r in report.results]
+            return {"done": np.int64(step + 1), "values": values}, {}
+
+        runner = ResilientRunner(
+            step_fn, lambda step: batches[step],
+            Checkpointer(checkpoint_dir), ckpt_every=ckpt_every,
+            max_restores=max_restores)
+        init = {"done": np.int64(0),
+                "values": np.zeros(n_total, np.int64)}
+        state, report = runner.run(init, len(batches),
+                                   failure_injector=failure_injector)
+        return np.asarray(state["values"]).astype(np.int64), report
+
     # -- observability -------------------------------------------------------
 
     def stats(self) -> Dict[str, float]:
@@ -223,4 +319,5 @@ class QueryService:
             "total_energy_nj": self.scheduler.total_energy_nj,
             "n_chips": self.n_chips or 1,
             "chip_sweeps": self.cluster.sweeps if self.cluster else 0,
+            "parity_checks": self.scheduler.parity_checks,
         }

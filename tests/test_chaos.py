@@ -1,0 +1,236 @@
+"""Chaos suite: injected failures against the serving stack.
+
+Failures are injected through `dist.fault_tolerance.FaultTolerance`'s
+chaos hook (raise = a chip dying mid-dispatch, sleep = a straggler) and
+through `serve_stream`'s per-step injector; every scenario must recover to
+results bit-identical to a never-failed run, with the recovery visible on
+the policy timeline.
+
+Single-process scenarios run in tier-1. Multi-chip chip-kill scenarios are
+``@pytest.mark.chaos`` and need forced host devices — the CI multi-device
+job runs ``pytest -m chaos`` under
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``; on a single-device
+host the subprocess test at the bottom keeps chip-kill coverage in tier-1.
+"""
+import os
+import subprocess
+import sys
+import tempfile
+import textwrap
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.dist.fault_tolerance import (ChipFailure, FaultTolerance,
+                                        SimulatedFailure, StragglerMonitor)
+from repro.service import Query, QueryService, results_bit_identical
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+N_DEV = len(jax.devices())
+
+multichip = pytest.mark.skipif(
+    N_DEV < 2,
+    reason="needs >=2 devices (set XLA_FLAGS="
+           "--xla_force_host_platform_device_count=8 before jax imports); "
+           "the CI multi-device job runs these in-process")
+
+QUERIES = [Query("a & b"), Query("a | c & ~d"),
+           Query("(a ^ b) | (c & d)"), Query("~a & d", mode="materialize")]
+
+
+def _service(n_chips=None, **kw):
+    rng = np.random.default_rng(2)
+    svc = QueryService(n_banks=8, n_chips=n_chips,
+                       max_chips=8 if n_chips else None, **kw)
+    for n in "abcd":
+        svc.register_bits(n, rng.integers(0, 2, 700).astype(bool),
+                          group="t0")
+    return svc
+
+
+# ---------------------------------------------------------------------------
+# single-process chaos (tier-1)
+# ---------------------------------------------------------------------------
+
+
+def test_failed_group_replayed_bit_identical():
+    clean = _service().query_batch(QUERIES)
+    ft = FaultTolerance(max_replays=2)
+    armed = {"live": True}
+
+    def inject(g):
+        if g == 1 and armed["live"]:
+            armed["live"] = False
+            raise SimulatedFailure("transient kernel fault")
+
+    ft.failure_injector = inject
+    svc = _service(fault_tolerance=ft)
+    rep = svc.query_batch(QUERIES)
+    assert results_bit_identical(clean.results, rep.results)
+    assert ft.failures == 1 and ft.replays == 1
+    assert "failure@group1:SimulatedFailure" in ft.timeline
+    assert "replay@group1" in ft.timeline
+
+
+def test_replays_exhausted_reraises():
+    ft = FaultTolerance(max_replays=1)
+
+    def inject(g):
+        raise SimulatedFailure("permanent fault")
+
+    ft.failure_injector = inject
+    svc = _service(fault_tolerance=ft)
+    with pytest.raises(SimulatedFailure):
+        svc.query_batch(QUERIES[:1])
+    assert ft.failures == 2             # initial attempt + 1 replay
+    assert ft.replays == 1
+
+
+def test_straggling_group_flagged_on_timeline():
+    ft = FaultTolerance(monitor=StragglerMonitor(alpha=1.0, threshold=3.0,
+                                                 warmup=2))
+
+    def inject(g):
+        if g == 5:
+            time.sleep(0.5)             # a chip gone slow, not dead
+
+    ft.failure_injector = inject
+    svc = _service(fault_tolerance=ft)
+    for _ in range(6):                  # groups 0..5; 0 absorbs jit compile
+        svc.query_batch(QUERIES[:1])
+    assert 5 in ft.stragglers
+    assert "straggler@group5" in ft.timeline
+    assert ft.failures == 0             # slow is not dead: no replay
+
+
+def test_serve_stream_failure_recovers_and_resumes():
+    base = _service()
+    batches = [[Query("a & b"), Query("c | d")], [Query("a ^ b")],
+               [Query("~a & d")], [Query("a & b & c")]]
+    expect = [base.query(q.query).value for b in batches for q in b]
+    with tempfile.TemporaryDirectory() as d:
+        ck_dir = os.path.join(d, "ck")
+        armed = {"live": True}
+
+        def inject(step):
+            if step == 2 and armed["live"]:
+                armed["live"] = False
+                raise SimulatedFailure("mid-stream crash")
+
+        vals, rep = _service().serve_stream(batches, ck_dir, ckpt_every=1,
+                                            failure_injector=inject)
+        assert list(vals) == expect
+        assert rep.failures == 1 and rep.restores == 1
+        assert "restore@2" in rep.timeline
+        # a FRESH service resumes from the final checkpoint: nothing reruns
+        vals2, rep2 = _service().serve_stream(batches, ck_dir)
+        assert list(vals2) == expect
+        assert rep2.steps_run == 0
+        assert rep2.timeline[0] == f"resume@{len(batches)}"
+
+
+def test_serve_stream_rejects_materialize():
+    with tempfile.TemporaryDirectory() as d:
+        with pytest.raises(ValueError, match="materialize"):
+            _service().serve_stream([[Query("a & b", mode="materialize")]],
+                                    os.path.join(d, "ck"))
+
+
+# ---------------------------------------------------------------------------
+# multi-chip chip-kill (CI multi-device job: pytest -m chaos)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.chaos
+@multichip
+def test_chip_kill_rescales_and_recovers_bit_identical():
+    clean = _service(n_chips=4).query_batch(QUERIES)
+    ft = FaultTolerance(max_replays=2)
+    armed = {"live": True}
+
+    def inject(g):
+        if g == 2 and armed["live"]:
+            armed["live"] = False
+            raise ChipFailure(3)
+
+    ft.failure_injector = inject
+    svc = _service(n_chips=4, fault_tolerance=ft)
+    rep = svc.query_batch(QUERIES)
+    assert results_bit_identical(clean.results, rep.results)
+    # 4 chips over a 64-slot grid: 3 doesn't divide, recovery lands on 2
+    assert svc.n_chips == 2
+    assert "failure@group2:ChipFailure" in ft.timeline
+    assert "rescale@4->2" in ft.timeline
+    assert "replay@group2" in ft.timeline
+    # the shrunken cluster keeps serving correctly
+    rep2 = svc.query_batch(QUERIES)
+    assert results_bit_identical(clean.results, rep2.results)
+
+
+@pytest.mark.chaos
+@multichip
+def test_chip_kill_mid_stream_preserves_every_result():
+    base = _service()
+    batches = [[Query("a & b"), Query("c | d")], [Query("a ^ b")],
+               [Query("(a ^ b) | (c & d)")]]
+    expect = [base.query(q.query).value for b in batches for q in b]
+    ft = FaultTolerance(max_replays=2)
+    armed = {"live": True}
+
+    def inject(g):
+        if g == 1 and armed["live"]:
+            armed["live"] = False
+            raise ChipFailure(1)
+
+    ft.failure_injector = inject
+    svc = _service(n_chips=2, fault_tolerance=ft)
+    with tempfile.TemporaryDirectory() as d:
+        vals, _ = svc.serve_stream(batches, os.path.join(d, "ck"))
+    assert list(vals) == expect
+    assert svc.n_chips == 1
+    assert "rescale@2->1" in ft.timeline
+
+
+# ---------------------------------------------------------------------------
+# subprocess: chip-kill acceptance independent of this host's device count
+# ---------------------------------------------------------------------------
+
+
+def test_chip_kill_recovery_subprocess():
+    code = textwrap.dedent(f"""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import sys; sys.path.insert(0, {REPO!r} + "/src")
+        import numpy as np
+        from repro.dist.fault_tolerance import ChipFailure, FaultTolerance
+        from repro.service import (Query, QueryService,
+                                   results_bit_identical)
+
+        rng = np.random.default_rng(2)
+        bits = {{n: rng.integers(0, 2, 700).astype(bool) for n in "abcd"}}
+        def build(**kw):
+            svc = QueryService(n_banks=8, n_chips=4, max_chips=8, **kw)
+            for n, v in bits.items():
+                svc.register_bits(n, v, group="t0")
+            return svc
+        qs = [Query("a & b"), Query("a | c & ~d"),
+              Query("~a & d", mode="materialize")]
+        clean = build().query_batch(qs)
+        ft = FaultTolerance(max_replays=2)
+        armed = {{"live": True}}
+        def inject(g):
+            if g == 1 and armed["live"]:
+                armed["live"] = False
+                raise ChipFailure(2)
+        ft.failure_injector = inject
+        svc = build(fault_tolerance=ft)
+        rep = svc.query_batch(qs)
+        assert results_bit_identical(clean.results, rep.results)
+        assert svc.n_chips == 2 and "rescale@4->2" in ft.timeline
+        print("CHAOS_OK")
+    """)
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, timeout=600)
+    assert "CHAOS_OK" in r.stdout, r.stderr[-2000:]

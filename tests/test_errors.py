@@ -1,0 +1,341 @@
+"""TRA error model + mitigated execution (core.errors, service reliability).
+
+The reliability contract: rate-0 injection is bit-identical to the clean
+interpreter oracle on every backend; a fixed PRNG key draws the same fault
+pattern on the scan VM and the Pallas megakernel; majority vote corrects
+single-replica faults; the service's vote/ecc modes stay bit-identical to
+an unmitigated service while charging measurable overhead. Randomized
+cross-checking lives in test_property_errors.py.
+"""
+import numpy as np
+import pytest
+import jax
+
+from repro.core import compiler, engine, errors, lowering
+from repro.core.arith_compiler import ripple_add_program
+from repro.core.errors import (ReliabilityConfig, TRAErrorModel, error_planes,
+                               execute_ecc, execute_injected, execute_voted,
+                               single_fault_planes)
+from repro.service import Catalog, CatalogError, Query, QueryService
+
+W = 8
+
+
+def _data(rows, seed=0, words=W):
+    rng = np.random.default_rng(seed)
+    return {r: rng.integers(0, 1 << 32, words, dtype=np.uint32)
+            for r in rows}
+
+
+PROGRAMS = {
+    "and": (compiler.and_program("D0", "D1", "D2"), ("D0", "D1"), ["D2"]),
+    "xor": (compiler.xor_program("D0", "D1", "D2"), ("D0", "D1"), ["D2"]),
+    "maj3": (compiler.maj3_program("D0", "D1", "D2", "D3"),
+             ("D0", "D1", "D2"), ["D3"]),
+    "not": (compiler.not_program("D0", "D1"), ("D0",), ["D1"]),
+}
+
+
+# ---------------------------------------------------------------------------
+# the model itself
+# ---------------------------------------------------------------------------
+
+
+def test_model_validates_p_flip_and_pattern_scale():
+    with pytest.raises(ValueError):
+        TRAErrorModel(p_flip=1.5)
+    with pytest.raises(ValueError):
+        TRAErrorModel(p_flip=-0.1)
+    with pytest.raises(ValueError):
+        TRAErrorModel(pattern_scale=(1.0, 1.0))
+
+
+def test_flip_probs_zero_on_non_tra_commands():
+    lp = lowering.lower(PROGRAMS["xor"][0])
+    model = TRAErrorModel(p_flip=1e-2)
+    probs = model.flip_probs(lp.table)
+    assert probs.shape == (lp.n_cmds, errors.N_PATTERNS)
+    tra = (np.asarray(lp.table)[:, 0] & lowering.KIND_TRA) != 0
+    assert (probs[~tra] == 0.0).all()
+    assert (probs[tra] > 0.0).all()
+
+
+def test_flip_probs_pattern_scaling_and_temperature():
+    lp = lowering.lower(PROGRAMS["maj3"][0])
+    tra = (np.asarray(lp.table)[:, 0] & lowering.KIND_TRA) != 0
+    cold = TRAErrorModel(p_flip=1e-3).flip_probs(lp.table)[tra]
+    # mixed patterns (1/2 charged) fail more than unanimous (0/3)
+    assert (cold[:, 1] > cold[:, 0]).all()
+    assert (cold[:, 2] > cold[:, 3]).all()
+    hot = TRAErrorModel(p_flip=1e-3,
+                        temperature_c=errors.NOMINAL_C + 20
+                        ).flip_probs(lp.table)[tra]
+    assert (hot > cold).all()
+
+
+def test_row_factors_deterministic_and_shared_by_row_triple():
+    lp = lowering.lower(PROGRAMS["maj3"][0])
+    model = TRAErrorModel()
+    f1, f2 = model.row_factors(lp.table), model.row_factors(lp.table)
+    np.testing.assert_array_equal(f1, f2)
+    src = np.asarray(lp.table)[:, 1:4]
+    for i in range(len(src)):
+        for j in range(i):
+            if (src[i] == src[j]).all():
+                assert f1[i] == f1[j]
+
+
+def test_error_planes_rate0_exact_zeros_and_shapes():
+    lp = lowering.lower(PROGRAMS["xor"][0])
+    planes = error_planes(lp.table, jax.random.PRNGKey(0), (3,), W,
+                          TRAErrorModel(p_flip=0.0))
+    assert planes.shape == (lp.n_cmds, 4, 3, W)
+    assert not np.asarray(planes).any()
+
+
+def test_error_planes_seeded_and_reproducible():
+    lp = lowering.lower(PROGRAMS["maj3"][0])
+    model = TRAErrorModel(p_flip=0.05)
+    a = error_planes(lp.table, jax.random.PRNGKey(1), (), W, model)
+    b = error_planes(lp.table, jax.random.PRNGKey(1), (), W, model)
+    c = error_planes(lp.table, jax.random.PRNGKey(2), (), W, model)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert np.asarray(a).any()
+    assert not np.array_equal(np.asarray(a), np.asarray(c))
+    # non-TRA command planes are exactly zero whatever the key draws
+    tra = (np.asarray(lp.table)[:, 0] & lowering.KIND_TRA) != 0
+    assert not np.asarray(a)[~tra].any()
+
+
+# ---------------------------------------------------------------------------
+# rate-0 bit-identity: injection machinery must be invisible when silent
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", ["scan", "pallas"])
+@pytest.mark.parametrize("name", sorted(PROGRAMS))
+def test_rate0_injection_matches_interpreter(name, backend):
+    program, inputs, outputs = PROGRAMS[name]
+    data = _data(inputs, seed=hash(name) % 1000)
+    ref = engine.execute(program, data, outputs=outputs, lowered=False)
+    lp = lowering.lower(program)
+    got = execute_injected(lp, data, outputs=outputs, backend=backend,
+                           model=TRAErrorModel(p_flip=0.0))
+    for o in outputs:
+        np.testing.assert_array_equal(np.asarray(ref[o]), np.asarray(got[o]),
+                                      err_msg=o)
+
+
+def test_rate0_injection_arith_program_batched():
+    res = ripple_add_program(4)
+    rows = [f"X{j}" for j in range(4)] + [f"Y{j}" for j in range(4)]
+    data = {r: np.stack([v, ~v])
+            for r, v in _data(rows, seed=4).items()}
+    ref = engine.execute(res.program, data, outputs=res.outputs,
+                         lowered=False)
+    lp = lowering.lower(res.program)
+    for backend in ("scan", "pallas"):
+        got = execute_injected(lp, data, outputs=list(res.outputs),
+                               backend=backend,
+                               model=TRAErrorModel(p_flip=0.0))
+        for o in res.outputs:
+            np.testing.assert_array_equal(np.asarray(ref[o]),
+                                          np.asarray(got[o]), err_msg=o)
+
+
+# ---------------------------------------------------------------------------
+# cross-backend fault determinism
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", ["maj3", "xor"])
+def test_fixed_key_same_faults_scan_vs_megakernel(name):
+    program, inputs, outputs = PROGRAMS[name]
+    data = _data(inputs, seed=11)
+    lp = lowering.lower(program)
+    model = TRAErrorModel(p_flip=0.03)
+    key = jax.random.PRNGKey(42)
+    a = execute_injected(lp, data, outputs=outputs, backend="scan",
+                         model=model, key=key)
+    b = execute_injected(lp, data, outputs=outputs, backend="pallas",
+                         model=model, key=key)
+    clean = engine.execute(program, data, outputs=outputs, lowered=False)
+    corrupted = False
+    for o in outputs:
+        np.testing.assert_array_equal(np.asarray(a[o]), np.asarray(b[o]),
+                                      err_msg=o)
+        corrupted |= not np.array_equal(np.asarray(a[o]),
+                                        np.asarray(clean[o]))
+    assert corrupted  # at 3% per bit the faults must actually land
+
+
+# ---------------------------------------------------------------------------
+# mitigation
+# ---------------------------------------------------------------------------
+
+
+def test_single_fault_planes_only_tra_commands_flip():
+    lp = lowering.lower(PROGRAMS["xor"][0])
+    table = np.asarray(lp.table)
+    non_tra = int(np.flatnonzero((table[:, 0] & lowering.KIND_TRA) == 0)[0])
+    planes = single_fault_planes(lp.table, (), W, non_tra, 0, 0)
+    assert not np.asarray(planes).any()
+    tra = int(np.flatnonzero((table[:, 0] & lowering.KIND_TRA) != 0)[0])
+    planes = np.asarray(single_fault_planes(lp.table, (), W, tra, 2, 5)).copy()
+    assert planes[tra, :, 2].tolist() == [32] * 4
+    planes[tra, :, 2] = 0
+    assert not planes.any()
+
+
+def test_vote_corrects_single_replica_fault():
+    program, inputs, outputs = PROGRAMS["maj3"]
+    data = _data(inputs, seed=3)
+    lp = lowering.lower(program)
+    clean = engine.execute(program, data, outputs=outputs, lowered=False)
+    tra = int(np.flatnonzero(
+        (np.asarray(lp.table)[:, 0] & lowering.KIND_TRA) != 0)[0])
+    fault = single_fault_planes(lp.table, (), W, tra, 1, 7)
+    faulty = lowering.execute_lowered(lp, data, outputs=outputs,
+                                      errors=fault)
+    assert not np.array_equal(np.asarray(faulty[outputs[0]]),
+                              np.asarray(clean[outputs[0]]))
+    voted = errors.vote_outputs(
+        [faulty, clean, clean], outputs)
+    np.testing.assert_array_equal(np.asarray(voted[outputs[0]]),
+                                  np.asarray(clean[outputs[0]]))
+
+
+def test_execute_voted_rate0_identity_and_validation():
+    program, inputs, outputs = PROGRAMS["xor"]
+    data = _data(inputs, seed=5)
+    lp = lowering.lower(program)
+    ref = engine.execute(program, data, outputs=outputs, lowered=False)
+    out = execute_voted(lp, data, outputs, model=TRAErrorModel(p_flip=0.0))
+    np.testing.assert_array_equal(np.asarray(out["D2"]),
+                                  np.asarray(ref["D2"]))
+    for k in (1, 2, 4):
+        with pytest.raises(ValueError):
+            execute_voted(lp, data, outputs, k=k)
+
+
+def test_execute_ecc_fast_path_and_tie_break():
+    program, inputs, outputs = PROGRAMS["maj3"]
+    data = _data(inputs, seed=6)
+    lp = lowering.lower(program)
+    ref = engine.execute(program, data, outputs=outputs, lowered=False)
+    out, n = execute_ecc(lp, data, outputs, model=TRAErrorModel(p_flip=0.0))
+    assert n == 2   # fault-free replicas agree: no third run
+    np.testing.assert_array_equal(np.asarray(out["D3"]),
+                                  np.asarray(ref["D3"]))
+    out, n = execute_ecc(lp, data, outputs,
+                         model=TRAErrorModel(p_flip=0.2),
+                         key=jax.random.PRNGKey(9))
+    assert n == 3   # heavy faults: replicas disagree, tie-break runs
+
+
+def test_reliability_config_validation():
+    for mode in errors.RELIABILITY_MODES:
+        ReliabilityConfig(mode=mode)
+    with pytest.raises(ValueError):
+        ReliabilityConfig(mode="retry")
+    with pytest.raises(ValueError):
+        ReliabilityConfig(k=2)
+
+
+# ---------------------------------------------------------------------------
+# catalog parity planes (the ECC-at-rest half)
+# ---------------------------------------------------------------------------
+
+
+def _catalog(seed=0):
+    rng = np.random.default_rng(seed)
+    cat = Catalog()
+    for i, name in enumerate(["u", "v", "w"]):
+        cat.register_bits(name, rng.integers(0, 2, 100).astype(bool),
+                          group="g0" if i < 2 else None)
+    return cat
+
+
+def test_catalog_parity_maintained_incrementally():
+    cat = _catalog()
+    expect = np.asarray(cat.get("u").words) ^ np.asarray(cat.get("v").words)
+    np.testing.assert_array_equal(np.asarray(cat.parity_plane("g0")), expect)
+    np.testing.assert_array_equal(np.asarray(cat.parity_plane(None)),
+                                  np.asarray(cat.get("w").words))
+    assert cat.verify_parity()
+    with pytest.raises(CatalogError):
+        cat.parity_plane("nope")
+
+
+def test_catalog_parity_detects_corruption():
+    cat = _catalog()
+    entry = cat.get("v")
+    entry.words = entry.words ^ np.uint32(1 << 9)   # flip one stored bit
+    assert not cat.verify_parity()
+
+
+# ---------------------------------------------------------------------------
+# service reliability modes
+# ---------------------------------------------------------------------------
+
+QUERIES = ["a & b", "a | c & ~d", "(a ^ b) | (c & d)"]
+
+
+def _service(**kw):
+    rng = np.random.default_rng(7)
+    svc = QueryService(n_banks=4, **kw)
+    for n in "abcd":
+        svc.register_bits(n, rng.integers(0, 2, 300).astype(bool),
+                          group="t0")
+    return svc
+
+
+@pytest.fixture(scope="module")
+def baseline():
+    svc = _service()
+    return svc, [svc.query(q).value for q in QUERIES]
+
+
+@pytest.mark.parametrize("mode", ["vote", "ecc"])
+def test_service_mitigated_modes_bit_identical_at_rate0(mode, baseline):
+    _, ref = baseline
+    svc = _service(reliability=ReliabilityConfig(
+        mode=mode, model=TRAErrorModel(p_flip=0.0)))
+    assert [svc.query(q).value for q in QUERIES] == ref
+    if mode == "ecc":
+        assert svc.scheduler.parity_checks == len(QUERIES)
+        assert svc.stats()["parity_checks"] == len(QUERIES)
+
+
+def test_service_vote_corrects_low_rate_faults(baseline):
+    _, ref = baseline
+    svc = _service(reliability=ReliabilityConfig(
+        mode="vote", model=TRAErrorModel(p_flip=1e-4), seed=7))
+    assert [svc.query(q).value for q in QUERIES] == ref
+
+
+def test_service_vote_charges_latency_and_energy_overhead(baseline):
+    base, _ = baseline
+    svc = _service(reliability=ReliabilityConfig(
+        mode="vote", model=TRAErrorModel(p_flip=0.0)))
+    for q in QUERIES:
+        clean, voted = base.query(q), svc.query(q)
+        assert voted.latency_ns > clean.latency_ns
+        assert voted.energy_nj == pytest.approx(3 * clean.energy_nj)
+
+
+def test_service_ecc_detects_corrupted_catalog():
+    svc = _service(reliability=ReliabilityConfig(
+        mode="ecc", model=TRAErrorModel(p_flip=0.0)))
+    entry = svc.catalog.get("b")
+    entry.words = entry.words ^ np.uint32(1)
+    with pytest.raises(RuntimeError, match="parity"):
+        svc.query("a & b")
+
+
+def test_reliability_mode_rejected_with_cluster():
+    from repro.service import Scheduler
+
+    with pytest.raises(ValueError, match="chip granularity"):
+        Scheduler(catalog=Catalog(), cluster=object(),
+                  reliability=ReliabilityConfig(mode="vote"))

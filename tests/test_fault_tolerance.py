@@ -1,0 +1,221 @@
+"""Fault-tolerance internals: straggler EMA, checkpoint damage recovery,
+and the async-save race `ResilientRunner._restore` must never lose.
+
+The serving-path integration (scheduler replay, chip-kill rescale,
+serve_stream) lives in tests/test_chaos.py; this file pins the unit-level
+contracts those flows stand on.
+"""
+import json
+import os
+import shutil
+import tempfile
+import time
+
+import numpy as np
+import pytest
+
+from repro.checkpoint.checkpointer import Checkpointer
+from repro.dist.fault_tolerance import (ChipFailure, FaultTolerance,
+                                        ResilientRunner, SimulatedFailure,
+                                        StragglerMonitor)
+
+
+# ---------------------------------------------------------------------------
+# StragglerMonitor
+# ---------------------------------------------------------------------------
+
+
+def test_straggler_warmup_boundary_exactly_n_equals_warmup():
+    # the (n == warmup)-th observation still only seeds the EMA: flagging
+    # starts strictly AFTER warmup observations
+    m = StragglerMonitor(alpha=0.5, threshold=2.0, warmup=3)
+    assert not m.observe(0, 1.0)
+    assert not m.observe(1, 100.0)      # n == 2 <= warmup: never flagged
+    assert not m.observe(2, 100.0)      # n == 3 == warmup: still seeding
+    assert m.observe(3, 10 * m.ema)     # n == 4 > warmup: flagged
+
+
+def test_straggler_outliers_do_not_update_ema():
+    m = StragglerMonitor(alpha=0.5, threshold=2.0, warmup=1)
+    m.observe(0, 1.0)
+    m.observe(1, 1.0)
+    ema = m.ema
+    assert m.observe(2, 50.0)           # outlier flagged...
+    assert m.ema == ema                 # ...and the EMA is untouched
+    assert m.observe(3, 50.0)           # so the next slow step flags too
+
+
+def test_straggler_alpha_one_tracks_last_observation():
+    m = StragglerMonitor(alpha=1.0, threshold=3.0, warmup=1)
+    m.observe(0, 2.0)
+    assert not m.observe(1, 4.0)        # 4 < 3*2: updates, ema := 4.0
+    assert m.ema == 4.0
+    assert not m.observe(2, 11.9)       # just under 3*4
+    assert m.ema == 11.9
+
+
+def test_straggler_first_observation_never_flags():
+    m = StragglerMonitor(warmup=0)
+    assert not m.observe(0, 1e9)        # no EMA yet: nothing to compare
+
+
+# ---------------------------------------------------------------------------
+# Checkpointer damage fallback
+# ---------------------------------------------------------------------------
+
+
+def _save_steps(d, steps):
+    ck = Checkpointer(d, keep=len(steps) + 1, async_save=False)
+    for s in steps:
+        ck.save(s, {"x": np.full(4, s, np.int64)})
+    return ck
+
+
+def _corrupt(d, step, how):
+    path = os.path.join(d, f"step_{step:08d}")
+    if how == "truncate_leaf":
+        leaf = os.path.join(path, "leaf_00000.bin")
+        with open(leaf, "wb") as f:
+            f.write(b"\x00")            # wrong byte count: reshape fails
+    elif how == "missing_leaf":
+        os.remove(os.path.join(path, "leaf_00000.bin"))
+    elif how == "bad_manifest":
+        with open(os.path.join(path, "manifest.json"), "w") as f:
+            f.write("{")
+
+
+@pytest.mark.parametrize("how", ["truncate_leaf", "missing_leaf",
+                                 "bad_manifest"])
+def test_restore_falls_back_to_next_older_intact_step(how):
+    with tempfile.TemporaryDirectory() as d:
+        ck = _save_steps(d, [1, 2])
+        _corrupt(d, 2, how)
+        step, tree, _ = ck.restore({"x": np.zeros(4, np.int64)})
+        assert step == 1
+        assert int(np.asarray(tree["x"])[0]) == 1
+
+
+def test_restore_explicit_step_still_raises_on_damage():
+    with tempfile.TemporaryDirectory() as d:
+        ck = _save_steps(d, [1, 2])
+        _corrupt(d, 2, "truncate_leaf")
+        with pytest.raises((OSError, ValueError, KeyError)):
+            ck.restore({"x": np.zeros(4, np.int64)}, step=2)
+
+
+def test_restore_all_damaged_raises_filenotfound():
+    with tempfile.TemporaryDirectory() as d:
+        ck = _save_steps(d, [1])
+        _corrupt(d, 1, "missing_leaf")
+        with pytest.raises(FileNotFoundError):
+            ck.restore({"x": np.zeros(4, np.int64)})
+
+
+def test_all_steps_skips_tmp_dirs():
+    with tempfile.TemporaryDirectory() as d:
+        ck = _save_steps(d, [1])
+        # a crash mid-save leaves a .tmp dir with a complete-looking
+        # manifest; it must never be listed as a restorable step
+        tmp = os.path.join(d, "step_00000002.tmp-deadbeef")
+        shutil.copytree(os.path.join(d, "step_00000001"), tmp)
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump({"step": 2, "extra": {}, "leaves": []}, f)
+        assert ck.all_steps() == [1]
+        assert ck.latest_step() == 1
+
+
+# ---------------------------------------------------------------------------
+# ResilientRunner vs the async save race
+# ---------------------------------------------------------------------------
+
+
+class _SlowCheckpointer(Checkpointer):
+    """Async writes stalled long enough to expose restore/save races."""
+
+    def __init__(self, directory, delay=0.15):
+        super().__init__(directory, async_save=True)
+        self.delay = delay
+
+    def _write(self, step, host_tree, extra):
+        time.sleep(self.delay)
+        super()._write(step, host_tree, extra)
+
+
+def _counting_step_fn(log):
+    def step_fn(state, step, batch):
+        log.append(step)
+        return {"n": np.int64(int(state["n"]) + 1)}, {}
+    return step_fn
+
+
+def test_restore_after_failure_waits_for_inflight_save():
+    # regression: a failure right after an async save() used to race the
+    # background writer — latest_step() saw nothing (or a mid-rename dir)
+    # and the runner replayed from scratch instead of the new checkpoint
+    with tempfile.TemporaryDirectory() as d:
+        log = []
+        ck = _SlowCheckpointer(d)
+        runner = ResilientRunner(_counting_step_fn(log), lambda s: None,
+                                 ck, ckpt_every=2, max_restores=4)
+        fails = {"armed": True}
+
+        def inject(step):
+            # fire immediately after the step-2 checkpoint is *scheduled*
+            if step == 2 and fails["armed"]:
+                fails["armed"] = False
+                raise SimulatedFailure("crash during in-flight save")
+
+        state, rep = runner.run({"n": np.int64(0)}, 4,
+                                failure_injector=inject)
+        assert int(state["n"]) == 4
+        assert rep.failures == 1
+        # the replay resumed from the just-written step-2 checkpoint, NOT
+        # from the start: steps 0/1 ran exactly once
+        assert "restore@2" in rep.timeline
+        assert log == [0, 1, 2, 3]
+
+
+def test_fresh_runner_resumes_over_partially_written_dir():
+    # a crash mid-save leaves a .tmp dir behind; a fresh runner pointed at
+    # the directory must resume from the newest *intact* step and ignore it
+    with tempfile.TemporaryDirectory() as d:
+        log = []
+        ck = Checkpointer(d, async_save=False)
+        runner = ResilientRunner(_counting_step_fn(log), lambda s: None,
+                                 ck, ckpt_every=2)
+        runner.run({"n": np.int64(0)}, 2)           # leaves ckpt@2
+        tmp = os.path.join(d, "step_00000004.tmp-cafe")
+        os.makedirs(tmp)
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump({"step": 4, "extra": {}, "leaves": []}, f)
+        # plus a damaged "complete" step newer than the intact one
+        shutil.copytree(os.path.join(d, "step_00000002"),
+                        os.path.join(d, "step_00000003"))
+        os.remove(os.path.join(d, "step_00000003", "leaf_00000.bin"))
+        log2 = []
+        runner2 = ResilientRunner(_counting_step_fn(log2), lambda s: None,
+                                  Checkpointer(d), ckpt_every=2)
+        state, rep = runner2.run({"n": np.int64(0)}, 4)
+        assert rep.timeline[0] == "resume@2"
+        assert log2 == [2, 3]                       # prefix skipped
+        assert int(state["n"]) == 4
+
+
+# ---------------------------------------------------------------------------
+# policy objects
+# ---------------------------------------------------------------------------
+
+
+def test_chip_failure_records_chip_and_is_simulated():
+    e = ChipFailure(3)
+    assert e.chip == 3 and "chip 3" in str(e)
+    assert isinstance(e, SimulatedFailure)
+    assert str(ChipFailure(1, "custom")) == "custom"
+
+
+def test_fault_tolerance_defaults():
+    ft = FaultTolerance()
+    assert ft.max_replays == 2
+    assert ft.timeline == [] and ft.stragglers == []
+    assert ft.failures == ft.replays == ft.groups_dispatched == 0
+    assert isinstance(ft.monitor, StragglerMonitor)

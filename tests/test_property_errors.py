@@ -1,0 +1,176 @@
+"""Property tests: TRA fault injection and mitigation on random programs.
+
+Three invariants over randomized programs/data/fault sites:
+
+  * rate-0 injection is bit-identical to the micro-op interpreter oracle on
+    every backend — the injection machinery must be invisible when silent;
+  * a fixed PRNG key draws the *same* fault pattern on the scan VM and the
+    Pallas megakernel — cross-backend physical determinism;
+  * majority vote corrects ANY fault confined to a single replica — any
+    command, any word, any bit, any number of voters' worth of margin.
+
+Shrunk counterexamples from development are pinned as explicit regressions
+at the bottom.
+"""
+import numpy as np
+import jax
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from _hypothesis_fallback import given, settings, strategies as st
+
+from repro.core import engine, errors, lowering
+from repro.core.errors import TRAErrorModel
+
+from test_property_lowering import _random_program
+
+W = 4
+N_ROWS = 8
+
+
+def _case(seed):
+    """Random (program, data, lowered) with at least one TRA command."""
+    rng = np.random.default_rng(seed)
+    while True:
+        program = _random_program(rng)
+        lp = lowering.lower(program)
+        if (np.asarray(lp.table)[:, 0] & lowering.KIND_TRA).any():
+            break
+    data = {f"D{i}": rng.integers(0, 1 << 32, W, dtype=np.uint32)
+            for i in range(N_ROWS)}
+    return program, data, lp
+
+
+def _outputs(lp):
+    return [r for r in lp.writes if r != lowering.SINK]
+
+
+@given(st.integers(0, 2**31 - 1), st.sampled_from(["scan", "pallas"]))
+@settings(max_examples=20, deadline=None)
+def test_rate0_injection_is_bit_identical_to_oracle(seed, backend):
+    program, data, lp = _case(seed)
+    outs = _outputs(lp)
+    if not outs:
+        return
+    ref = engine.execute(program, data, outputs=outs, lowered=False)
+    got = errors.execute_injected(lp, data, outputs=outs, backend=backend,
+                                  model=TRAErrorModel(p_flip=0.0),
+                                  key=jax.random.PRNGKey(seed & 0xFFFF))
+    for k in outs:
+        np.testing.assert_array_equal(np.asarray(ref[k]),
+                                      np.asarray(got[k]), err_msg=k)
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=10, deadline=None)
+def test_fixed_key_identical_faults_across_backends(seed):
+    program, data, lp = _case(seed)
+    outs = _outputs(lp)
+    if not outs:
+        return
+    model = TRAErrorModel(p_flip=0.05)
+    key = jax.random.PRNGKey(seed & 0xFFFF)
+    scan = errors.execute_injected(lp, data, outputs=outs, backend="scan",
+                                   model=model, key=key)
+    mega = errors.execute_injected(lp, data, outputs=outs, backend="pallas",
+                                   model=model, key=key)
+    for k in outs:
+        np.testing.assert_array_equal(np.asarray(scan[k]),
+                                      np.asarray(mega[k]), err_msg=k)
+
+
+@given(st.integers(0, 2**31 - 1), st.data())
+@settings(max_examples=20, deadline=None)
+def test_vote_corrects_any_single_replica_fault(seed, data_st):
+    program, data, lp = _case(seed)
+    outs = _outputs(lp)
+    if not outs:
+        return
+    clean = engine.execute(program, data, outputs=outs, lowered=False)
+    cmd = data_st.draw(st.integers(0, lp.n_cmds - 1))
+    word = data_st.draw(st.integers(0, W - 1))
+    bit = data_st.draw(st.integers(0, 31))
+    fault = errors.single_fault_planes(lp.table, (), W, cmd, word, bit)
+    faulty = lowering.execute_lowered(lp, data, outputs=outs, errors=fault)
+    # the fault may or may not reach an output (later commands can
+    # overwrite the poisoned row) — either way the vote must erase it
+    voted = errors.vote_outputs([faulty, clean, clean], outs)
+    for k in outs:
+        np.testing.assert_array_equal(np.asarray(voted[k]),
+                                      np.asarray(clean[k]), err_msg=k)
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=8, deadline=None)
+def test_execute_voted_with_distinct_draws_still_matches_when_rare(seed):
+    # one expected flip in ~3e3 words of replica output: overwhelmingly a
+    # single-replica event, which k=3 voting corrects exactly
+    program, data, lp = _case(seed)
+    outs = _outputs(lp)
+    if not outs:
+        return
+    ref = engine.execute(program, data, outputs=outs, lowered=False)
+    out = errors.execute_voted(lp, data, outs,
+                               model=TRAErrorModel(p_flip=1e-5),
+                               key=jax.random.PRNGKey(seed & 0xFFFF))
+    for k in outs:
+        np.testing.assert_array_equal(np.asarray(ref[k]),
+                                      np.asarray(out[k]), err_msg=k)
+
+
+# ---------------------------------------------------------------------------
+# pinned shrink regressions
+# ---------------------------------------------------------------------------
+
+
+def test_regression_fault_on_non_tra_command_is_silent():
+    # shrunk case: injecting into a RowClone copy (kind bit0 == 0) must be
+    # a no-op, not corrupt the copied row
+    from repro.core import compiler
+
+    program = compiler.copy_program("D0", "D1")
+    lp = lowering.lower(program)
+    data = {"D0": np.arange(W, dtype=np.uint32)}
+    fault = errors.single_fault_planes(lp.table, (), W, 0, 0, 0)
+    out = lowering.execute_lowered(lp, data, outputs=["D1"], errors=fault)
+    np.testing.assert_array_equal(np.asarray(out["D1"]), data["D0"])
+
+
+def test_regression_batched_fault_planes_broadcast():
+    # shrunk case: a (n_cmds, 4, words) mask against (2, words) batched
+    # data must broadcast the same fault into every batch slice on BOTH
+    # backends (the megakernel flattens batch into the vmap axis)
+    from repro.core import compiler
+
+    program = compiler.maj3_program("D0", "D1", "D2", "D3")
+    lp = lowering.lower(program)
+    rng = np.random.default_rng(0)
+    data = {f"D{i}": rng.integers(0, 1 << 32, (2, W), dtype=np.uint32)
+            for i in range(3)}
+    tra = int(np.flatnonzero(
+        (np.asarray(lp.table)[:, 0] & lowering.KIND_TRA) != 0)[0])
+    fault = errors.single_fault_planes(lp.table, (), W, tra, 1, 3)
+    scan = lowering.execute_lowered(lp, data, outputs=["D3"], errors=fault)
+    mega = lowering.execute_lowered(lp, data, outputs=["D3"], errors=fault,
+                                    backend="pallas")
+    clean = engine.execute(program, data, outputs=["D3"], lowered=False)
+    np.testing.assert_array_equal(np.asarray(scan["D3"]),
+                                  np.asarray(mega["D3"]))
+    diff = np.asarray(scan["D3"]) ^ np.asarray(clean["D3"])
+    assert (diff[0] == diff[1]).all()   # same fault in every batch slice
+    assert diff.any()
+
+
+def test_regression_key_chain_distinct_replicas():
+    # shrunk case: execute_voted replicas must fold distinct sub-keys —
+    # identical draws would make the vote powerless against real faults
+    program, data, lp = _case(123)
+    key = jax.random.PRNGKey(5)
+    model = TRAErrorModel(p_flip=0.05)
+    batch, row_words = errors._plane_batch(data)
+    planes = [errors.error_planes(lp.table, jax.random.fold_in(key, r),
+                                  batch, row_words, model)
+              for r in range(3)]
+    assert not np.array_equal(np.asarray(planes[0]), np.asarray(planes[1]))
+    assert not np.array_equal(np.asarray(planes[1]), np.asarray(planes[2]))
