@@ -1,0 +1,83 @@
+"""Telemetry overhead benchmark: the serving hot loop with the sink off/on.
+
+Replays the serve_qps multi-tenant stream (`repro.service.workload`)
+through three identically-configured services that differ only in their
+`repro.obs.Telemetry` sink:
+
+  * ``serve_disabled`` — `NULL_TELEMETRY`: tracing and metering both off,
+    the zero-allocation path every instrumentation site must preserve.
+    This is the row `benchmarks/perf_gate.py` holds to a **1.03x** fail
+    ratio (vs the committed same-host baseline): the telemetry layer may
+    not cost the disabled hot loop more than 3%.
+  * ``serve_default`` — the `QueryService` default (metrics on, tracing
+    off): counter adds on the dispatch loop, no span machinery.
+  * ``serve_enabled`` — full `Telemetry()`: span tree + modeled timeline
+    per batch, tracer reset between iterations so event lists don't grow
+    across the measurement.
+
+The ``overhead`` row reports the in-run steady-state ratios (same host,
+back-to-back, so they are comparable in a way cross-host wall numbers are
+not). Writes BENCH_obs_overhead.json.
+"""
+from __future__ import annotations
+
+from benchmarks.common import (Row, emit, measure_wall, smoke_mode,
+                               write_bench_json)
+from repro.obs import NULL_TELEMETRY, Telemetry
+from repro.service import WorkloadSpec, build_service, query_stream
+
+N_BANKS = 8
+
+
+def _serve_wall(spec: WorkloadSpec, telemetry, reset_trace: bool):
+    svc = build_service(spec, n_banks=N_BANKS, telemetry=telemetry)
+    queries = query_stream(spec, svc)
+
+    def step():
+        if reset_trace:
+            svc.telemetry.reset_trace()
+        return svc.query_batch(queries).makespan_ns
+
+    return measure_wall(step)
+
+
+def run(spec: WorkloadSpec = WorkloadSpec()) -> list[Row]:
+    if smoke_mode():
+        spec = WorkloadSpec(n_tenants=2, n_weeks=2, domain_bits=1 << 10,
+                            n_queries=64, seed=spec.seed)
+    stream_bytes = spec.n_queries * spec.domain_bits // 8
+    size = {"bytes": stream_bytes, "n_queries": spec.n_queries,
+            "n_banks": N_BANKS}
+
+    disabled = _serve_wall(spec, NULL_TELEMETRY, reset_trace=False)
+    default = _serve_wall(spec, None, reset_trace=False)
+    enabled = _serve_wall(spec, Telemetry(), reset_trace=True)
+
+    default_ratio = default["wall_steady_us"] / disabled["wall_steady_us"]
+    enabled_ratio = enabled["wall_steady_us"] / disabled["wall_steady_us"]
+
+    rows: list[Row] = []
+    jrows: list[dict] = []
+    for name, wall in (("serve_disabled", disabled),
+                       ("serve_default", default),
+                       ("serve_enabled", enabled)):
+        rows.append((
+            f"obs_overhead/{name}", wall["wall_steady_us"],
+            f"first_us={wall['wall_first_us']:.0f} "
+            f"steady_us={wall['wall_steady_us']:.0f} "
+            f"n_queries={spec.n_queries}"))
+        jrows.append({"name": f"obs_overhead/{name}", **size, **wall})
+    rows.append((
+        "obs_overhead/overhead", 0.0,
+        f"default_ratio={default_ratio:.3f} "
+        f"enabled_ratio={enabled_ratio:.3f}"))
+    jrows.append({"name": "obs_overhead/overhead", **size,
+                  "default_ratio": default_ratio,
+                  "enabled_ratio": enabled_ratio})
+
+    write_bench_json("obs_overhead", jrows)
+    return rows
+
+
+if __name__ == "__main__":
+    emit(run(), header=True)

@@ -22,6 +22,7 @@ SECTIONS = [
     "vm_dispatch",
     "cluster_scaling",
     "reliability",
+    "obs_overhead",
     "extra_apps",
     "perf_summary",
 ]

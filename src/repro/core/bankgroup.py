@@ -33,6 +33,7 @@ from repro.core import addressing
 from repro.core.commands import Program
 from repro.core.engine import RowState, Subarray
 from repro.core.timing import DDR3_1600, DramTiming, program_latency_ns
+from repro.obs.telemetry import get_telemetry
 
 
 def shard_words(x: jax.Array, n_banks: int) -> jax.Array:
@@ -183,7 +184,23 @@ def execute_banked(program: Program, data: RowState, n_banks: int,
     vmapped interpreter with ``lowered=False``), and the requested output
     rows come back reassembled to their original width. Bit-identical to
     `engine.execute(program, data)` for every program and backend.
+
+    Wall-span-traced when a tracing telemetry is installed process-wide
+    (`repro.obs.set_telemetry`); the default no-op sink costs one branch.
     """
+    tel = get_telemetry()
+    if tel.tracing:
+        with tel.tracer.span("bankgroup.execute", n_banks=n_banks,
+                             n_aaps=program.n_aap, backend=backend,
+                             lowered=lowered):
+            return _execute_banked(program, data, n_banks, outputs,
+                                   lowered, backend)
+    return _execute_banked(program, data, n_banks, outputs, lowered, backend)
+
+
+def _execute_banked(program: Program, data: RowState, n_banks: int,
+                    outputs: Optional[List[str]],
+                    lowered: bool, backend: str) -> RowState:
     n_words = next(iter(data.values())).shape[-1]
     sharded = {k: shard_words(jnp.asarray(v, jnp.uint32), n_banks)
                for k, v in data.items()}

@@ -49,6 +49,7 @@ from repro.core.commands import Program
 from repro.core.engine import BuddyError, RowState, _check_outputs
 from repro.core.timing import DDR3_1600, DramTiming
 from repro.dist.sharding import CLUSTER_RULES, resolve_spec
+from repro.obs.telemetry import get_telemetry
 from repro.ops.popcount import popcount_words
 
 CHIP_AXIS = "chip"
@@ -260,7 +261,22 @@ class ChipCluster:
         `shard_words`; returns the requested output rows **still sharded**
         (chip axis intact) — call `unshard_words` only when a flat vector
         is actually needed.
+
+        Wall-span-traced when a tracing telemetry is installed
+        process-wide (`repro.obs.set_telemetry`; the scheduler installs
+        one per dispatch window).
         """
+        tel = get_telemetry()
+        if tel.tracing:
+            with tel.tracer.span("cluster.run_lowered",
+                                 n_chips=self.n_chips, n_banks=self.n_banks,
+                                 n_cmds=lp.n_cmds, backend=backend):
+                return self._run_lowered(lp, sharded, outputs, backend)
+        return self._run_lowered(lp, sharded, outputs, backend)
+
+    def _run_lowered(self, lp: lowering.LoweredProgram, sharded: RowState,
+                     outputs: Sequence[str], backend: str
+                     ) -> Dict[str, jax.Array]:
         names = tuple(sorted(sharded))
         shapes = tuple(tuple(sharded[k].shape) for k in names)
         fn = self._sharded_vm(lp, names, tuple(outputs), shapes, backend,
@@ -278,7 +294,26 @@ class ChipCluster:
         never count); singleton axes are inserted so it broadcasts over
         any inner batch (query) axes. Returns ``(n_outputs,) + batch``
         int counts — the only values that cross the chip boundary.
+
+        Traced like `run_lowered`; the span also records the tree-psum
+        reduction depth (``psum_hops`` — recursive doubling over the chip
+        axis, `tree_psum`).
         """
+        tel = get_telemetry()
+        if tel.tracing:
+            hops = int(math.ceil(math.log2(self.n_chips))) \
+                if self.n_chips > 1 else 0
+            with tel.tracer.span("cluster.popcounts",
+                                 n_chips=self.n_chips, n_banks=self.n_banks,
+                                 n_cmds=lp.n_cmds, backend=backend,
+                                 psum_hops=hops):
+                return self._popcounts(lp, sharded, outputs, mask_shards,
+                                       backend)
+        return self._popcounts(lp, sharded, outputs, mask_shards, backend)
+
+    def _popcounts(self, lp: lowering.LoweredProgram, sharded: RowState,
+                   outputs: Sequence[str], mask_shards: jax.Array,
+                   backend: str) -> np.ndarray:
         names = tuple(sorted(sharded))
         shapes = tuple(tuple(sharded[k].shape) for k in names)
         sample_ndim = max(len(s) for s in shapes)

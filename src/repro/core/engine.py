@@ -21,6 +21,7 @@ import jax.numpy as jnp
 from repro.core import addressing
 from repro.core.addressing import D_WL, resolve
 from repro.core.commands import Activate, Precharge, Program
+from repro.obs.telemetry import get_telemetry
 
 RowState = Dict[str, jax.Array]
 
@@ -153,7 +154,25 @@ def execute(program: Program, data: RowState, row_words: Optional[int] = None,
     Pallas megakernel (``backend="pallas"``); ``lowered=False`` falls back
     to the micro-op interpreter above (the oracle — bit-identical by
     construction, re-traced per program).
+
+    Executions are wall-span-traced when a tracing `repro.obs.Telemetry`
+    is installed process-wide (`set_telemetry`; the scheduler does so per
+    dispatch) — the default is the no-op sink, costing one attribute load.
     """
+    tel = get_telemetry()
+    if tel.tracing:
+        with tel.tracer.span("engine.execute", n_aaps=program.n_aap,
+                             n_banks=n_banks, n_chips=n_chips,
+                             backend=backend, lowered=lowered):
+            return _execute(program, data, row_words, outputs, n_banks,
+                            n_chips, lowered, backend)
+    return _execute(program, data, row_words, outputs, n_banks, n_chips,
+                    lowered, backend)
+
+
+def _execute(program: Program, data: RowState, row_words: Optional[int],
+             outputs: Optional[List[str]], n_banks: int, n_chips: int,
+             lowered: bool, backend: str) -> RowState:
     if n_chips > 1:
         from repro.core import cluster
 

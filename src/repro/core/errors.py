@@ -212,15 +212,36 @@ def vote_outputs(replicas: Sequence[Dict[str, jax.Array]],
     return voted
 
 
+def _corrected_bits(replicas: Sequence[Dict[str, jax.Array]],
+                    voted: Dict[str, jax.Array],
+                    outputs: Sequence[str]) -> int:
+    """Total replica bits the vote overrode (faults the mitigation fixed)."""
+    total = 0
+    for o in outputs:
+        v = np.asarray(voted[o], np.uint32)
+        for r in replicas:
+            diff = np.asarray(r[o], np.uint32) ^ v
+            total += int(np.unpackbits(diff.view(np.uint8)).sum())
+    return total
+
+
 def execute_voted(lp: LoweredProgram, data: Dict[str, jax.Array],
                   outputs: List[str], backend: str = "scan",
                   model: Optional[TRAErrorModel] = None,
                   key: Optional[jax.Array] = None,
-                  k: int = 3) -> Dict[str, jax.Array]:
+                  k: int = 3,
+                  stats_out: Optional[Dict[str, int]] = None
+                  ) -> Dict[str, jax.Array]:
     """Majority-vote execution: k independent fault draws, bitwise vote.
 
     Corrects every fault confined to a single replica (any number of bit
     flips, any command) — the property the test suite pins down.
+
+    `stats_out` (optional dict) receives mitigation accounting when given:
+    ``replicas`` run and ``corrected_bits`` (replica output bits the vote
+    overrode). The counting pass costs a host-side diff per output plane,
+    so it only runs when a dict is supplied — telemetry-off dispatches pay
+    nothing.
     """
     if k < 3 or k % 2 == 0:
         raise ValueError(f"vote needs an odd k >= 3, got {k}")
@@ -232,19 +253,26 @@ def execute_voted(lp: LoweredProgram, data: Dict[str, jax.Array],
     out = vote_outputs(replicas, outputs)
     for name in replicas[0]:            # pass-through rows need no vote
         out.setdefault(name, replicas[0][name])
+    if stats_out is not None:
+        stats_out["replicas"] = k
+        stats_out["tiebreaks"] = 0
+        stats_out["corrected_bits"] = _corrected_bits(replicas, out, outputs)
     return out
 
 
 def execute_ecc(lp: LoweredProgram, data: Dict[str, jax.Array],
                 outputs: List[str], backend: str = "scan",
                 model: Optional[TRAErrorModel] = None,
-                key: Optional[jax.Array] = None
+                key: Optional[jax.Array] = None,
+                stats_out: Optional[Dict[str, int]] = None
                 ) -> Tuple[Dict[str, jax.Array], int]:
     """Dual-modular redundancy with a vote tie-break.
 
     Two replicas that agree are accepted (2x cost — the common case when
     faults are rare); a disagreement triggers a third replica and a
-    bitwise majority (3x). Returns (outputs, replicas_run).
+    bitwise majority (3x). Returns (outputs, replicas_run). `stats_out`
+    (optional dict) receives ``replicas``, ``tiebreaks`` (0 or 1) and
+    ``corrected_bits`` as in `execute_voted`.
     """
     if key is None:
         key = jax.random.PRNGKey(0)
@@ -254,12 +282,20 @@ def execute_ecc(lp: LoweredProgram, data: Dict[str, jax.Array],
                          model=model, key=jax.random.fold_in(key, 1))
     if all(np.array_equal(np.asarray(a[o]), np.asarray(b[o]))
            for o in outputs):
+        if stats_out is not None:
+            stats_out["replicas"] = 2
+            stats_out["tiebreaks"] = 0
+            stats_out["corrected_bits"] = 0
         return a, 2
     c = execute_injected(lp, data, outputs=outputs, backend=backend,
                          model=model, key=jax.random.fold_in(key, 2))
     out = vote_outputs([a, b, c], outputs)
     for name in a:
         out.setdefault(name, a[name])
+    if stats_out is not None:
+        stats_out["replicas"] = 3
+        stats_out["tiebreaks"] = 1
+        stats_out["corrected_bits"] = _corrected_bits([a, b, c], out, outputs)
     return out, 3
 
 

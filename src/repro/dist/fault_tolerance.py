@@ -57,12 +57,24 @@ class ResilientRunner:
 
     def __init__(self, step_fn: Callable, data_fn: Callable,
                  checkpointer: Checkpointer, ckpt_every: int = 100,
-                 max_restores: int = 16):
+                 max_restores: int = 16, telemetry=None):
         self.step_fn = step_fn
         self.data_fn = data_fn
         self.ck = checkpointer
         self.ckpt_every = ckpt_every
         self.max_restores = max_restores
+        if telemetry is None:
+            from repro.obs.telemetry import NULL_TELEMETRY
+
+            telemetry = NULL_TELEMETRY
+        self.telemetry = telemetry
+
+    def _event(self, counter: str, name: str, **args) -> None:
+        tel = self.telemetry
+        if tel.metering:
+            tel.metrics.counter(counter).inc()
+        if tel.tracing:
+            tel.tracer.instant(name, **args)
 
     def _restore(self, init_state, rep: RunReport, event: str
                  ) -> Tuple[int, Any]:
@@ -88,6 +100,7 @@ class ResilientRunner:
         if self.ck.latest_step() is not None:
             step, state = self._restore(init_state, rep, "resume")
             rep.restores += 1
+            self._event("stream_resumes_total", "stream_resume", step=step)
         restores_left = self.max_restores
         while step < total_steps:
             try:
@@ -101,17 +114,24 @@ class ResilientRunner:
                     self.ck.save(step, state)
                     rep.checkpoints += 1
                     rep.timeline.append(f"ckpt@{step}")
+                    self._event("checkpoints_total", "checkpoint",
+                                step=step)
             except Exception as e:  # noqa: BLE001 - any failure is recoverable
                 rep.failures += 1
                 rep.timeline.append(f"failure@{step}:{type(e).__name__}")
+                self._event("stream_failures_total", "stream_failure",
+                            step=step, error=type(e).__name__)
                 restores_left -= 1
                 if restores_left < 0:
                     raise
                 step, state = self._restore(init_state, rep, "restore")
                 rep.restores += 1
+                self._event("stream_restores_total", "stream_restore",
+                            step=step)
         self.ck.save(total_steps, state)
         rep.checkpoints += 1
         rep.timeline.append(f"ckpt@{total_steps}")
+        self._event("checkpoints_total", "checkpoint", step=total_steps)
         self.ck.wait()
         return state, rep
 

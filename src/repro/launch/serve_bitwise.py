@@ -7,6 +7,11 @@ Builds the synthetic §8 workload catalog (`repro.service.workload`), serves
 the query stream through the batching scheduler, and prints per-batch QPS,
 p50/p99 modeled latency, plan-cache hit rate, and energy — the interactive
 serving loop the ROADMAP's "heavy traffic" north star grows from.
+
+Telemetry (`repro.obs`): ``--telemetry`` turns on full query-lifecycle
+tracing and prints the metrics dashboard after the stream; ``--trace-out
+trace.json`` writes the Chrome trace-event timeline (open in Perfetto /
+`chrome://tracing`), ``--prom-out metrics.prom`` the Prometheus snapshot.
 """
 from __future__ import annotations
 
@@ -14,8 +19,35 @@ import argparse
 import dataclasses
 import time
 
+from repro.obs import Telemetry
 from repro.service import (WorkloadSpec, build_service, query_stream,
                            results_bit_identical, run_queries_unbatched)
+
+
+def _dashboard(svc) -> str:
+    """Human-readable telemetry summary from the unified stat surface."""
+    s = svc.stats()
+    lines = [
+        "-- telemetry ----------------------------------------------",
+        f"queries served      {int(s['queries_served'])} "
+        f"in {int(s.get('batches', 0))} batches",
+        f"plan cache          {int(s['plan_cache_hits'])} hits / "
+        f"{int(s['plan_cache_misses'])} misses "
+        f"(rate {s['plan_cache_hit_rate']:.2f}, "
+        f"{int(s['plans_cached'])} plans)",
+        f"modeled latency     p50 {s.get('modeled_latency_p50_ns', 0.0) / 1e3:.1f}us  "
+        f"p99 {s.get('modeled_latency_p99_ns', 0.0) / 1e3:.1f}us",
+        f"modeled totals      {s['total_modeled_ns'] / 1e6:.3f} ms, "
+        f"{s['total_energy_nj'] / 1e3:.1f} uJ",
+        f"reliability         {int(s.get('reliability_replicas', 0))} replicas, "
+        f"{int(s.get('ecc_tiebreaks', 0))} tiebreaks, "
+        f"{int(s.get('tra_corrected_bits', 0))} corrected bits, "
+        f"{int(s['parity_checks'])} parity checks",
+        f"fault tolerance     {int(s['failures'])} failures, "
+        f"{int(s['replays'])} replays, {int(s['stragglers'])} stragglers, "
+        f"{int(s.get('chip_rescales', 0))} rescales",
+    ]
+    return "\n".join(lines)
 
 
 def main(argv=None):
@@ -33,12 +65,22 @@ def main(argv=None):
     ap.add_argument("--verify", action="store_true",
                     help="also run the sequential unbatched reference and "
                          "assert bit-identical results")
+    ap.add_argument("--telemetry", action="store_true",
+                    help="full tracing + metrics dashboard")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write the Chrome trace-event JSON here "
+                         "(implies --telemetry)")
+    ap.add_argument("--prom-out", default=None, metavar="PATH",
+                    help="write the Prometheus metrics snapshot here")
     args = ap.parse_args(argv)
+
+    trace_on = args.telemetry or args.trace_out is not None
+    tel = Telemetry(trace=trace_on) if trace_on else None
 
     spec = WorkloadSpec(n_tenants=args.tenants, n_weeks=args.weeks,
                         domain_bits=args.domain, n_queries=args.queries,
                         seed=args.seed)
-    svc = build_service(spec, n_banks=args.banks)
+    svc = build_service(spec, n_banks=args.banks, telemetry=tel)
     print(f"catalog: {len(svc.catalog)} vectors, "
           f"domain={svc.catalog.n_bits} bits, banks={args.banks}")
 
@@ -66,6 +108,17 @@ def main(argv=None):
                   f"speedup={ref.makespan_ns / rep.makespan_ns:.1f}x")
             if not ok:
                 return 1
+
+    if trace_on:
+        print(_dashboard(svc))
+    if args.trace_out:
+        path = svc.export_chrome_trace(args.trace_out)
+        n_ev = len(svc.telemetry.tracer.events)
+        print(f"chrome trace: {n_ev} events -> {path}")
+    if args.prom_out:
+        with open(args.prom_out, "w") as f:
+            f.write(svc.prometheus())
+        print(f"prometheus snapshot -> {args.prom_out}")
     return 0
 
 

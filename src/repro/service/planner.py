@@ -325,7 +325,14 @@ class Plan:
 
 @dataclasses.dataclass
 class PlanCache:
-    """expr_key -> Plan memo with hit/miss counters."""
+    """expr_key -> Plan memo with hit/miss counters.
+
+    The legacy integer counters (`hits`/`misses`) are always maintained;
+    when a `repro.obs.MetricsRegistry` is attached (`attach_metrics`, wired
+    by the scheduler from `QueryService(telemetry=...)`) every hit/miss
+    also lands on the registry's `plan_cache_{hits,misses}_total` counters
+    — the single stat surface `QueryService.stats()` reads.
+    """
 
     timing: timing_model.DramTiming = timing_model.DDR3_1600
     energy: energy_model.EnergyModel = energy_model.DEFAULT_ENERGY
@@ -334,6 +341,15 @@ class PlanCache:
         self._plans: Dict[Tuple, Plan] = {}
         self.hits = 0
         self.misses = 0
+        from repro.obs.metrics import _NULL_INSTRUMENT
+
+        self._m_hits = _NULL_INSTRUMENT
+        self._m_misses = _NULL_INSTRUMENT
+
+    def attach_metrics(self, registry) -> None:
+        """Mirror hit/miss counts onto `registry` from now on."""
+        self._m_hits = registry.counter("plan_cache_hits_total")
+        self._m_misses = registry.counter("plan_cache_misses_total")
 
     def __len__(self) -> int:
         return len(self._plans)
@@ -349,8 +365,10 @@ class PlanCache:
         plan = self._plans.get(key)
         if plan is not None:
             self.hits += 1
+            self._m_hits.inc()
             return plan, True
         self.misses += 1
+        self._m_misses.inc()
         result: CompileResult = compile_expr_fused(canon, DST)
         # n_inputs counts the *bound* canonical leaves, not the rows the
         # compiled program happens to activate: algebraic simplification can
@@ -388,8 +406,10 @@ class PlanCache:
         plan = self._plans.get(key)
         if plan is not None:
             self.hits += 1
+            self._m_hits.inc()
             return plan, True
         self.misses += 1
+        self._m_misses.inc()
         if op == "read":
             res = arith_compiler.plane_readout_program(
                 n_bits, _IN_PREFIX, DST)
@@ -443,9 +463,21 @@ class BoundPlan:
 
 @dataclasses.dataclass
 class Planner:
-    """Parse + canonicalize + compile-with-memo front half of the service."""
+    """Parse + canonicalize + compile-with-memo front half of the service.
+
+    `telemetry` (a `repro.obs.Telemetry`, wired by the scheduler) makes
+    `plan` emit the parse -> plan_cache -> bind span chain of each query's
+    trace; the default `NULL_TELEMETRY` path does no tracing work.
+    """
 
     cache: PlanCache = dataclasses.field(default_factory=PlanCache)
+    telemetry: object = None
+
+    def __post_init__(self):
+        if self.telemetry is None:
+            from repro.obs.telemetry import NULL_TELEMETRY
+
+            self.telemetry = NULL_TELEMETRY
 
     @property
     def compile_count(self) -> int:
@@ -454,15 +486,41 @@ class Planner:
 
     def plan(self, query: Union[str, Expr, ArithQuery],
              columns: Optional[Mapping[str, int]] = None) -> BoundPlan:
+        tel = self.telemetry
+        if not tel.tracing:
+            return self._plan(query, columns)
+        tr = tel.tracer
+        with tr.span("plan"):
+            return self._plan(query, columns, tr)
+
+    def _plan(self, query: Union[str, Expr, ArithQuery],
+              columns: Optional[Mapping[str, int]],
+              tr=None) -> BoundPlan:
+        if tr is not None:
+            tr.begin("parse")
         if isinstance(query, str):
             parsed: Union[Expr, ArithQuery] = parse_any(query, columns)
         else:
             parsed = query
+        if tr is not None:
+            tr.end()
+            tr.begin("plan_cache")
         if isinstance(parsed, ArithQuery):
-            return self._plan_arith(parsed, columns or {})
+            bp = self._plan_arith(parsed, columns or {})
+            if tr is not None:
+                tr.end()
+                tr.instant("cache_hit" if bp.cache_hit else "cache_miss")
+            return bp
         canon, bindings = canonicalize(parsed)
         plan, hit = self.cache.lookup(canon)
-        return BoundPlan(plan=plan, bindings=bindings, cache_hit=hit)
+        if tr is not None:
+            tr.end()
+            tr.instant("cache_hit" if hit else "cache_miss")
+            tr.begin("bind", n_inputs=plan.n_inputs)
+        bp = BoundPlan(plan=plan, bindings=bindings, cache_hit=hit)
+        if tr is not None:
+            tr.end()
+        return bp
 
     def _plan_arith(self, aq: ArithQuery,
                     columns: Mapping[str, int]) -> BoundPlan:

@@ -62,6 +62,7 @@ from repro.core import arith_compiler, engine, lowering
 from repro.core.bitplane import ROW_BITS
 from repro.core.compiler import Expr, compile_expr_fused
 from repro.core.timing import DDR3_1600, DramTiming
+from repro.obs.telemetry import set_telemetry
 from repro.ops.popcount import popcount_words
 from repro.service.catalog import Catalog, plane_name
 from repro.service.planner import (DST, ArithQuery, BoundPlan, Plan, Planner,
@@ -153,6 +154,10 @@ class Scheduler:
     #: recovery hook — QueryService installs an elastic rescale-down), and
     #: flagged when they straggle past the EMA threshold.
     fault_tolerance: Optional["FaultTolerance"] = None  # noqa: F821
+    #: observability sink (`repro.obs.Telemetry`): span tree + modeled
+    #: timeline per batch when tracing, registry counters/histograms when
+    #: metering. None = `NULL_TELEMETRY` (both off, zero-allocation path).
+    telemetry: Optional["Telemetry"] = None  # noqa: F821
 
     def __post_init__(self):
         self.queries_served = 0
@@ -160,6 +165,25 @@ class Scheduler:
         self.total_energy_nj = 0.0
         self.parity_checks = 0
         self._group_seq = 0      # deterministic per-dispatch PRNG chain
+        if self.telemetry is None:
+            from repro.obs.telemetry import NULL_TELEMETRY
+
+            self.telemetry = NULL_TELEMETRY
+        # one stat surface: the planner's spans and the plan cache's
+        # hit/miss counters land on the same sink as the scheduler's
+        self.planner.telemetry = self.telemetry
+        if self.telemetry.metering:
+            m = self.telemetry.metrics
+            self.planner.cache.attach_metrics(m)
+            self._m_queries = m.counter("queries_total")
+            self._m_batches = m.counter("batches_total")
+            self._m_groups = m.counter("plan_groups_total")
+            self._m_aaps = m.counter("aaps_total")
+            self._m_energy = m.counter("modeled_energy_nj_total")
+            self._m_modeled_ns = m.counter("modeled_ns_total")
+            self._m_parity = m.counter("parity_checks_total")
+            self._m_lat = m.histogram("modeled_latency_ns")
+            self._m_wall = m.histogram("batch_wall_us")
         if (self.reliability is not None
                 and self.reliability.mode != "none"
                 and self.cluster is not None):
@@ -254,14 +278,30 @@ class Scheduler:
                                  self._group_seq)
         self._group_seq += 1
         model = rel.model or errmod.TRAErrorModel(p_flip=0.0)
+        tel = self.telemetry
+        stats = {} if tel.metering else None
         if rel.mode == "vote":
             out = errmod.execute_voted(
                 plan.lowered, data, list(plan.outputs),
-                backend=self.backend, model=model, key=key, k=rel.k)
-            return out, rel.k
-        return errmod.execute_ecc(
-            plan.lowered, data, list(plan.outputs),
-            backend=self.backend, model=model, key=key)
+                backend=self.backend, model=model, key=key, k=rel.k,
+                stats_out=stats)
+            replicas = rel.k
+        else:
+            out, replicas = errmod.execute_ecc(
+                plan.lowered, data, list(plan.outputs),
+                backend=self.backend, model=model, key=key,
+                stats_out=stats)
+        if stats is not None:
+            m = tel.metrics
+            m.counter("reliability_replicas_total").inc(stats["replicas"])
+            m.counter("ecc_tiebreaks_total").inc(stats["tiebreaks"])
+            m.counter("tra_corrected_bits_total").inc(
+                stats["corrected_bits"])
+            if tel.tracing and stats["corrected_bits"]:
+                tel.tracer.instant("tra_correction",
+                                   corrected_bits=stats["corrected_bits"],
+                                   replicas=stats["replicas"])
+        return out, replicas
 
     def _run_group_resilient(self, members: List[Tuple[int, BoundPlan]],
                              need_words: bool
@@ -279,6 +319,7 @@ class Scheduler:
         never-failed run.
         """
         ft = self.fault_tolerance
+        tel = self.telemetry
         g = ft.groups_dispatched
         ft.groups_dispatched += 1
         for attempt in range(ft.max_replays + 1):
@@ -290,16 +331,31 @@ class Scheduler:
             except Exception as e:  # noqa: BLE001 - any failure is replayable
                 ft.failures += 1
                 ft.timeline.append(f"failure@group{g}:{type(e).__name__}")
+                if tel.metering:
+                    tel.metrics.counter("ft_failures_total").inc()
+                if tel.tracing:
+                    tel.tracer.instant("ft_failure", group=g,
+                                       error=type(e).__name__)
                 if attempt >= ft.max_replays:
                     raise
                 if ft.on_chip_failure is not None:
                     ft.on_chip_failure(e)
                 ft.replays += 1
                 ft.timeline.append(f"replay@group{g}")
+                if tel.metering:
+                    tel.metrics.counter("ft_replays_total").inc()
+                if tel.tracing:
+                    tel.tracer.instant("ft_replay", group=g)
                 continue
             if ft.monitor.observe(g, time.perf_counter() - t0):
                 ft.stragglers.append(g)
                 ft.timeline.append(f"straggler@group{g}")
+                if tel.metering:
+                    tel.metrics.counter("ft_stragglers_total").inc()
+                if tel.tracing:
+                    tel.tracer.instant("ft_straggler", group=g)
+            if tel.metering and ft.monitor.ema is not None:
+                tel.metrics.gauge("straggler_ema_s").set(ft.monitor.ema)
             return out
         raise AssertionError("unreachable: loop exits via return or raise")
 
@@ -361,21 +417,57 @@ class Scheduler:
         """Plan, group, execute, and cost one batch of concurrent queries."""
         if not queries:
             return BatchReport([], 0.0, self.n_banks, 0)
+        tel = self.telemetry
+        if not (tel.tracing or tel.metering):
+            return self._submit(queries, tel)
+        wall0 = time.perf_counter()
+        if tel.tracing:
+            tr = tel.tracer
+            # core layers (engine / bankgroup / cluster) have no handle on
+            # this scheduler; publish the sink for the dispatch window so
+            # their spans nest under this batch
+            prev = set_telemetry(tel)
+            tr.begin("batch", n_queries=len(queries))
+            try:
+                report = self._submit(queries, tel)
+            finally:
+                tr.end()
+                set_telemetry(prev)
+        else:
+            report = self._submit(queries, tel)
+        if tel.metering:
+            self._m_batches.inc()
+            self._m_groups.inc(report.n_plan_groups)
+            self._m_modeled_ns.inc(report.makespan_ns)
+            self._m_wall.observe((time.perf_counter() - wall0) * 1e6)
+        return report
 
+    def _submit(self, queries: Sequence[Query],
+                tel: "Telemetry") -> BatchReport:  # noqa: F821
+        tracing = tel.tracing
+        tr = tel.tracer
         if self.reliability is not None and self.reliability.mode == "ecc":
             # ecc mode opens every batch with a catalog integrity probe:
             # the maintained per-group XOR parity must match a fresh
             # recomputation, or some operand vector was corrupted at rest
             self.parity_checks += 1
+            if tel.metering:
+                self._m_parity.inc()
             if not self.catalog.verify_parity():
                 raise RuntimeError(
                     "catalog parity check failed: a registered vector's "
                     "words no longer match the maintained XOR parity plane")
 
         # 1. plan every query through the cache (hits skip recompilation)
-        bound: List[BoundPlan] = [
-            self.planner.plan(q.query, columns=self.catalog.columns)
-            for q in queries]
+        bound: List[BoundPlan] = []
+        if tracing:
+            for i, q in enumerate(queries):
+                with tr.span("query", index=i, mode=q.mode):
+                    bound.append(self.planner.plan(
+                        q.query, columns=self.catalog.columns))
+        else:
+            bound = [self.planner.plan(q.query, columns=self.catalog.columns)
+                     for q in queries]
 
         # 2. group by canonical plan -> one stacked dispatch per group
         groups: Dict[Tuple, List[Tuple[int, BoundPlan]]] = {}
@@ -389,7 +481,14 @@ class Scheduler:
         for members in groups.values():
             need_words = any(queries[idx].mode == MATERIALIZE
                              for idx, _ in members)
+            if tracing:
+                tr.begin("group", members=[idx for idx, _ in members],
+                         n_aaps=members[0][1].plan.n_aaps)
+                tr.begin("dispatch")
             stacked, scalars, replicas = dispatch(members, need_words)
+            if tracing:
+                tr.end()
+                tr.begin("readout")
             plan = members[0][1].plan
             # boolean plans (single DST row) materialize as a flat word
             # vector; arithmetic plans as the (n_outputs, n_words) plane
@@ -401,6 +500,9 @@ class Scheduler:
                     words_by_idx[idx] = w[0] if is_boolean else w
                 count_by_idx[idx] = scalars[slot]
                 replicas_by_idx[idx] = replicas
+            if tracing:
+                tr.end()    # readout
+                tr.end()    # group
 
         # 3. modeled timeline: queries placed on least-loaded (chip, bank)
         #    slots; operand transfers serialize on each chip's own internal
@@ -433,19 +535,52 @@ class Scheduler:
                 bank_free[c][b] = (bus_free[c]
                                    + bp.plan.latency_ns_per_block * replicas
                                    + vote_ns)
+                if tracing:
+                    tr.model_event("xfer", start, xfer, f"chip{c}/bus",
+                                   q=idx)
+                    tr.model_event("compute", bus_free[c],
+                                   bank_free[c][b] - bus_free[c],
+                                   f"chip{c}/bank{b}", q=idx)
             energy = bp.plan.energy_nj_per_block * n_blocks * replicas
             value: Union[int, np.ndarray]
             if q.mode == MATERIALIZE:
                 value = words_by_idx[idx]
             else:   # popcount / aggregate: the weighted-popcount scalar
                 value = count_by_idx[idx]
+            lat = bank_free[c][b] + reduce_ns
             results.append(QueryResult(
                 index=idx, mode=q.mode, value=value,
-                latency_ns=bank_free[c][b] + reduce_ns, bank=b,
+                latency_ns=lat, bank=b,
                 cache_hit=bp.cache_hit, n_aaps=bp.plan.n_aaps,
                 energy_nj=energy, tenant=q.tenant, chip=c))
+            if tracing:
+                tr.model_event(f"q{idx}", 0.0, lat, "queries",
+                               latency_ns=lat, n_aaps=bp.plan.n_aaps,
+                               cache_hit=bp.cache_hit, energy_nj=energy,
+                               mode=q.mode, tenant=q.tenant)
+            if tel.metering:
+                self._m_queries.inc()
+                self._m_lat.observe(lat)
+                self._m_aaps.inc(bp.plan.n_aaps * n_blocks * replicas)
+                self._m_energy.inc(energy)
+                if q.tenant is not None:
+                    m = tel.metrics
+                    m.counter("tenant_queries_total",
+                              tenant=q.tenant).inc()
+                    m.counter("tenant_aaps_total", tenant=q.tenant).inc(
+                        bp.plan.n_aaps * n_blocks * replicas)
+                    m.counter("tenant_energy_nj_total",
+                              tenant=q.tenant).inc(energy)
 
         makespan = max(max(per_chip) for per_chip in bank_free) + reduce_ns
+        if tracing and n_chips > 1:
+            # the chip-axis tree psum: ceil(log2 chips) serialized hops
+            # after the last bank completes (recursive doubling,
+            # `core.cluster.tree_psum`)
+            base = makespan - reduce_ns
+            for h in range(int(math.ceil(math.log2(n_chips)))):
+                tr.model_event("psum_hop", base + h * self.timing.aap_ns,
+                               self.timing.aap_ns, "reduce", hop=h)
         self.queries_served += len(queries)
         self.total_modeled_ns += makespan
         self.total_energy_nj += sum(r.energy_nj for r in results)

@@ -74,8 +74,18 @@ class QueryService:
     #: installs `_recover_chip_failure` — elastic rescale-down on a
     #: `ChipFailure`, preserving every registered vector.
     fault_tolerance: Optional["FaultTolerance"] = None  # noqa: F821
+    #: observability sink (`repro.obs.Telemetry`). Default (None) is
+    #: metrics-on / tracing-off: `stats()` reads the registry, the hot
+    #: dispatch loop pays plain counter adds and no span machinery. Pass
+    #: `Telemetry()` for full query-lifecycle tracing + Chrome trace
+    #: export, or `NULL_TELEMETRY` to turn everything off.
+    telemetry: Optional["Telemetry"] = None  # noqa: F821
 
     def __post_init__(self):
+        if self.telemetry is None:
+            from repro.obs.telemetry import Telemetry
+
+            self.telemetry = Telemetry(trace=False)
         self.catalog = Catalog()
         self.planner = Planner()
         self.cluster = None
@@ -94,7 +104,8 @@ class QueryService:
                                    n_banks=self.n_banks, timing=self.timing,
                                    cluster=self.cluster,
                                    reliability=self.reliability,
-                                   fault_tolerance=self.fault_tolerance)
+                                   fault_tolerance=self.fault_tolerance,
+                                   telemetry=self.telemetry)
         self._columns: Dict[str, VerticalColumn] = {}
 
     # -- catalog management --------------------------------------------------
@@ -248,6 +259,11 @@ class QueryService:
                 continue    # slot grid not divisible by c chips
             if self.fault_tolerance is not None:
                 self.fault_tolerance.timeline.append(f"rescale@{old}->{c}")
+            tel = self.telemetry
+            if tel.metering:
+                tel.metrics.counter("chip_rescales_total").inc()
+            if tel.tracing:
+                tel.tracer.instant("chip_rescale", old=old, new=c)
             return
         raise RuntimeError(
             f"chip failure on a {old}-chip mesh with no valid smaller "
@@ -297,7 +313,7 @@ class QueryService:
         runner = ResilientRunner(
             step_fn, lambda step: batches[step],
             Checkpointer(checkpoint_dir), ckpt_every=ckpt_every,
-            max_restores=max_restores)
+            max_restores=max_restores, telemetry=self.telemetry)
         init = {"done": np.int64(0),
                 "values": np.zeros(n_total, np.int64)}
         state, report = runner.run(init, len(batches),
@@ -307,17 +323,83 @@ class QueryService:
     # -- observability -------------------------------------------------------
 
     def stats(self) -> Dict[str, float]:
+        """One unified stat surface, backed by the metrics registry.
+
+        With metering on (the default), the counter-backed keys read
+        through `telemetry.metrics` — the same registry the Prometheus
+        snapshot and per-tenant counters export — and gain latency
+        percentiles plus the reliability / fault-tolerance totals. The
+        legacy keys (`queries_served`, `plan_cache_*`, ...) are aliases of
+        the registry series; with metering off they fall back to the
+        always-maintained legacy attributes, so the dict shape is stable
+        either way.
+        """
         cache = self.planner.cache
-        return {
-            "queries_served": self.scheduler.queries_served,
-            "plans_cached": len(cache),
-            "plan_cache_hits": cache.hits,
-            "plan_cache_misses": cache.misses,
-            "plan_cache_hit_rate": cache.hit_rate,
-            "compile_count": self.planner.compile_count,
-            "total_modeled_ns": self.scheduler.total_modeled_ns,
-            "total_energy_nj": self.scheduler.total_energy_nj,
-            "n_chips": self.n_chips or 1,
-            "chip_sweeps": self.cluster.sweeps if self.cluster else 0,
-            "parity_checks": self.scheduler.parity_checks,
-        }
+        tel = self.telemetry
+        ft = self.fault_tolerance
+        if tel.metering:
+            m = tel.metrics
+            s: Dict[str, float] = {
+                "queries_served": int(m.counter("queries_total").value),
+                "plans_cached": len(cache),
+                "plan_cache_hits": int(
+                    m.counter("plan_cache_hits_total").value),
+                "plan_cache_misses": int(
+                    m.counter("plan_cache_misses_total").value),
+                "plan_cache_hit_rate": cache.hit_rate,
+                "compile_count": self.planner.compile_count,
+                "total_modeled_ns": m.counter("modeled_ns_total").value,
+                "total_energy_nj": m.counter(
+                    "modeled_energy_nj_total").value,
+                "n_chips": self.n_chips or 1,
+                "chip_sweeps": self.cluster.sweeps if self.cluster else 0,
+                "parity_checks": int(
+                    m.counter("parity_checks_total").value),
+                "batches": int(m.counter("batches_total").value),
+                "modeled_latency_p50_ns": m.histogram(
+                    "modeled_latency_ns").percentile(50),
+                "modeled_latency_p99_ns": m.histogram(
+                    "modeled_latency_ns").percentile(99),
+                "reliability_replicas": int(
+                    m.counter("reliability_replicas_total").value),
+                "ecc_tiebreaks": int(
+                    m.counter("ecc_tiebreaks_total").value),
+                "tra_corrected_bits": int(
+                    m.counter("tra_corrected_bits_total").value),
+                "chip_rescales": int(
+                    m.counter("chip_rescales_total").value),
+            }
+        else:
+            s = {
+                "queries_served": self.scheduler.queries_served,
+                "plans_cached": len(cache),
+                "plan_cache_hits": cache.hits,
+                "plan_cache_misses": cache.misses,
+                "plan_cache_hit_rate": cache.hit_rate,
+                "compile_count": self.planner.compile_count,
+                "total_modeled_ns": self.scheduler.total_modeled_ns,
+                "total_energy_nj": self.scheduler.total_energy_nj,
+                "n_chips": self.n_chips or 1,
+                "chip_sweeps": self.cluster.sweeps if self.cluster else 0,
+                "parity_checks": self.scheduler.parity_checks,
+                "chip_rescales": (sum(
+                    1 for t in ft.timeline if t.startswith("rescale@"))
+                    if ft else 0),
+            }
+        # fault-tolerance state folds in from the policy object (legacy
+        # source of truth); the registry's ft_* counters mirror it
+        s["replays"] = ft.replays if ft else 0
+        s["failures"] = ft.failures if ft else 0
+        s["stragglers"] = len(ft.stragglers) if ft else 0
+        s["straggler_ema_s"] = (ft.monitor.ema or 0.0) if ft else 0.0
+        return s
+
+    def export_chrome_trace(self, path=None):
+        """Export the batch span trees + modeled timelines recorded so far
+        as Chrome trace-event JSON (needs `telemetry` with tracing on);
+        validated against the trace schema, written to `path` if given."""
+        return self.telemetry.export_chrome_trace(path)
+
+    def prometheus(self) -> str:
+        """The metrics registry as Prometheus text exposition format."""
+        return self.telemetry.prometheus()

@@ -50,10 +50,16 @@ def _week_or(tenant: str, week: int) -> str:
     return week_or(week, prefix=f"{tenant}/")
 
 
-def build_service(spec: WorkloadSpec, n_banks: int = 8) -> QueryService:
-    """Populate a service catalog with every tenant's vectors."""
+def build_service(spec: WorkloadSpec, n_banks: int = 8,
+                  telemetry=None) -> QueryService:
+    """Populate a service catalog with every tenant's vectors.
+
+    `telemetry` passes through to `QueryService` (a `repro.obs.Telemetry`
+    or `NULL_TELEMETRY`; None keeps the service default of metrics-on /
+    tracing-off).
+    """
     rng = np.random.default_rng(spec.seed)
-    svc = QueryService(n_banks=n_banks)
+    svc = QueryService(n_banks=n_banks, telemetry=telemetry)
     m = spec.domain_bits
     for t in range(spec.n_tenants):
         tenant = f"t{t}"
