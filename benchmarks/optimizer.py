@@ -1,0 +1,134 @@
+"""Cost-based optimizer benchmark: optimized vs unoptimized pipeline.
+
+Serves the same streams through two otherwise-identical services — one
+with the cost-based planning pipeline (`service.optimizer`: reordering
+compile-off, per-plan backend choice, cross-query CSE), one with
+``optimize=False`` (the plain canonicalize/compile/cache pipeline, the
+pre-optimizer behavior) — and reports modeled AAP totals, makespan, and
+energy for both sides:
+
+  * the §8 multi-tenant workload stream (`repro.service.workload`), whose
+    repeated weekly OR-trees and every-week AND-of-weeks overlap enough
+    for the sharing pass to pay on its own, and
+  * a high-overlap dashboard batch (>= 50% of the queries apply one
+    shared filter subexpression — the many-panels-one-dashboard shape),
+    where the modeled-AAP reduction must clear 1.3x (the gated claim).
+    This case is built on a fixed-size dedicated catalog so its rows are
+    deterministic and identical in smoke and full mode.
+
+Correctness is asserted inline: both sides bit-identical to each other
+and to the sequential unbatched reference, on every stream.
+
+Writes BENCH_optimizer.json; `aap_speedup` rows are perf-gated
+(`benchmarks/perf_gate.py`, higher is better).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import Row, emit, smoke_mode, write_bench_json
+from repro.service import (POPCOUNT, Query, QueryService, WorkloadSpec,
+                           build_service, query_stream,
+                           results_bit_identical, run_queries_unbatched)
+
+N_BANKS = 8
+
+#: the gated floor on the high-overlap batch's modeled-AAP reduction
+MIN_OVERLAP_AAP_SPEEDUP = 1.3
+
+#: the high-overlap batch: fixed size regardless of smoke mode
+OVERLAP_DOMAIN = 2048
+OVERLAP_QUERIES = 32
+
+
+def _overlap_service(optimize: bool) -> QueryService:
+    rng = np.random.default_rng(42)
+    svc = QueryService(n_banks=N_BANKS, optimize=optimize)
+    for name in [f"f{i}" for i in range(3)] + [f"p{i}" for i in range(10)]:
+        svc.register_bits(name, rng.random(OVERLAP_DOMAIN) < 0.4)
+    return svc
+
+
+def _overlap_batch() -> list:
+    """A dashboard batch: 24 of 32 panels apply one shared base filter.
+
+    `(f0 | f1) & f2` is the dashboard's audience filter; each panel ANDs
+    it with its own vector — the cross-query CSE shape: the shared
+    sub-DAG compiles once into a `$cse` plane every panel references.
+    """
+    queries = [Query(f"((f0 | f1) & f2) & p{i % 10}", POPCOUNT)
+               for i in range(24)]
+    queries += [Query(f"p{i} & ~p{i + 1}", POPCOUNT) for i in range(8)]
+    assert len(queries) == OVERLAP_QUERIES
+    return queries
+
+
+def _serve(svc, queries):
+    t0 = time.perf_counter()
+    rep = svc.query_batch(queries)
+    wall_us = (time.perf_counter() - t0) * 1e6
+    return rep, wall_us
+
+
+def run(spec: WorkloadSpec = WorkloadSpec()) -> list[Row]:
+    if smoke_mode():
+        spec = WorkloadSpec(n_tenants=2, n_weeks=2, domain_bits=1 << 10,
+                            n_queries=64, seed=spec.seed)
+    rows: list[Row] = []
+    jrows: list[dict] = []
+
+    svc_opt = build_service(spec, n_banks=N_BANKS)
+    svc_plain = build_service(spec, n_banks=N_BANKS, optimize=False)
+    cases = [
+        ("workload", spec.domain_bits, svc_opt, svc_plain,
+         query_stream(spec, svc_opt), query_stream(spec, svc_plain)),
+        ("overlap", OVERLAP_DOMAIN, _overlap_service(True),
+         _overlap_service(False), _overlap_batch(), _overlap_batch()),
+    ]
+
+    for name, domain, s_opt, s_plain, q_opt, q_plain in cases:
+        rep_o, wall_o = _serve(s_opt, q_opt)
+        rep_p, wall_p = _serve(s_plain, q_plain)
+        ref = run_queries_unbatched(s_opt.catalog, q_opt)
+        assert results_bit_identical(rep_o.results, ref.results), \
+            f"{name}: optimized differs from unbatched reference"
+        assert results_bit_identical(rep_o.results, rep_p.results), \
+            f"{name}: optimized differs from unoptimized"
+        assert rep_o.total_aaps <= rep_p.total_aaps, \
+            f"{name}: optimizer emitted more AAPs"
+        aap_speedup = rep_p.total_aaps / rep_o.total_aaps
+        makespan_speedup = rep_p.makespan_ns / rep_o.makespan_ns
+        if name == "overlap":
+            assert aap_speedup >= MIN_OVERLAP_AAP_SPEEDUP, (
+                f"high-overlap AAP reduction {aap_speedup:.2f}x < "
+                f"{MIN_OVERLAP_AAP_SPEEDUP}x")
+        rows.append((
+            f"optimizer/{name}{len(q_opt)}", wall_o,
+            f"aaps={rep_o.total_aaps} unopt_aaps={rep_p.total_aaps} "
+            f"aap_speedup={aap_speedup:.2f}x "
+            f"makespan_speedup={makespan_speedup:.2f}x "
+            f"cse_planes={rep_o.n_cse_planes} "
+            f"opt_ms={rep_o.makespan_ns / 1e6:.3f} "
+            f"unopt_ms={rep_p.makespan_ns / 1e6:.3f} bitwise_match=yes"))
+        jrows.append({
+            "name": f"optimizer/{name}{len(q_opt)}",
+            "bytes": len(q_opt) * domain // 8,
+            "n_queries": len(q_opt),
+            "n_banks": N_BANKS,
+            "total_aaps": rep_o.total_aaps,
+            "baseline_aaps": rep_p.total_aaps,
+            "aap_speedup": aap_speedup,
+            "makespan_speedup": makespan_speedup,
+            "n_cse_planes": rep_o.n_cse_planes,
+            "modeled_ns": rep_o.makespan_ns,
+            "unopt_modeled_ns": rep_p.makespan_ns,
+        })
+
+    write_bench_json("optimizer", jrows)
+    return rows
+
+
+if __name__ == "__main__":
+    emit(run(), header=True)

@@ -46,9 +46,9 @@ WARN_RATIO = 1.3
 ROW_FAIL_RATIOS = {"obs_overhead/serve_disabled": 1.03}
 
 #: benches every CI run must produce (bare names, without BENCH_/.json)
-REQUIRED = ["fig9_throughput", "serve_qps", "arith_throughput",
-            "vm_dispatch", "cluster_scaling", "reliability",
-            "obs_overhead"]
+REQUIRED = ["fig9_throughput", "serve_qps", "optimizer",
+            "arith_throughput", "vm_dispatch", "cluster_scaling",
+            "reliability", "obs_overhead"]
 
 #: configuration fields that must agree for metric comparison to be fair
 SIZE_KEYS = ("bytes", "row_words", "n_cmds", "n_rows", "n_banks",

@@ -18,6 +18,7 @@ SECTIONS = [
     "fig11_bitweaving",
     "fig12_setops",
     "serve_qps",
+    "optimizer",
     "arith_throughput",
     "vm_dispatch",
     "cluster_scaling",

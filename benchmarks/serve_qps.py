@@ -5,8 +5,12 @@ queries, BitWeaving range-scan predicates, set intersections —
 `repro.service.workload`) through the batching scheduler and reports:
 
   * modeled QPS and p50/p99 latency of the 8-bank batched configuration,
-  * the plan-cache hit rate over the repeated-query stream (> 50%), and
-  * the 8-bank vs 1-bank modeled throughput ratio (>= 3x).
+  * the plan-cache hit rate over the repeated-query stream (> 50%),
+  * the 8-bank vs 1-bank modeled throughput ratio (>= 3x, measured with
+    the optimizer off — it is a bank-parallelism claim, and the
+    optimizer's CSE strips the redundant work that parallelizes), and
+  * the optimized vs unoptimized 8-bank makespan ratio (opt_speedup,
+    trajectory-gated) plus the hard never-more-AAPs contract.
 
 Correctness is asserted inline: the batched scheduler's results must be
 bit-identical to sequential unbatched execution (fresh per-query compile,
@@ -41,22 +45,35 @@ def run(spec: WorkloadSpec = WorkloadSpec()) -> list[Row]:
     rep = svc.query_batch(queries)
     wall_us = (time.perf_counter() - t0) * 1e6
 
-    # -- batched, 1 bank (same stream, same service logic) -------------------
-    svc1 = build_service(spec, n_banks=1)
-    rep1 = svc1.query_batch(query_stream(spec, svc1))
+    # -- unoptimized pair: the raw bank-parallelism claim --------------------
+    # the optimizer's CSE strips redundant (parallelizable) work, which
+    # flattens the bank-scaling curve; the >= 3x substrate claim is about
+    # bank parallelism, so it is measured with the optimizer off
+    svc8u = build_service(spec, n_banks=N_BANKS, optimize=False)
+    rep8u = svc8u.query_batch(query_stream(spec, svc8u))
+    svc1u = build_service(spec, n_banks=1, optimize=False)
+    rep1 = svc1u.query_batch(query_stream(spec, svc1u))
 
     # -- sequential unbatched reference: bit-identity ------------------------
     ref = run_queries_unbatched(svc.catalog, queries)
     assert results_bit_identical(rep.results, ref.results), \
         "batched results differ from sequential unbatched reference"
+    assert results_bit_identical(rep.results, rep8u.results), \
+        "optimized results differ from unoptimized results"
     assert results_bit_identical(rep.results, rep1.results), \
         "8-bank results differ from 1-bank results"
 
     stats = svc.stats()
     hit_rate = stats["plan_cache_hit_rate"]
-    speedup = rep1.makespan_ns / rep.makespan_ns
+    speedup = rep1.makespan_ns / rep8u.makespan_ns
+    opt_speedup = rep8u.makespan_ns / rep.makespan_ns
     assert hit_rate > 0.5, f"plan-cache hit rate {hit_rate:.2f} <= 0.5"
     assert speedup >= 3.0, f"8-bank speedup {speedup:.2f}x < 3x"
+    # the optimizer's hard contract is the AAP (bandwidth/energy) total —
+    # modeled makespan may trade a few % of bus time for shared planes,
+    # so it is reported (opt_speedup) and perf-gated, not asserted
+    assert rep.total_aaps <= rep8u.total_aaps, \
+        f"optimizer emitted more AAPs: {rep.total_aaps} > {rep8u.total_aaps}"
 
     p50, p99 = rep.latency_percentile_ns(50), rep.latency_percentile_ns(99)
     rows.append((
@@ -65,7 +82,8 @@ def run(spec: WorkloadSpec = WorkloadSpec()) -> list[Row]:
         f"hit_rate={hit_rate:.2f} plans={int(stats['plans_cached'])} "
         f"b1_ms={rep1.makespan_ns / 1e6:.3f} "
         f"b{N_BANKS}_ms={rep.makespan_ns / 1e6:.3f} "
-        f"bank_speedup={speedup:.1f}x bitwise_match=yes"))
+        f"bank_speedup={speedup:.1f}x opt_speedup={opt_speedup:.2f}x "
+        f"bitwise_match=yes"))
     jrows.append({
         "name": f"serve_qps/stream{spec.n_queries}",
         "bytes": stream_bytes,
@@ -75,6 +93,7 @@ def run(spec: WorkloadSpec = WorkloadSpec()) -> list[Row]:
         "p50_ns": p50,
         "p99_ns": p99,
         "plan_cache_hit_rate": hit_rate,
+        "opt_speedup": opt_speedup,
         "n_banks": N_BANKS,
         "energy_nj": stats["total_energy_nj"],
     })

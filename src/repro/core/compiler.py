@@ -511,3 +511,65 @@ def compile_expr_fused(expr: Expr, dst: str,
     20 -> 4), computing bit-identical results throughout.
     """
     return compile_expr(expr, dst, temp_prefix, fuse=True)
+
+
+# ---------------------------------------------------------------------------
+# Reordering / CSE hooks: DAG surgery primitives the cost-based optimizer
+# (`service.optimizer`) builds on. Pure structural helpers — no costs here.
+# ---------------------------------------------------------------------------
+
+#: the associative-commutative ops whose operand chains may be reordered
+#: without changing the computed value
+CHAIN_OPS = ("and", "or", "xor")
+
+
+def flatten_chain(e: Expr, op: str) -> List[Expr]:
+    """Operands of the maximal `op`-chain rooted at `e`, left to right.
+
+    `(a | b) | (c | d)` flattens to `[a, b, c, d]` for op="or"; a node of
+    a different op is its own single-element chain. Only valid for the
+    associative `CHAIN_OPS`.
+    """
+    if e.op != op:
+        return [e]
+    out: List[Expr] = []
+    for a in e.args:
+        out.extend(flatten_chain(a, op))
+    return out
+
+
+def rebuild_chain(op: str, operands: Sequence[Expr]) -> Expr:
+    """Left-deep `op`-tree over `operands` (inverse of `flatten_chain`)."""
+    if not operands:
+        raise ValueError(f"cannot rebuild an empty {op!r} chain")
+    e = operands[0]
+    for o in operands[1:]:
+        e = Expr(op, (e, o))
+    return e
+
+
+def iter_subexprs(e: Expr) -> List[Expr]:
+    """Every distinct sub-DAG of `e` (post-order, deduplicated by key).
+
+    The enumeration the cross-query CSE pass counts over: each structurally
+    distinct node appears exactly once even when the DAG shares it.
+    """
+    seen: Dict[Tuple, None] = {}
+    out: List[Expr] = []
+
+    def go(n: Expr):
+        k = expr_key(n)
+        if k in seen:
+            return
+        seen[k] = None
+        for a in n.args:
+            go(a)
+        out.append(n)
+
+    go(e)
+    return out
+
+
+def expr_size(e: Expr) -> int:
+    """Number of distinct interior (non-leaf) nodes in the DAG."""
+    return sum(1 for n in iter_subexprs(e) if n.op != "row")

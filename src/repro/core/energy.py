@@ -48,6 +48,34 @@ def program_energy_nj(prog: Program, model: EnergyModel = DEFAULT_ENERGY) -> flo
     return e
 
 
+def programs_energy_nj(progs, model: EnergyModel = DEFAULT_ENERGY):
+    """Batched `program_energy_nj` with a shared per-address memo.
+
+    `wordlines_raised` resolves the same B/T/DCC addresses for every
+    program in a plan batch; memoizing the per-ACTIVATE energy by address
+    makes costing a whole plan-group one dictionary walk per command. Used
+    by the cost-based optimizer (`service.optimizer`) and the optimizer
+    benchmark.
+    """
+    act_nj: Dict[str, float] = {}
+    out = []
+    for prog in progs:
+        e = 0.0
+        for op in prog.micro_ops():
+            if isinstance(op, Activate):
+                nj = act_nj.get(op.addr)
+                if nj is None:
+                    n_wl = wordlines_raised(op.addr)
+                    nj = model.e_activate_nj * (
+                        1.0 + model.extra_wordline_factor * (n_wl - 1))
+                    act_nj[op.addr] = nj
+                e += nj
+            else:
+                e += model.e_precharge_nj
+        out.append(e)
+    return out
+
+
 def buddy_energy_nj_per_kb(op: str, model: EnergyModel = DEFAULT_ENERGY) -> float:
     from repro.core import compiler
 

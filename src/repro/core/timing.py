@@ -54,6 +54,17 @@ def program_latency_ns(prog: Program, timing: DramTiming = DDR3_1600) -> float:
     return prog.n_aap * timing.aap_ns + prog.n_ap * timing.ap_ns
 
 
+def programs_latency_ns(progs, timing: DramTiming = DDR3_1600):
+    """Batched `program_latency_ns`: one cost query for a whole plan set.
+
+    The cost-based optimizer (`service.optimizer`) prices every candidate
+    of a plan-group batch in one call; the timing parameters are resolved
+    once instead of per program.
+    """
+    aap, ap = timing.aap_ns, timing.ap_ns
+    return [p.n_aap * aap + p.n_ap * ap for p in progs]
+
+
 def program_activates(prog: Program) -> int:
     return 2 * prog.n_aap + prog.n_ap
 

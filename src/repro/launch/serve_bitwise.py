@@ -8,6 +8,10 @@ the query stream through the batching scheduler, and prints per-batch QPS,
 p50/p99 modeled latency, plan-cache hit rate, and energy — the interactive
 serving loop the ROADMAP's "heavy traffic" north star grows from.
 
+``--explain`` prints the cost-based optimizer's plan report for the first
+batch: per-plan AAP counts (optimized vs as-written), chosen backend, and
+the cross-query shared subexpression planes.
+
 Telemetry (`repro.obs`): ``--telemetry`` turns on full query-lifecycle
 tracing and prints the metrics dashboard after the stream; ``--trace-out
 trace.json`` writes the Chrome trace-event timeline (open in Perfetto /
@@ -65,6 +69,10 @@ def main(argv=None):
     ap.add_argument("--verify", action="store_true",
                     help="also run the sequential unbatched reference and "
                          "assert bit-identical results")
+    ap.add_argument("--explain", action="store_true",
+                    help="print the optimizer's per-plan cost breakdown "
+                         "(backend choice, AAPs vs unoptimized, shared "
+                         "CSE planes) for the first batch")
     ap.add_argument("--telemetry", action="store_true",
                     help="full tracing + metrics dashboard")
     ap.add_argument("--trace-out", default=None, metavar="PATH",
@@ -87,6 +95,8 @@ def main(argv=None):
     for batch in range(args.batches):
         queries = query_stream(
             dataclasses.replace(spec, seed=spec.seed + batch), svc)
+        if args.explain and batch == 0:
+            print(svc.explain(queries))
         t0 = time.perf_counter()
         rep = svc.query_batch(queries)
         wall = time.perf_counter() - t0

@@ -1,20 +1,31 @@
-"""Bulk-bitwise query service: catalog, plan cache, batching scheduler.
+"""Bulk-bitwise query service: catalog, cost-based planner, scheduler.
 
 The serving layer above the paper's in-DRAM machine (ROADMAP north star:
 interactive query-shaped traffic over the bank group). Sub-modules:
 
   catalog    — named bitvectors placed into subarray rows (DramAllocator)
-  planner    — query text -> Expr -> fused AAP program, memoized by the
-               structural `expr_key` of the canonicalized DAG
-  scheduler  — batches concurrent queries, groups them by shared plan into
-               stacked bank-group dispatches, models latency/energy
+  planner    — the `parse -> canonicalize -> optimize -> cost -> bind`
+               front half: query text -> Expr -> fused AAP program,
+               memoized in a bounded LRU cache keyed by the structural
+               `expr_key` of the winning canonical DAG
+  optimizer  — the cost model (AAPs x timing x energy) driving predicate
+               reordering, per-plan backend choice, cross-query CSE, and
+               the `explain()` report
+  scheduler  — batches concurrent queries, runs the batch sharing pass,
+               groups by shared plan into stacked bank-group dispatches,
+               models latency/energy (shared work charged once)
   service    — the `QueryService` facade (register / query / materialize /
-               range_scan)
+               range_scan / explain)
   workload   — synthetic multi-tenant §8 query streams (bitmap analytics,
                BitWeaving scans, set algebra) for benchmarks and serving
 """
 from repro.service.catalog import (Catalog, CatalogEntry, CatalogError,
                                    plane_name)
+from repro.service.optimizer import (CostParams, CseBatch, CseExplain,
+                                     ExplainReport, PlanCost, PlanExplain,
+                                     QueryOptimizer, choose_backend,
+                                     cost_program, plan_group_cse,
+                                     reorder_expr)
 from repro.service.planner import (ArithQuery, BoundPlan, Plan, PlanCache,
                                    Planner, QueryParseError, canonicalize,
                                    parse_any, parse_query)
@@ -27,6 +38,9 @@ from repro.service.workload import WorkloadSpec, build_service, query_stream
 
 __all__ = [
     "Catalog", "CatalogEntry", "CatalogError", "plane_name",
+    "CostParams", "CseBatch", "CseExplain", "ExplainReport", "PlanCost",
+    "PlanExplain", "QueryOptimizer", "choose_backend", "cost_program",
+    "plan_group_cse", "reorder_expr",
     "ArithQuery", "BoundPlan", "Plan", "PlanCache", "Planner",
     "QueryParseError", "canonicalize", "parse_any", "parse_query",
     "AGGREGATE", "MATERIALIZE", "POPCOUNT", "BatchReport", "Query",

@@ -1,20 +1,28 @@
-"""Query planner: text -> Expr DAG -> fused AAP program, memoized.
+"""Query planner: parse -> canonicalize -> optimize -> cost -> bind.
 
 The planner turns a query string over catalog names (`"(mon | tue) & male"`)
 into a `core.compiler.Expr` DAG, *canonicalizes* the leaf names to
-positional inputs `IN0..INk`, and compiles the canonical DAG once with
-`compile_expr_fused`. Plans are memoized in a `PlanCache` keyed by the
-structural `expr_key` of the canonical DAG, so
+positional inputs `IN0..INk`, and runs the canonical DAG through the
+cost-based optimizer (`service.optimizer`): the plan cache compiles both
+the original and the cost-reordered candidate with `compile_expr_fused`
+and keeps whichever needs fewer AAPs — so the optimized pipeline can never
+emit more AAPs than the unoptimized one. Plans are memoized in a bounded
+LRU `PlanCache` keyed by the structural `expr_key` of the *winning*
+canonical DAG (a route table maps as-written keys to it), so
 
-  * the same query twice compiles once (hit counter-verified by tests), and
+  * the same query twice compiles once (hit counter-verified by tests),
   * structurally identical queries over *different* catalog vectors share
     one plan — e.g. every tenant's 7-way weekly OR-tree is one cached
     program, which is also what lets the scheduler batch them into one
     bank-group dispatch (the controller broadcasts a single AAP sequence;
-    each bank holds a different tenant's rows).
+    each bank holds a different tenant's rows), and
+  * operand-order variants (`c & (a|b)` vs `(b|a) & c`) converge on one
+    reordered shape and share that single compiled plan.
 
 A `Plan` carries the compiled program plus its derived costs: AAP count,
-per-row-block modeled latency (`core.timing`) and energy (`core.energy`).
+per-row-block modeled latency (`core.timing`) and energy (`core.energy`),
+the full `PlanCost` breakdown, and the backend the optimizer chose for
+dispatch (`interp` / `scan` / `pallas`).
 
 Beyond boolean queries, the grammar covers the bit-serial arithmetic layer
 (`core.arith_compiler`) over registered integer columns:
@@ -36,7 +44,9 @@ from __future__ import annotations
 
 import dataclasses
 import re
-from typing import Dict, List, Mapping, Optional, Tuple, Union
+from collections import OrderedDict
+from typing import (Container, Dict, List, Mapping, Optional, Tuple,
+                    Union)
 
 from repro.core import arith_compiler
 from repro.core import energy as energy_model
@@ -46,6 +56,7 @@ from repro.core.commands import Program
 from repro.core.compiler import (CompileResult, Expr, compile_expr_fused,
                                  expr_key)
 from repro.service.catalog import plane_name
+from repro.service.optimizer import PlanCost, QueryOptimizer
 
 DST = "OUT"
 _IN_PREFIX = "IN"
@@ -211,37 +222,77 @@ class ArithQuery:
 
 
 _NAME = r"[A-Za-z_][\w./:-]*"
-# `-` is a legal name character ("weekly-total" is ONE catalog name), so a
-# subtraction operator must be preceded by whitespace: `a - b` subtracts,
-# `a-b` stays a single hyphenated leaf. `+` is never a name char.
+# `-` is a legal name character ("weekly-total" is ONE catalog name). A
+# whitespace-preceded `-` always subtracts (`a - b`); a tight `a-b`
+# tokenizes as one hyphenated name and is disambiguated by longest-match
+# against the catalog (`_hyphen_sub`): a fully registered name stays a
+# boolean leaf, otherwise a split whose sides are both registered integer
+# columns reads as subtraction. `+` is never a name char.
 _OP = r"(?P<op>\+|(?<=\s)-)"
 _SUM_RE = re.compile(
     rf"^\s*sum\s*\(\s*(?P<a>{_NAME})\s*(?:{_OP}\s*(?P<b>{_NAME})\s*)?\)\s*$")
 _ADDSUB_RE = re.compile(
     rf"^\s*(?P<a>{_NAME})\s*{_OP}\s*(?P<b>{_NAME})\s*$")
+_BARE_NAME_RE = re.compile(rf"^{_NAME}$")
 
 
-def parse_any(text: str, columns: Optional[Mapping[str, int]] = None
+def _hyphen_sub(name: str, columns: Optional[Mapping[str, int]],
+                names: Optional[Container[str]]) -> Optional[ArithQuery]:
+    """Longest-match disambiguation of a tight hyphenated name.
+
+    A fully registered bitvector (`names`, usually the catalog) or column
+    name always wins — `weekly-total` stays ONE leaf even if `weekly` and
+    `total` happen to be columns. Otherwise try each `-` split point,
+    longest left operand first, and read `colA-colB` as subtraction when
+    both sides are registered integer columns.
+    """
+    if names is not None and name in names:
+        return None
+    if not columns or name in columns or "-" not in name:
+        return None
+    cuts = [i for i, ch in enumerate(name) if ch == "-"]
+    for i in reversed(cuts):
+        a, b = name[:i], name[i + 1:]
+        if a in columns and b in columns:
+            if columns[a] != columns[b]:
+                raise QueryParseError(
+                    f"width mismatch in {name!r}: {columns[a]} vs "
+                    f"{columns[b]}")
+            return ArithQuery("sub", (a, b), False)
+    return None
+
+
+def parse_any(text: str, columns: Optional[Mapping[str, int]] = None,
+              names: Optional[Container[str]] = None
               ) -> Union[Expr, ArithQuery]:
     """Parse either a boolean query or an arithmetic form.
 
     `sum(...)` is always arithmetic. A bare `a + b` / `a - b` is
     arithmetic only when both names are registered columns — names may
-    legally contain `-`, so `weekly-total` (one hyphenated catalog name)
-    stays a boolean leaf and never turns into a subtraction.
+    legally contain `-`, so `weekly-total` (one hyphenated catalog name,
+    checked against `names`) stays a boolean leaf; a tight `colA-colB`
+    that is NOT itself registered but splits into two registered columns
+    reads as subtraction (`_hyphen_sub` longest-match).
     """
     m = _SUM_RE.match(text)
     if m:
         a, op, b = m.group("a"), m.group("op"), m.group("b")
-        if not columns or a not in columns or (b and b not in columns):
-            raise QueryParseError(
-                f"sum() needs registered integer columns in {text!r}")
-        if op is None:
+        cols = columns or {}
+        if op is not None:
+            if a not in cols or b not in cols:
+                raise QueryParseError(
+                    f"sum() needs registered integer columns in {text!r}")
+            if cols[a] != cols[b]:
+                raise QueryParseError(
+                    f"width mismatch in {text!r}: {cols[a]} vs {cols[b]}")
+            return ArithQuery("add" if op == "+" else "sub", (a, b), True)
+        if a in cols:
             return ArithQuery("read", (a,), True)
-        if columns[a] != columns[b]:
-            raise QueryParseError(
-                f"width mismatch in {text!r}: {columns[a]} vs {columns[b]}")
-        return ArithQuery("add" if op == "+" else "sub", (a, b), True)
+        hy = _hyphen_sub(a, cols, names)
+        if hy is not None:
+            return ArithQuery(hy.op, hy.cols, True)
+        raise QueryParseError(
+            f"sum() needs registered integer columns in {text!r}")
     m = _ADDSUB_RE.match(text)
     if m and columns:
         a, op, b = m.group("a"), m.group("op"), m.group("b")
@@ -251,6 +302,11 @@ def parse_any(text: str, columns: Optional[Mapping[str, int]] = None
                     f"width mismatch in {text!r}: {columns[a]} vs "
                     f"{columns[b]}")
             return ArithQuery("add" if op == "+" else "sub", (a, b), False)
+    bare = text.strip()
+    if "-" in bare and _BARE_NAME_RE.match(bare):
+        hy = _hyphen_sub(bare, columns, names)
+        if hy is not None:
+            return hy
     return parse_query(text, columns)
 
 
@@ -307,6 +363,14 @@ class Plan:
     scan VM / Pallas megakernel with zero per-batch lowering work, and
     every plan lowered to the same (n_cmds, n_rows) shape shares one jitted
     executable.
+
+    The optimizer records its decisions here: `backend` is the per-plan
+    dispatch choice ("interp"/"scan"/"pallas"; None = scheduler default),
+    `cost` the full `PlanCost` breakdown, `n_aaps_unopt` what the
+    unoptimized pipeline would have spent (always >= `n_aaps` — the
+    original candidate competes in every compile-off), and `canon` the
+    winning canonical DAG (what the scheduler's cross-query CSE pass
+    rebinds; None for arithmetic plans, which it never rewrites).
     """
 
     key: Tuple                      # expr_key of the canonical DAG
@@ -317,6 +381,10 @@ class Plan:
     energy_nj_per_block: float
     outputs: Tuple[str, ...] = (DST,)
     lowered: Optional[lowering.LoweredProgram] = None
+    backend: Optional[str] = None
+    cost: Optional[PlanCost] = None
+    n_aaps_unopt: Optional[int] = None
+    canon: Optional[Expr] = None
 
     @property
     def n_aaps(self) -> int:
@@ -325,31 +393,52 @@ class Plan:
 
 @dataclasses.dataclass
 class PlanCache:
-    """expr_key -> Plan memo with hit/miss counters.
+    """Bounded LRU expr_key -> Plan memo, with the optimize/cost stages.
+
+    Two tables: `_plans` maps the *winning* canonical key to its compiled
+    `Plan` (bounded at `capacity`, LRU-evicted, `evictions`-counted), and
+    `_route` maps as-written canonical keys to (winner key, binding
+    permutation) so operand-order variants land on one shared plan without
+    recompiling. On a route miss the cache reorders the DAG through the
+    attached `QueryOptimizer`, compiles BOTH candidates, and keeps the one
+    with fewer AAPs — `compiles` counts these compile events (a structural
+    hit on the reordered key is a miss that compiles nothing).
 
     The legacy integer counters (`hits`/`misses`) are always maintained;
     when a `repro.obs.MetricsRegistry` is attached (`attach_metrics`, wired
-    by the scheduler from `QueryService(telemetry=...)`) every hit/miss
-    also lands on the registry's `plan_cache_{hits,misses}_total` counters
-    — the single stat surface `QueryService.stats()` reads.
+    by the scheduler from `QueryService(telemetry=...)`) every hit/miss/
+    eviction also lands on the registry's `plan_cache_{hits,misses,
+    evictions}_total` counters — the single stat surface
+    `QueryService.stats()` reads.
     """
 
     timing: timing_model.DramTiming = timing_model.DDR3_1600
     energy: energy_model.EnergyModel = energy_model.DEFAULT_ENERGY
+    optimizer: Optional[QueryOptimizer] = None
+    capacity: Optional[int] = 1024
 
     def __post_init__(self):
-        self._plans: Dict[Tuple, Plan] = {}
+        self._plans: "OrderedDict[Tuple, Plan]" = OrderedDict()
+        # as-written key -> (winner key, perm); new_bindings[i] =
+        # old_bindings[perm[i]]. Bounded at 4x capacity; stale entries
+        # (winner evicted) are dropped lazily on lookup.
+        self._route: "OrderedDict[Tuple, Tuple[Tuple, Tuple[int, ...]]]" \
+            = OrderedDict()
         self.hits = 0
         self.misses = 0
+        self.compiles = 0
+        self.evictions = 0
         from repro.obs.metrics import _NULL_INSTRUMENT
 
         self._m_hits = _NULL_INSTRUMENT
         self._m_misses = _NULL_INSTRUMENT
+        self._m_evictions = _NULL_INSTRUMENT
 
     def attach_metrics(self, registry) -> None:
-        """Mirror hit/miss counts onto `registry` from now on."""
+        """Mirror hit/miss/eviction counts onto `registry` from now on."""
         self._m_hits = registry.counter("plan_cache_hits_total")
         self._m_misses = registry.counter("plan_cache_misses_total")
+        self._m_evictions = registry.counter("plan_cache_evictions_total")
 
     def __len__(self) -> int:
         return len(self._plans)
@@ -359,17 +448,25 @@ class PlanCache:
         total = self.hits + self.misses
         return self.hits / total if total else 0.0
 
-    def lookup(self, canon: Expr) -> Tuple[Plan, bool]:
-        """Return (plan, was_hit); compiles and inserts on miss."""
-        key = expr_key(canon)
-        plan = self._plans.get(key)
-        if plan is not None:
-            self.hits += 1
-            self._m_hits.inc()
-            return plan, True
-        self.misses += 1
-        self._m_misses.inc()
-        result: CompileResult = compile_expr_fused(canon, DST)
+    def _insert(self, key: Tuple, plan: Plan) -> None:
+        self._plans[key] = plan
+        self._plans.move_to_end(key)
+        if self.capacity is not None:
+            while len(self._plans) > self.capacity:
+                self._plans.popitem(last=False)
+                self.evictions += 1
+                self._m_evictions.inc()
+
+    def _set_route(self, key0: Tuple, wkey: Tuple,
+                   perm: Tuple[int, ...]) -> None:
+        self._route[key0] = (wkey, perm)
+        self._route.move_to_end(key0)
+        if self.capacity is not None:
+            while len(self._route) > 4 * self.capacity:
+                self._route.popitem(last=False)
+
+    def _finish(self, canon: Expr, res: CompileResult, key: Tuple,
+                n_aaps_unopt: int) -> Plan:
         # n_inputs counts the *bound* canonical leaves, not the rows the
         # compiled program happens to activate: algebraic simplification can
         # eliminate a leaf entirely (`IN0 | (IN0 & IN1)` compiles to a copy
@@ -379,19 +476,82 @@ class PlanCache:
         # every leaf, so its leaf count == len(bindings) by construction
         # (asserted in BoundPlan).
         n_inputs = len(_canon_leaves(canon))
+        program = res.program
+        opt = self.optimizer
         plan = Plan(
             key=key,
-            program=result.program,
+            program=program,
             n_inputs=n_inputs,
-            n_temp_rows=result.n_temp_rows,
+            n_temp_rows=res.n_temp_rows,
             latency_ns_per_block=timing_model.program_latency_ns(
-                result.program, self.timing),
+                program, self.timing),
             energy_nj_per_block=energy_model.program_energy_nj(
-                result.program, self.energy),
-            lowered=lowering.lower(result.program),
+                program, self.energy),
+            lowered=lowering.lower(program),
+            backend=opt.backend(program) if opt is not None else None,
+            cost=(opt.cost(program, n_inputs, 1)
+                  if opt is not None else None),
+            n_aaps_unopt=n_aaps_unopt,
+            canon=canon,
         )
-        self._plans[key] = plan
-        return plan, False
+        self._insert(key, plan)
+        return plan
+
+    def lookup(self, canon: Expr) -> Tuple[Plan, bool, Tuple[int, ...]]:
+        """Return (plan, was_hit, perm); optimizes + compiles on miss.
+
+        `perm` maps the caller's first-visit bindings onto the winning
+        plan's canonical inputs: bind IN{i} to `bindings[perm[i]]`. The
+        reordered candidate can also *drop* leaves (XOR parity, chain
+        idempotence), in which case len(perm) < len(bindings).
+        """
+        key0 = expr_key(canon)
+        route = self._route.get(key0)
+        if route is not None:
+            wkey, perm = route
+            plan = self._plans.get(wkey)
+            if plan is not None:
+                self._plans.move_to_end(wkey)
+                self._route.move_to_end(key0)
+                self.hits += 1
+                self._m_hits.inc()
+                return plan, True, perm
+            del self._route[key0]       # stale: winner was evicted
+        self.misses += 1
+        self._m_misses.inc()
+        ident = tuple(range(len(_canon_leaves(canon))))
+        canon2, perm = canon, ident
+        opt = self.optimizer
+        if opt is not None:
+            re2 = opt.reorder(canon)
+            if expr_key(re2) != key0:
+                canon2, names2 = canonicalize(re2)
+                perm = tuple(int(n[len(_IN_PREFIX):]) for n in names2)
+        key2 = expr_key(canon2)
+        if key2 != key0:
+            plan = self._plans.get(key2)
+            if plan is not None:
+                # structural hit: the reordered shape is already compiled
+                # (an operand-order variant got here first) — a miss that
+                # costs no compile.
+                self._plans.move_to_end(key2)
+                self._set_route(key0, key2, perm)
+                return plan, False, perm
+        # Compile-off: the as-written candidate always competes, so the
+        # optimized pipeline can never emit more AAPs than the plain one.
+        self.compiles += 1
+        res1: CompileResult = compile_expr_fused(canon, DST)
+        wkey, wcanon, wres, wperm = key0, canon, res1, ident
+        if key2 != key0:
+            res2 = compile_expr_fused(canon2, DST)
+            if res2.program.n_aap <= res1.program.n_aap:
+                # ties go to the reordered shape: it is the convergent key
+                # that operand-order variants of this query also reach
+                wkey, wcanon, wres, wperm = key2, canon2, res2, perm
+        plan = self._finish(wcanon, wres, wkey,
+                            n_aaps_unopt=res1.program.n_aap)
+        self._set_route(key0, wkey, wperm)
+        return plan, False, wperm
 
     def lookup_arith(self, op: str, n_bits: int) -> Tuple[Plan, bool]:
         """Memoized arithmetic microprogram plan, keyed on (op, width).
@@ -405,11 +565,13 @@ class PlanCache:
         key = ("arith", op, n_bits)
         plan = self._plans.get(key)
         if plan is not None:
+            self._plans.move_to_end(key)
             self.hits += 1
             self._m_hits.inc()
             return plan, True
         self.misses += 1
         self._m_misses.inc()
+        self.compiles += 1
         if op == "read":
             res = arith_compiler.plane_readout_program(
                 n_bits, _IN_PREFIX, DST)
@@ -425,6 +587,7 @@ class PlanCache:
             n_inputs = 2 * n_bits
         else:
             raise ValueError(f"unknown arithmetic op {op!r}")
+        opt = self.optimizer
         plan = Plan(
             key=key,
             program=program,
@@ -436,8 +599,12 @@ class PlanCache:
                 program, self.energy),
             outputs=tuple(res.outputs),
             lowered=lowering.lower(program),
+            backend=opt.backend(program) if opt is not None else None,
+            cost=(opt.cost(program, n_inputs, len(res.outputs))
+                  if opt is not None else None),
+            n_aaps_unopt=program.n_aap,
         )
-        self._plans[key] = plan
+        self._insert(key, plan)
         return plan, False
 
 
@@ -481,25 +648,29 @@ class Planner:
 
     @property
     def compile_count(self) -> int:
-        """Compilations actually performed (== cache misses)."""
-        return self.cache.misses
+        """Compile events actually performed (<= cache misses: a miss
+        that structurally hits the reordered key compiles nothing)."""
+        return self.cache.compiles
 
     def plan(self, query: Union[str, Expr, ArithQuery],
-             columns: Optional[Mapping[str, int]] = None) -> BoundPlan:
+             columns: Optional[Mapping[str, int]] = None,
+             names: Optional[Container[str]] = None) -> BoundPlan:
         tel = self.telemetry
         if not tel.tracing:
-            return self._plan(query, columns)
+            return self._plan(query, columns, names)
         tr = tel.tracer
         with tr.span("plan"):
-            return self._plan(query, columns, tr)
+            return self._plan(query, columns, names, tr)
 
     def _plan(self, query: Union[str, Expr, ArithQuery],
               columns: Optional[Mapping[str, int]],
+              names: Optional[Container[str]] = None,
               tr=None) -> BoundPlan:
         if tr is not None:
             tr.begin("parse")
         if isinstance(query, str):
-            parsed: Union[Expr, ArithQuery] = parse_any(query, columns)
+            parsed: Union[Expr, ArithQuery] = parse_any(query, columns,
+                                                        names)
         else:
             parsed = query
         if tr is not None:
@@ -512,7 +683,11 @@ class Planner:
                 tr.instant("cache_hit" if bp.cache_hit else "cache_miss")
             return bp
         canon, bindings = canonicalize(parsed)
-        plan, hit = self.cache.lookup(canon)
+        plan, hit, perm = self.cache.lookup(canon)
+        # the winning plan's canonical input i binds the as-written
+        # query's perm[i]-th first-visit leaf (identity when the original
+        # candidate won; a reordering/leaf-dropping map otherwise)
+        bindings = [bindings[p] for p in perm]
         if tr is not None:
             tr.end()
             tr.instant("cache_hit" if hit else "cache_miss")

@@ -7,8 +7,19 @@ a batch's queries by their *canonical plan* — queries with the same program
 shape (every tenant's weekly OR-tree, every range scan of the same width)
 become one stacked dispatch where the "bank axis" is the query axis — and
 executes each group through the plan's cached `core.lowering.LoweredProgram`
-in a single VM dispatch (scan VM or Pallas megakernel, `backend=`): one
-constant-size executable per plan shape, one kernel launch per plan-group.
+in a single VM dispatch: one constant-size executable per plan shape, one
+kernel launch per plan-group. The dispatch backend is per plan — the
+cost-based optimizer records "interp"/"scan"/"pallas" on each `Plan`
+(`service.optimizer.choose_backend`), with `backend=` as the fallback
+default for plans that carry no choice.
+
+Before grouping, the batch runs the optimizer's cross-query sharing pass
+(`_apply_cse`): bound sub-DAGs appearing in >= 2 queries compile once into
+ephemeral `$cse{k}` planes, dispatched first, and consumers reference the
+plane as an input leaf — a RowClone-style copy on the modeled bus instead
+of recomputation. The pass keeps the rewrite only when it strictly lowers
+the batch's total AAPs, so `BatchReport.total_aaps <= baseline_aaps`
+always holds, and the modeled timeline charges shared work exactly once.
 
 Three result modes per query (paper §8 workloads + the arithmetic layer):
   * `popcount`  — COUNT(*) of the predicate bitvector (the bitcount stays
@@ -65,6 +76,9 @@ from repro.core.timing import DDR3_1600, DramTiming
 from repro.obs.telemetry import set_telemetry
 from repro.ops.popcount import popcount_words
 from repro.service.catalog import Catalog, plane_name
+from repro.service.optimizer import (CSE_PREFIX, CseBatch, CseExplain,
+                                     ExplainReport, PlanExplain, bind_expr,
+                                     plan_group_cse)
 from repro.service.planner import (DST, ArithQuery, BoundPlan, Plan, Planner,
                                    parse_any)
 
@@ -104,13 +118,23 @@ class QueryResult:
 
 @dataclasses.dataclass
 class BatchReport:
-    """Aggregate view of one scheduler batch."""
+    """Aggregate view of one scheduler batch.
+
+    `n_cse_planes` counts the batch's shared subexpression planes
+    (computed once, consumed by >= 2 queries); `total_aaps` is the
+    all-blocks modeled AAP spend including those defs, `baseline_aaps`
+    what the unoptimized pipeline (no reordering, no sharing) would have
+    spent — `total_aaps <= baseline_aaps` is an optimizer invariant.
+    """
 
     results: List[QueryResult]
     makespan_ns: float
     n_banks: int
     n_plan_groups: int
     n_chips: int = 1
+    n_cse_planes: int = 0
+    total_aaps: int = 0
+    baseline_aaps: int = 0
 
     @property
     def qps(self) -> float:
@@ -164,6 +188,7 @@ class Scheduler:
         self.total_modeled_ns = 0.0
         self.total_energy_nj = 0.0
         self.parity_checks = 0
+        self.cse_planes_built = 0
         self._group_seq = 0      # deterministic per-dispatch PRNG chain
         if self.telemetry is None:
             from repro.obs.telemetry import NULL_TELEMETRY
@@ -182,6 +207,7 @@ class Scheduler:
             self._m_energy = m.counter("modeled_energy_nj_total")
             self._m_modeled_ns = m.counter("modeled_ns_total")
             self._m_parity = m.counter("parity_checks_total")
+            self._m_cse = m.counter("cse_planes_total")
             self._m_lat = m.histogram("modeled_latency_ns")
             self._m_wall = m.histogram("batch_wall_us")
         if (self.reliability is not None
@@ -206,10 +232,18 @@ class Scheduler:
         # RowClone); arithmetic plans move one row per operand/result plane
         return self.timing.aap_ns * (plan.n_inputs + len(plan.outputs))
 
+    def _operand_words(self, name: str,
+                       cse_planes: Optional[Dict[str, jax.Array]]):
+        """A bound operand's packed words: catalog row or shared plane."""
+        if cse_planes is not None and name.startswith(CSE_PREFIX):
+            return cse_planes[name]
+        return self.catalog.get(name).words
+
     # -- functional execution ------------------------------------------------
 
     def _run_group(self, members: List[Tuple[int, BoundPlan]],
-                   need_words: bool
+                   need_words: bool,
+                   cse_planes: Optional[Dict[str, jax.Array]] = None
                    ) -> Tuple[Optional[np.ndarray], List[int], int]:
         """One stacked VM dispatch for all queries sharing a plan.
 
@@ -233,20 +267,29 @@ class Scheduler:
             return words, scalars, 1
         input_rows = [bp.input_map() for _, bp in members]
         data = {
-            name: jnp.stack([self.catalog.get(rows[name]).words
+            name: jnp.stack([self._operand_words(rows[name], cse_planes)
                              for rows in input_rows])
             for name in input_rows[0]
         }
         plan = members[0][1].plan
+        # per-plan backend choice recorded by the optimizer wins over the
+        # scheduler default (mitigated dispatch stays on the VM, where
+        # fault injection lives)
+        backend = plan.backend or self.backend
         rel = self.reliability
         replicas = 1
         if (rel is not None and rel.mode != "none"
                 and plan.lowered is not None):
             out, replicas = self._run_reliable(plan, data)
+        elif backend == "interp":
+            # degenerate 1-2 command programs: eager micro-op interpreter,
+            # a VM launch would cost more than the program
+            out = engine.execute(plan.program, data,
+                                 outputs=list(plan.outputs), lowered=False)
         elif plan.lowered is not None:
             out = lowering.execute_lowered(
                 plan.lowered, data, outputs=list(plan.outputs),
-                backend=self.backend)
+                backend=backend)
         else:   # plans built outside the cache fall back to the engine
             out = engine.execute(plan.program, data,
                                  outputs=list(plan.outputs),
@@ -304,7 +347,8 @@ class Scheduler:
         return out, replicas
 
     def _run_group_resilient(self, members: List[Tuple[int, BoundPlan]],
-                             need_words: bool
+                             need_words: bool,
+                             cse_planes: Optional[Dict[str, jax.Array]] = None
                              ) -> Tuple[Optional[np.ndarray], List[int], int]:
         """`_run_group` under the fault policy: timed, replayed, flagged.
 
@@ -327,7 +371,7 @@ class Scheduler:
             try:
                 if ft.failure_injector is not None:
                     ft.failure_injector(g)
-                out = self._run_group(members, need_words)
+                out = self._run_group(members, need_words, cse_planes)
             except Exception as e:  # noqa: BLE001 - any failure is replayable
                 ft.failures += 1
                 ft.timeline.append(f"failure@group{g}:{type(e).__name__}")
@@ -380,6 +424,10 @@ class Scheduler:
             for name in input_rows[0]
         }
         plan = members[0][1].plan
+        # shard_map dispatch needs a lowered VM: honor the optimizer's
+        # backend only when it is one ("interp" falls back to the default)
+        backend = (plan.backend
+                   if plan.backend in ("scan", "pallas") else self.backend)
         lp = plan.lowered
         if lp is None:      # plans built outside the cache lower here
             lp = lowering.lower(plan.program)
@@ -388,7 +436,7 @@ class Scheduler:
             # matrix crosses the chip boundary
             counts = cluster.popcounts(lp, data, plan.outputs,
                                        self.catalog.mask_shards(),
-                                       backend=self.backend)
+                                       backend=backend)
             return None, [sum(int(counts[j, s]) << j
                               for j in range(len(plan.outputs)))
                           for s in range(len(members))]
@@ -396,7 +444,7 @@ class Scheduler:
         # run ONCE and derive the counts from the gathered masked planes
         # (exactly as the single-process twin does)
         out = cluster.run_lowered(lp, data, plan.outputs,
-                                  backend=self.backend)
+                                  backend=backend)
         n_words = self.catalog.get(
             next(iter(input_rows[0].values()))).words.shape[0]
         mask = self.catalog.mask()
@@ -458,16 +506,40 @@ class Scheduler:
                     "catalog parity check failed: a registered vector's "
                     "words no longer match the maintained XOR parity plane")
 
-        # 1. plan every query through the cache (hits skip recompilation)
-        bound: List[BoundPlan] = []
+        # 1. plan every query through the cache (hits skip recompilation),
+        #    then run the batch-level sharing pass (cross-query CSE)
+        orig_bound: List[BoundPlan] = []
         if tracing:
             for i, q in enumerate(queries):
                 with tr.span("query", index=i, mode=q.mode):
-                    bound.append(self.planner.plan(
-                        q.query, columns=self.catalog.columns))
+                    orig_bound.append(self.planner.plan(
+                        q.query, columns=self.catalog.columns,
+                        names=self.catalog))
         else:
-            bound = [self.planner.plan(q.query, columns=self.catalog.columns)
-                     for q in queries]
+            orig_bound = [self.planner.plan(q.query,
+                                            columns=self.catalog.columns,
+                                            names=self.catalog)
+                          for q in queries]
+        bound, cse = self._apply_cse(queries, orig_bound)
+
+        # 1b. shared-subexpression planes execute first (topo order), ONE
+        #     dispatch each; consumers read them as input leaves below
+        cse_planes: Dict[str, jax.Array] = {}
+        if cse is not None:
+            for d in cse.defs:
+                if tracing:
+                    tr.begin("cse_group", plane=d.name, uses=d.uses,
+                             n_aaps=d.bound.plan.n_aaps)
+                    tr.begin("cse_dispatch")
+                stacked, _, _ = self._run_group([(0, d.bound)], True,
+                                                cse_planes)
+                cse_planes[d.name] = jnp.asarray(stacked[0][0])
+                if tracing:
+                    tr.end()    # cse_dispatch
+                    tr.end()    # cse_group
+            self.cse_planes_built += len(cse.defs)
+            if tel.metering:
+                self._m_cse.inc(len(cse.defs))
 
         # 2. group by canonical plan -> one stacked dispatch per group
         groups: Dict[Tuple, List[Tuple[int, BoundPlan]]] = {}
@@ -485,7 +557,8 @@ class Scheduler:
                 tr.begin("group", members=[idx for idx, _ in members],
                          n_aaps=members[0][1].plan.n_aaps)
                 tr.begin("dispatch")
-            stacked, scalars, replicas = dispatch(members, need_words)
+            stacked, scalars, replicas = dispatch(members, need_words,
+                                                  cse_planes)
             if tracing:
                 tr.end()
                 tr.begin("readout")
@@ -504,64 +577,59 @@ class Scheduler:
                 tr.end()    # readout
                 tr.end()    # group
 
-        # 3. modeled timeline: queries placed on least-loaded (chip, bank)
-        #    slots; operand transfers serialize on each chip's own internal
-        #    bus, compute overlaps across banks, chips are fully parallel.
-        #    Aggregate readout of a multi-chip query pays the reduction
-        #    tree (ceil(log2 chips) serialized hops) on top — with one
-        #    chip this degenerates to exactly the pre-cluster model.
+        # 3. modeled timeline (`_place_batch`): shared planes first, then
+        #    queries on least-loaded (chip, bank) slots; a consumer cannot
+        #    start before the planes it reads are ready, and shared work
+        #    is placed — charged — exactly once.
         n_chips = self.cluster.n_chips if self.cluster is not None else 1
-        reduce_ns = (math.ceil(math.log2(n_chips)) * self.timing.aap_ns
-                     if n_chips > 1 else 0.0)
         n_blocks = self._n_blocks
-        bus_free = [0.0] * n_chips
-        bank_free = [[0.0] * self.n_banks for _ in range(n_chips)]
+        placements, makespan = self._place_batch(
+            bound, cse, replicas_by_idx, tr if tracing else None)
+        # defs are real AAPs/energy, but shared: charge them once, to the
+        # first consuming query's accounting, so the batch energy total
+        # stays the sum of per-result energies
+        def_aaps = (sum(d.bound.plan.n_aaps for d in cse.defs)
+                    if cse is not None else 0)
+        def_energy = (sum(d.bound.plan.energy_nj_per_block
+                          for d in cse.defs) * n_blocks
+                      if cse is not None else 0.0)
+        first_consumer: Optional[int] = None
+        if cse is not None:
+            for idx, bp in enumerate(bound):
+                if any(n.startswith(CSE_PREFIX) for n in bp.bindings):
+                    first_consumer = idx
+                    break
         results: List[QueryResult] = []
         for idx, (q, bp) in enumerate(zip(queries, bound)):
-            c, b = min(((ci, bi) for ci in range(n_chips)
-                        for bi in range(self.n_banks)),
-                       key=lambda cb: bank_free[cb[0]][cb[1]])
-            xfer = self._xfer_ns(bp.plan)
-            # mitigation overhead is charged where it runs: a k-replica
-            # dispatch repeats the in-bank AAP compute k times (operands
-            # are already placed, so transfers are NOT repeated) and a
-            # voted readout adds one maj-AAP per output plane
+            c, b, lat = placements[idx]
             replicas = replicas_by_idx.get(idx, 1)
-            vote_ns = (len(bp.plan.outputs) * self.timing.aap_ns
-                       if replicas > 1 else 0.0)
-            for _ in range(n_blocks):
-                start = max(bus_free[c], bank_free[c][b])
-                bus_free[c] = start + xfer
-                bank_free[c][b] = (bus_free[c]
-                                   + bp.plan.latency_ns_per_block * replicas
-                                   + vote_ns)
-                if tracing:
-                    tr.model_event("xfer", start, xfer, f"chip{c}/bus",
-                                   q=idx)
-                    tr.model_event("compute", bus_free[c],
-                                   bank_free[c][b] - bus_free[c],
-                                   f"chip{c}/bank{b}", q=idx)
             energy = bp.plan.energy_nj_per_block * n_blocks * replicas
+            extra_aaps = 0
+            if idx == first_consumer:
+                energy += def_energy
+                extra_aaps = def_aaps
             value: Union[int, np.ndarray]
             if q.mode == MATERIALIZE:
                 value = words_by_idx[idx]
             else:   # popcount / aggregate: the weighted-popcount scalar
                 value = count_by_idx[idx]
-            lat = bank_free[c][b] + reduce_ns
             results.append(QueryResult(
                 index=idx, mode=q.mode, value=value,
                 latency_ns=lat, bank=b,
-                cache_hit=bp.cache_hit, n_aaps=bp.plan.n_aaps,
+                cache_hit=orig_bound[idx].cache_hit,
+                n_aaps=bp.plan.n_aaps,
                 energy_nj=energy, tenant=q.tenant, chip=c))
             if tracing:
                 tr.model_event(f"q{idx}", 0.0, lat, "queries",
                                latency_ns=lat, n_aaps=bp.plan.n_aaps,
-                               cache_hit=bp.cache_hit, energy_nj=energy,
+                               cache_hit=orig_bound[idx].cache_hit,
+                               energy_nj=energy,
                                mode=q.mode, tenant=q.tenant)
             if tel.metering:
                 self._m_queries.inc()
                 self._m_lat.observe(lat)
-                self._m_aaps.inc(bp.plan.n_aaps * n_blocks * replicas)
+                self._m_aaps.inc((bp.plan.n_aaps + extra_aaps)
+                                 * n_blocks * replicas)
                 self._m_energy.inc(energy)
                 if q.tenant is not None:
                     m = tel.metrics
@@ -572,11 +640,11 @@ class Scheduler:
                     m.counter("tenant_energy_nj_total",
                               tenant=q.tenant).inc(energy)
 
-        makespan = max(max(per_chip) for per_chip in bank_free) + reduce_ns
         if tracing and n_chips > 1:
             # the chip-axis tree psum: ceil(log2 chips) serialized hops
             # after the last bank completes (recursive doubling,
             # `core.cluster.tree_psum`)
+            reduce_ns = math.ceil(math.log2(n_chips)) * self.timing.aap_ns
             base = makespan - reduce_ns
             for h in range(int(math.ceil(math.log2(n_chips)))):
                 tr.model_event("psum_hop", base + h * self.timing.aap_ns,
@@ -584,8 +652,174 @@ class Scheduler:
         self.queries_served += len(queries)
         self.total_modeled_ns += makespan
         self.total_energy_nj += sum(r.energy_nj for r in results)
-        return BatchReport(results, makespan, self.n_banks, len(groups),
-                           n_chips=n_chips)
+        return BatchReport(
+            results, makespan, self.n_banks, len(groups), n_chips=n_chips,
+            n_cse_planes=(len(cse.defs) if cse is not None else 0),
+            total_aaps=n_blocks * (def_aaps
+                                   + sum(bp.plan.n_aaps for bp in bound)),
+            baseline_aaps=n_blocks * sum(
+                (bp.plan.n_aaps_unopt if bp.plan.n_aaps_unopt is not None
+                 else bp.plan.n_aaps) for bp in orig_bound))
+
+    # -- optimize: batch-level sharing + modeled placement -------------------
+
+    def _apply_cse(self, queries: Sequence[Query],
+                   orig_bound: List[BoundPlan]
+                   ) -> Tuple[List[BoundPlan], Optional[CseBatch]]:
+        """The cross-query sharing pass, where this deployment allows it.
+
+        Single-process clean path only: sharded dispatch would have to
+        ship planes between chips, mitigated dispatch repeats programs
+        whole (a shared plane would be voted once but consumed k times),
+        and the fault-tolerance chaos suite counts group dispatches. The
+        pass itself guarantees the rewrite is kept only when it strictly
+        lowers the batch's total AAPs (`optimizer.plan_group_cse`).
+        """
+        opt = getattr(self.planner.cache, "optimizer", None)
+        if (opt is None or not opt.enable_cse or len(queries) < 2
+                or self.cluster is not None
+                or self.fault_tolerance is not None
+                or (self.reliability is not None
+                    and self.reliability.mode != "none")):
+            return orig_bound, None
+        exprs = [
+            (bind_expr(bp.plan.canon, bp.input_map())
+             if bp.plan.canon is not None and bp.plan.outputs == (DST,)
+             else None)
+            for bp in orig_bound
+        ]
+        cse = plan_group_cse(orig_bound, exprs,
+                             lambda e: self.planner._plan(e, None))
+        if cse is None:
+            return orig_bound, None
+        return cse.bound, cse
+
+    def _place_batch(self, bound: Sequence[BoundPlan],
+                     cse: Optional[CseBatch],
+                     replicas_by_idx: Dict[int, int],
+                     tr=None) -> Tuple[List[Tuple[int, int, float]], float]:
+        """Modeled timeline placement for one batch (no execution).
+
+        Shared-plane defs place first (dependency-ordered), then every
+        query lands on the least-loaded (chip, bank); operand transfers
+        serialize on each chip's own internal bus, per-bank AAP compute
+        overlaps across banks, chips are fully parallel, and a consumer
+        cannot start a block before every shared plane it reads is ready.
+        Returns (per-query [(chip, bank, latency_ns)], makespan_ns).
+        Multi-chip aggregate readout adds the psum reduction tree
+        (ceil(log2 chips) serialized hops); with one chip this
+        degenerates to exactly the pre-cluster model.
+        """
+        n_chips = self.cluster.n_chips if self.cluster is not None else 1
+        reduce_ns = (math.ceil(math.log2(n_chips)) * self.timing.aap_ns
+                     if n_chips > 1 else 0.0)
+        n_blocks = self._n_blocks
+        bus_free = [0.0] * n_chips
+        bank_free = [[0.0] * self.n_banks for _ in range(n_chips)]
+        cse_ready: Dict[str, float] = {}
+
+        def least_loaded() -> Tuple[int, int]:
+            return min(((ci, bi) for ci in range(n_chips)
+                        for bi in range(self.n_banks)),
+                       key=lambda cb: bank_free[cb[0]][cb[1]])
+
+        for d in (cse.defs if cse is not None else ()):
+            plan = d.bound.plan
+            deps = [n for n in d.bound.bindings if n.startswith(CSE_PREFIX)]
+            c, b = least_loaded()
+            xfer = self._xfer_ns(plan)
+            for _ in range(n_blocks):
+                dep = max((cse_ready[p] for p in deps), default=0.0)
+                start = max(bus_free[c], bank_free[c][b], dep)
+                bus_free[c] = start + xfer
+                bank_free[c][b] = bus_free[c] + plan.latency_ns_per_block
+                if tr is not None:
+                    tr.model_event("cse_xfer", start, xfer, f"chip{c}/bus",
+                                   plane=d.name)
+                    tr.model_event("cse_compute", bus_free[c],
+                                   plan.latency_ns_per_block,
+                                   f"chip{c}/bank{b}", plane=d.name)
+            cse_ready[d.name] = bank_free[c][b]
+
+        placements: List[Tuple[int, int, float]] = []
+        for idx, bp in enumerate(bound):
+            deps = [n for n in bp.bindings if n.startswith(CSE_PREFIX)]
+            c, b = least_loaded()
+            xfer = self._xfer_ns(bp.plan)
+            # mitigation overhead is charged where it runs: a k-replica
+            # dispatch repeats the in-bank AAP compute k times (operands
+            # are already placed, so transfers are NOT repeated) and a
+            # voted readout adds one maj-AAP per output plane
+            replicas = replicas_by_idx.get(idx, 1)
+            vote_ns = (len(bp.plan.outputs) * self.timing.aap_ns
+                       if replicas > 1 else 0.0)
+            for _ in range(n_blocks):
+                dep = max((cse_ready[p] for p in deps), default=0.0)
+                start = max(bus_free[c], bank_free[c][b], dep)
+                bus_free[c] = start + xfer
+                bank_free[c][b] = (bus_free[c]
+                                   + bp.plan.latency_ns_per_block * replicas
+                                   + vote_ns)
+                if tr is not None:
+                    tr.model_event("xfer", start, xfer, f"chip{c}/bus",
+                                   q=idx)
+                    tr.model_event("compute", bus_free[c],
+                                   bank_free[c][b] - bus_free[c],
+                                   f"chip{c}/bank{b}", q=idx)
+            placements.append((c, b, bank_free[c][b] + reduce_ns))
+        makespan = max(max(per_chip) for per_chip in bank_free) + reduce_ns
+        return placements, makespan
+
+    def explain(self, queries: Sequence[Union[Query, str]]) -> ExplainReport:
+        """Plan — but do not execute — a batch; report every decision.
+
+        Runs the full `parse -> canonicalize -> optimize -> cost -> bind`
+        pipeline plus the batch sharing pass and the modeled placement,
+        and returns the per-plan cost/backend breakdown and the
+        shared-subexpression report. Plans land in the cache (a later
+        `submit` of the same batch hits), but nothing is dispatched and
+        no serving counters move.
+        """
+        qs = [q if isinstance(q, Query) else Query(q) for q in queries]
+        orig_bound = [self.planner.plan(q.query,
+                                        columns=self.catalog.columns,
+                                        names=self.catalog)
+                      for q in qs]
+        bound, cse = self._apply_cse(qs, orig_bound)
+        placements, makespan = self._place_batch(bound, cse, {})
+        n_blocks = self._n_blocks
+        plans: List[PlanExplain] = []
+        for idx, (q, bp0, bp) in enumerate(zip(qs, orig_bound, bound)):
+            plans.append(PlanExplain(
+                index=idx, query=str(q.query),
+                backend=bp.plan.backend or self.backend,
+                cache_hit=bp0.cache_hit,
+                n_aaps=bp.plan.n_aaps,
+                n_aaps_unopt=(bp0.plan.n_aaps_unopt
+                              if bp0.plan.n_aaps_unopt is not None
+                              else bp0.plan.n_aaps),
+                latency_ns=bp.plan.latency_ns_per_block,
+                energy_nj=bp.plan.energy_nj_per_block,
+                xfer_ns=self._xfer_ns(bp.plan),
+                n_inputs=bp.plan.n_inputs,
+                shared=tuple(sorted({n for n in bp.bindings
+                                     if n.startswith(CSE_PREFIX)})),
+                rewritten=bp is not bp0))
+        cse_rows = [CseExplain(name=d.name, n_aaps=d.bound.plan.n_aaps,
+                               uses=d.uses)
+                    for d in (cse.defs if cse is not None else ())]
+        def_aaps = sum(r.n_aaps for r in cse_rows)
+        return ExplainReport(
+            plans=plans, cse=cse_rows,
+            n_plan_groups=len({bp.plan.key for bp in bound}),
+            total_aaps=n_blocks * (def_aaps
+                                   + sum(bp.plan.n_aaps for bp in bound)),
+            baseline_aaps=n_blocks * sum(
+                (bp.plan.n_aaps_unopt if bp.plan.n_aaps_unopt is not None
+                 else bp.plan.n_aaps) for bp in orig_bound),
+            makespan_ns=makespan, n_banks=self.n_banks,
+            n_chips=(self.cluster.n_chips
+                     if self.cluster is not None else 1))
 
 
 def results_bit_identical(a: Sequence[QueryResult],
@@ -635,7 +869,7 @@ def run_queries_unbatched(catalog: Catalog, queries: Sequence[Query],
     clock = 0.0
     results: List[QueryResult] = []
     for idx, q in enumerate(queries):
-        parsed = (parse_any(q.query, catalog.columns)
+        parsed = (parse_any(q.query, catalog.columns, catalog)
                   if isinstance(q.query, str) else q.query)
         if isinstance(parsed, ArithQuery):
             n_bits = catalog.columns[parsed.cols[0]]

@@ -11,10 +11,15 @@ Wires catalog -> planner/plan-cache -> batching scheduler into one object:
 Columns (BitWeaving-V layout) ride the same machinery: `register_column`
 places each vertical bit plane as a catalog vector, and `range_scan` lowers
 `lo <= v <= hi` to the fusable predicate DAG of `ops.predicate` so the scan
-executes as one minimized AAP program through the scheduler. The TPU fast
-path for the same predicate (`range_scan_fast`) dispatches the fused
-between-scan kernel via `ops.predicate.between_scan`; both paths return
-bit-identical result vectors (tests/test_service.py).
+executes as one minimized AAP program through the cost-based planning
+pipeline (`parse -> canonicalize -> optimize -> cost -> bind -> dispatch`,
+`service.optimizer`) — there is no dedicated fast-path branch anymore; the
+optimizer's compile-off re-derives the fused between-scan program, and the
+per-plan backend choice dispatches long scans to the megakernel on
+accelerator devices. `range_scan_fast` survives only as a deprecated
+alias. `explain()` reports every planning decision for a batch: per-plan
+cost breakdown, chosen backend, and the shared-subexpression report of the
+cross-query CSE pass.
 
 Registered columns also unlock the bit-serial arithmetic grammar
 (`core.arith_compiler` lowered through the planner/scheduler):
@@ -28,6 +33,7 @@ Registered columns also unlock the bit-serial arithmetic grammar
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Dict, Optional, Sequence, Union
 
 import jax
@@ -36,9 +42,11 @@ import numpy as np
 
 from repro.core.compiler import Expr
 from repro.core.timing import DDR3_1600, DramTiming
-from repro.ops.predicate import VerticalColumn, between_scan, range_scan_expr
+from repro.ops.predicate import VerticalColumn, range_scan_expr
 from repro.service.catalog import Catalog, CatalogEntry
-from repro.service.planner import Planner
+from repro.service.optimizer import (CostParams, ExplainReport,
+                                     QueryOptimizer)
+from repro.service.planner import PlanCache, Planner
 from repro.service.scheduler import (MATERIALIZE, POPCOUNT, BatchReport,
                                      Query, QueryResult, Scheduler)
 
@@ -80,6 +88,15 @@ class QueryService:
     #: `Telemetry()` for full query-lifecycle tracing + Chrome trace
     #: export, or `NULL_TELEMETRY` to turn everything off.
     telemetry: Optional["Telemetry"] = None  # noqa: F821
+    #: the cost-based optimizer (`service.optimizer`): predicate
+    #: reordering + compile-off, per-plan backend choice, and the batch
+    #: cross-query CSE pass. False = the plain pipeline (canonicalize,
+    #: compile, cache), the pre-optimizer behavior — benchmarks use it as
+    #: the baseline side of optimized-vs-unoptimized comparisons.
+    optimize: bool = True
+    #: plan cache LRU bound (None = unbounded, the pre-LRU behavior);
+    #: evictions are counted in `stats()["plan_cache_evictions"]`
+    plan_cache_capacity: Optional[int] = 1024
 
     def __post_init__(self):
         if self.telemetry is None:
@@ -87,7 +104,15 @@ class QueryService:
 
             self.telemetry = Telemetry(trace=False)
         self.catalog = Catalog()
-        self.planner = Planner()
+        optimizer = None
+        if self.optimize:
+            optimizer = QueryOptimizer(params=CostParams(
+                timing=self.timing, n_banks=self.n_banks,
+                n_chips=self.n_chips or 1))
+        self.optimizer = optimizer
+        self.planner = Planner(cache=PlanCache(
+            timing=self.timing, optimizer=optimizer,
+            capacity=self.plan_cache_capacity))
         self.cluster = None
         if self.n_chips is not None:
             from repro.core.cluster import ChipCluster
@@ -186,14 +211,42 @@ class QueryService:
     def range_scan(self, column: str, lo: int, hi: int,
                    mode: str = POPCOUNT,
                    tenant: Optional[str] = None) -> QueryResult:
-        """Serve lo <= column <= hi through the in-DRAM scheduler path."""
+        """Serve lo <= column <= hi through the general optimizer path.
+
+        The predicate DAG goes through the same cost-driven pipeline as
+        every other query: the compile-off picks the minimal fused
+        between-scan program (what the removed `range_scan_fast` branch
+        hard-coded) and the optimizer's backend choice dispatches long
+        scans to the megakernel on accelerator devices.
+        """
         return self.query(self.range_scan_query(column, lo, hi), mode, tenant)
 
     def range_scan_fast(self, column: str, lo: int, hi: int) -> np.ndarray:
-        """The same predicate on the fused TPU between-scan kernel path."""
-        col = self._columns[column]
-        bv = between_scan(col.planes, lo, hi, col.n_bits)
-        return np.asarray(bv & np.asarray(self.catalog.mask()))
+        """Deprecated alias of `range_scan(..., mode=MATERIALIZE)`.
+
+        The dedicated between-scan dispatch branch is gone — the general
+        optimizer pipeline re-derives the same minimal program (asserted
+        bit-for-bit and cost-for-cost by tests/test_optimizer.py), so this
+        wrapper only preserves the old call shape and return type.
+        """
+        warnings.warn(
+            "range_scan_fast is deprecated: the optimizer serves "
+            "range_scan through the general planning pipeline; use "
+            "range_scan(column, lo, hi, mode=MATERIALIZE)",
+            DeprecationWarning, stacklevel=2)
+        r = self.range_scan(column, lo, hi, mode=MATERIALIZE)
+        return np.asarray(r.value)
+
+    def explain(self, queries: Sequence[Union[Query, str]]) -> ExplainReport:
+        """Plan a batch without executing it; report every decision.
+
+        Returns the optimizer's `ExplainReport`: per-plan cost breakdown
+        (AAPs vs the unoptimized pipeline, modeled latency/energy/
+        transfers), the chosen backend per plan, the shared-subexpression
+        planes the batch would compute once, and the modeled makespan.
+        `print(svc.explain([...]))` renders the human-readable table.
+        """
+        return self.scheduler.explain(queries)
 
     # -- elastic deployment --------------------------------------------------
 
@@ -347,6 +400,9 @@ class QueryService:
                 "plan_cache_misses": int(
                     m.counter("plan_cache_misses_total").value),
                 "plan_cache_hit_rate": cache.hit_rate,
+                "plan_cache_evictions": int(
+                    m.counter("plan_cache_evictions_total").value),
+                "cse_planes": int(m.counter("cse_planes_total").value),
                 "compile_count": self.planner.compile_count,
                 "total_modeled_ns": m.counter("modeled_ns_total").value,
                 "total_energy_nj": m.counter(
@@ -376,6 +432,8 @@ class QueryService:
                 "plan_cache_hits": cache.hits,
                 "plan_cache_misses": cache.misses,
                 "plan_cache_hit_rate": cache.hit_rate,
+                "plan_cache_evictions": cache.evictions,
+                "cse_planes": self.scheduler.cse_planes_built,
                 "compile_count": self.planner.compile_count,
                 "total_modeled_ns": self.scheduler.total_modeled_ns,
                 "total_energy_nj": self.scheduler.total_energy_nj,

@@ -51,15 +51,16 @@ def _week_or(tenant: str, week: int) -> str:
 
 
 def build_service(spec: WorkloadSpec, n_banks: int = 8,
-                  telemetry=None) -> QueryService:
+                  telemetry=None, **kwargs) -> QueryService:
     """Populate a service catalog with every tenant's vectors.
 
     `telemetry` passes through to `QueryService` (a `repro.obs.Telemetry`
     or `NULL_TELEMETRY`; None keeps the service default of metrics-on /
-    tracing-off).
+    tracing-off), as do any extra keyword arguments — benchmarks use
+    `optimize=False` to build the unoptimized baseline side.
     """
     rng = np.random.default_rng(spec.seed)
-    svc = QueryService(n_banks=n_banks, telemetry=telemetry)
+    svc = QueryService(n_banks=n_banks, telemetry=telemetry, **kwargs)
     m = spec.domain_bits
     for t in range(spec.n_tenants):
         tenant = f"t{t}"

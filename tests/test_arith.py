@@ -182,20 +182,28 @@ def test_parse_any_arith_forms():
         parse_any("sum(a)", None)            # no column registry
 
 
-def test_hyphenated_names_stay_boolean():
-    """`weekly-total` is one catalog name, never a subtraction — even when
-    both halves happen to be registered columns."""
+def test_hyphenated_names_disambiguate_by_registration():
+    """Tight `a-b` is disambiguated by longest-match against the catalog:
+    a fully registered name stays ONE boolean leaf; an unregistered
+    hyphenation whose halves are both registered columns reads as
+    subtraction (the old parser mis-read the latter as a phantom leaf)."""
     from repro.core.compiler import Expr
 
     cols = {"weekly": 4, "total": 4}
-    e = parse_any("weekly-total", cols)
+    # registered name wins: one boolean leaf even over two column names
+    e = parse_any("weekly-total", cols, names={"weekly-total"})
     assert isinstance(e, Expr) and e.op == "row" and e.row == "weekly-total"
-    # whitespace before the minus opts into subtraction
+    # unregistered hyphenation over two registered columns: subtraction
+    assert parse_any("weekly-total", cols, names=set()) == \
+        ArithQuery("sub", ("weekly", "total"), False)
+    # whitespace before the minus always subtracts
     sub = parse_any("weekly - total", cols)
     assert sub == ArithQuery("sub", ("weekly", "total"), False)
-    # same rule inside sum(): sum(a-b) reads column "a-b"
+    # same rule inside sum()
     with pytest.raises(QueryParseError):
-        parse_any("sum(weekly-total)", cols)   # "weekly-total" unregistered
+        parse_any("sum(weekly-total)", cols, names={"weekly-total"})
+    assert parse_any("sum(weekly-total)", cols, names=set()) == \
+        ArithQuery("sub", ("weekly", "total"), True)
     assert parse_any("sum(weekly - total)", cols) == \
         ArithQuery("sub", ("weekly", "total"), True)
 

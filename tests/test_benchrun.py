@@ -137,6 +137,18 @@ def test_gate_on_committed_baselines_vs_themselves():
     assert compared > 0
 
 
+def test_optimizer_baseline_clears_aap_reduction_floor():
+    """Acceptance: the committed BENCH_optimizer.json shows >= 1.3x
+    modeled-AAP reduction on the high-overlap batch, and the optimizer
+    never emitted more AAPs than the plain pipeline on any row."""
+    rows = perf_gate.load_rows(REPO / "BENCH_optimizer.json")
+    overlap = [r for name, r in rows.items() if "overlap" in name]
+    assert overlap, "missing high-overlap rows"
+    assert all(r["aap_speedup"] >= 1.3 for r in overlap), overlap
+    assert all(r["total_aaps"] <= r["baseline_aaps"]
+               for r in rows.values()), rows
+
+
 def test_cluster_scaling_baseline_shows_modeled_scaling():
     """Acceptance: BENCH_cluster_scaling.json at the repo root carries the
     modeled cross-chip scaling rows the CI gate compares."""

@@ -1,0 +1,159 @@
+"""Property tests for the cost-based optimizer (ISSUE satellite):
+random Expr DAGs x catalog layouts must stay bit-identical to the
+unoptimized oracle, never cost more AAPs than the plain pipeline, and the
+cost model must be monotone in the command counts it prices."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.bitplane import unpack_bits
+from repro.core.compiler import Expr, compile_expr_fused
+from repro.service import (MATERIALIZE, CostParams, Query, QueryService,
+                           cost_program, run_queries_unbatched)
+
+LEAVES = ("a", "b", "c", "d")
+
+
+def _rand_expr(rng, depth=3):
+    """A random boolean DAG over LEAVES: and/or/xor/not/maj3."""
+    if depth <= 0 or rng.random() < 0.25:
+        return Expr.of(str(rng.choice(LEAVES)))
+    op = rng.choice(["and", "or", "xor", "not", "maj3"],
+                    p=[0.3, 0.3, 0.2, 0.1, 0.1])
+    if op == "not":
+        return ~_rand_expr(rng, depth - 1)
+    if op == "maj3":
+        return Expr("maj3", tuple(_rand_expr(rng, depth - 1)
+                                  for _ in range(3)))
+    a, b = _rand_expr(rng, depth - 1), _rand_expr(rng, depth - 1)
+    return Expr(op, (a, b))
+
+
+def _ref(e, env):
+    """Plain numpy bool evaluation of an Expr DAG."""
+    if e.op == "row":
+        return env[e.row]
+    vals = [_ref(a, env) for a in e.args]
+    if e.op == "and":
+        return vals[0] & vals[1]
+    if e.op == "or":
+        return vals[0] | vals[1]
+    if e.op == "xor":
+        return vals[0] ^ vals[1]
+    if e.op == "not":
+        return ~vals[0]
+    if e.op == "maj3":
+        a, b, c = vals
+        return (a & b) | (b & c) | (a & c)
+    raise AssertionError(e.op)
+
+
+def _service(rng, n_bits, n_banks):
+    svc = QueryService(n_banks=n_banks)
+    env = {}
+    for name in LEAVES:
+        env[name] = rng.random(n_bits) < 0.5
+        svc.register_bits(name, env[name])
+    return svc, env
+
+
+# layouts: sub-word, multi-word, and word-straddling domains x bank counts
+LAYOUTS = [(96, 2), (200, 8), (513, 4)]
+
+
+@pytest.mark.parametrize("n_bits,n_banks", LAYOUTS)
+def test_random_dags_bit_identical_and_never_more_aaps(n_bits, n_banks):
+    rng = np.random.default_rng(1000 + n_bits + n_banks)
+    svc, env = _service(rng, n_bits, n_banks)
+    exprs = [_rand_expr(rng) for _ in range(8)]
+    queries = [Query(e, MATERIALIZE) for e in exprs]
+    rep = svc.query_batch(queries)
+    ref = run_queries_unbatched(svc.catalog, queries)
+    for e, r, oracle in zip(exprs, rep.results, ref.results):
+        # optimized batch == unoptimized sequential interpreter oracle
+        np.testing.assert_array_equal(np.asarray(r.value),
+                                      np.asarray(oracle.value))
+        # and both == plain numpy semantics
+        np.testing.assert_array_equal(
+            np.asarray(unpack_bits(jnp.asarray(r.value), n_bits)),
+            _ref(e, env))
+    # never-more-AAPs, per plan and for the whole batch
+    for e in exprs:
+        bp = svc.planner.plan(e)
+        assert bp.plan.n_aaps <= bp.plan.n_aaps_unopt
+    assert rep.total_aaps <= rep.baseline_aaps
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_random_overlapping_batches_share_and_stay_identical(seed):
+    """High-overlap batches: a common random sub-DAG embedded in every
+    query. CSE may or may not fire (it must win the cost-off), but the
+    results are always bit-identical and never cost more."""
+    rng = np.random.default_rng(2000 + seed)
+    svc, env = _service(rng, 200, 8)
+    base = _rand_expr(rng, depth=2)
+    exprs = []
+    for _ in range(6):
+        other = _rand_expr(rng, depth=2)
+        op = rng.choice(["and", "or", "xor"])
+        exprs.append(Expr(str(op), (base, other)))
+    queries = [Query(e, MATERIALIZE) for e in exprs]
+    rep = svc.query_batch(queries)
+    ref = run_queries_unbatched(svc.catalog, queries)
+    for e, r, oracle in zip(exprs, rep.results, ref.results):
+        np.testing.assert_array_equal(np.asarray(r.value),
+                                      np.asarray(oracle.value))
+        np.testing.assert_array_equal(
+            np.asarray(unpack_bits(jnp.asarray(r.value), 200)),
+            _ref(e, env))
+    assert rep.total_aaps <= rep.baseline_aaps
+
+
+def test_optimized_vs_unoptimized_service_identical():
+    """The same random stream through optimize=True and optimize=False
+    services returns identical values (popcount mode exercises readout)."""
+    rng = np.random.default_rng(3)
+    exprs = [_rand_expr(rng) for _ in range(10)]
+    rng = np.random.default_rng(3)          # same data both sides
+    opt, _ = _service(rng, 200, 8)
+    rng = np.random.default_rng(3)
+    plain, _ = _service(rng, 200, 8)
+    plain_svc = QueryService(n_banks=8, optimize=False)
+    for name in LEAVES:
+        plain_svc.register_bits(
+            name, np.asarray(unpack_bits(
+                jnp.asarray(plain.catalog.get(name).words), 200)))
+    rep_opt = opt.query_batch([Query(e) for e in exprs])
+    rep_plain = plain_svc.query_batch([Query(e) for e in exprs])
+    assert ([r.value for r in rep_opt.results]
+            == [r.value for r in rep_plain.results])
+    assert rep_opt.total_aaps <= rep_plain.total_aaps
+
+
+def test_cost_model_monotone_in_command_counts():
+    """Componentwise monotonicity: a program with >= AAPs and >= APs never
+    prices below a smaller one, under every layout parameterization."""
+    rng = np.random.default_rng(4)
+    progs = [compile_expr_fused(_rand_expr(rng), "OUT").program
+             for _ in range(12)]
+    params = [CostParams(), CostParams(n_blocks=4),
+              CostParams(n_banks=16, n_chips=4)]
+    for ps in params:
+        costs = [cost_program(p, 2, 1, ps) for p in progs]
+        for p1, c1 in zip(progs, costs):
+            for p2, c2 in zip(progs, costs):
+                if p1.n_aap <= p2.n_aap and p1.n_ap <= p2.n_ap:
+                    assert c1.latency_ns <= c2.latency_ns
+                    assert c1.total_ns <= c2.total_ns
+                    assert c1.amortized_ns <= c2.amortized_ns
+    # block count scales the serial totals monotonically
+    prog = progs[0]
+    totals = [cost_program(prog, 2, 1,
+                           CostParams(n_blocks=b)).total_ns
+              for b in (1, 2, 4, 8)]
+    assert totals == sorted(totals) and totals[0] < totals[-1]
+    # more parallel slots never increase the amortized share
+    amort = [cost_program(prog, 2, 1,
+                          CostParams(n_banks=nb)).amortized_ns
+             for nb in (1, 2, 8, 64)]
+    assert amort == sorted(amort, reverse=True)
