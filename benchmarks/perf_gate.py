@@ -12,7 +12,10 @@ shared metric is compared with a tolerance band:
   * rows are only compared when their size/configuration fields
     (``bytes``, ``n_cmds``, ``n_chips``, ...) agree — CI smoke runs shrink
     operands, and comparing a 256 KB wall time against a committed 8 MB
-    baseline would be noise, so mismatched rows are reported as skipped
+    baseline would be noise, so mismatched rows are reported as skipped;
+    measured-bandwidth metrics (``*gbps`` / ``*hbm_frac``) are
+    additionally skipped when either row ran in Pallas interpret mode
+    (``interpret: true``) — off-TPU they measure the interpreter, not HBM
     (deterministic *modeled* rows keep full-size workloads even in smoke
     mode — see `benchmarks/cluster_scaling.py` — and are always compared);
   * a baseline row missing from the current run is a coverage regression
@@ -47,12 +50,18 @@ ROW_FAIL_RATIOS = {"obs_overhead/serve_disabled": 1.03}
 
 #: benches every CI run must produce (bare names, without BENCH_/.json)
 REQUIRED = ["fig9_throughput", "serve_qps", "optimizer",
-            "arith_throughput", "vm_dispatch", "cluster_scaling",
-            "reliability", "obs_overhead"]
+            "arith_throughput", "vm_dispatch", "vm_stream",
+            "cluster_scaling", "reliability", "obs_overhead"]
 
 #: configuration fields that must agree for metric comparison to be fair
 SIZE_KEYS = ("bytes", "row_words", "n_cmds", "n_rows", "n_banks",
-             "n_chips", "n_blocks", "n_bits", "n_values", "n_queries")
+             "n_chips", "n_blocks", "n_bits", "n_values", "n_queries",
+             "block_cols", "n_grid_blocks")
+
+#: metrics only meaningful on real hardware: measured-bandwidth numbers
+#: from a Pallas-interpret-mode run (row carries ``interpret: true``)
+#: reflect the interpreter, not HBM, and are never compared cross-run
+BANDWIDTH_KEYS = ("gbps", "hbm_frac")
 
 
 def _lower_better(key: str) -> bool:
@@ -60,7 +69,13 @@ def _lower_better(key: str) -> bool:
 
 
 def _higher_better(key: str) -> bool:
-    return key in ("gbps", "qps") or "speedup" in key or "hit_rate" in key
+    return (key in ("gbps", "qps") or "speedup" in key
+            or "hit_rate" in key
+            or any(key.endswith(s) for s in BANDWIDTH_KEYS))
+
+
+def _bandwidth(key: str) -> bool:
+    return any(key.endswith(s) for s in BANDWIDTH_KEYS)
 
 
 def load_payload(path: pathlib.Path) -> Tuple[Dict[str, dict], bool]:
@@ -90,9 +105,14 @@ def compare_rows(name: str, base: dict, cur: dict
     n = 0
     fail_ratio = ROW_FAIL_RATIOS.get(name, FAIL_RATIO)
     warn_ratio = min(WARN_RATIO, fail_ratio)
+    # mirror of the wall-row policy for measured bandwidth: a row produced
+    # in Pallas interpret mode measured the interpreter, not HBM
+    interp = bool(base.get("interpret")) or bool(cur.get("interpret"))
     for key in sorted(set(base) & set(cur)):
         b, c = base[key], cur[key]
         if not isinstance(b, (int, float)) or not isinstance(c, (int, float)):
+            continue
+        if interp and _bandwidth(key):
             continue
         if _lower_better(key):
             ratio = c / b if b > 0 else (1.0 if c <= 0 else float("inf"))

@@ -21,6 +21,7 @@ SECTIONS = [
     "optimizer",
     "arith_throughput",
     "vm_dispatch",
+    "vm_stream",
     "cluster_scaling",
     "reliability",
     "obs_overhead",

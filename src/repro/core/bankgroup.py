@@ -175,7 +175,9 @@ class BankGroup:
 
 def execute_banked(program: Program, data: RowState, n_banks: int,
                    outputs: Optional[List[str]] = None,
-                   lowered: bool = True, backend: str = "scan") -> RowState:
+                   lowered: bool = True, backend: str = "scan",
+                   reduce: Optional[str] = None,
+                   mask: Optional[jax.Array] = None) -> RowState:
     """Bank-parallel analog of `engine.execute`.
 
     Flat (..., W) operand rows are partitioned word-wise across `n_banks`
@@ -184,6 +186,14 @@ def execute_banked(program: Program, data: RowState, n_banks: int,
     vmapped interpreter with ``lowered=False``), and the requested output
     rows come back reassembled to their original width. Bit-identical to
     `engine.execute(program, data)` for every program and backend.
+
+    ``reduce="popcount"`` (lowered only) requests the fused count epilogue
+    instead: each output maps to its total popcount across all banks —
+    computed per bank inside the VM dispatch (in VMEM on the pallas
+    backend) and summed over the bank axis, so no output plane is ever
+    gathered. ``mask`` optionally ANDs a per-word ``(W,)`` mask first; the
+    word padding `shard_words` adds is always masked off, so programs that
+    drive pad words to 1 never miscount.
 
     Wall-span-traced when a tracing telemetry is installed process-wide
     (`repro.obs.set_telemetry`); the default no-op sink costs one branch.
@@ -194,17 +204,23 @@ def execute_banked(program: Program, data: RowState, n_banks: int,
                              n_aaps=program.n_aap, backend=backend,
                              lowered=lowered):
             return _execute_banked(program, data, n_banks, outputs,
-                                   lowered, backend)
-    return _execute_banked(program, data, n_banks, outputs, lowered, backend)
+                                   lowered, backend, reduce, mask)
+    return _execute_banked(program, data, n_banks, outputs, lowered, backend,
+                           reduce, mask)
 
 
 def _execute_banked(program: Program, data: RowState, n_banks: int,
                     outputs: Optional[List[str]],
-                    lowered: bool, backend: str) -> RowState:
+                    lowered: bool, backend: str,
+                    reduce: Optional[str] = None,
+                    mask: Optional[jax.Array] = None) -> RowState:
     n_words = next(iter(data.values())).shape[-1]
     sharded = {k: shard_words(jnp.asarray(v, jnp.uint32), n_banks)
                for k, v in data.items()}
     row_words = next(iter(sharded.values())).shape[-1]
+    if reduce is not None and not lowered:
+        raise ValueError("reduce= requires lowered=True (the fused count "
+                         "epilogue lives in the lowered VM dispatch)")
     if lowered:
         from repro.core import lowering
         from repro.core.engine import _check_outputs
@@ -213,6 +229,21 @@ def _execute_banked(program: Program, data: RowState, n_banks: int,
         if outputs is not None:
             _check_outputs(outputs, set(lp.row_names) | set(sharded),
                            program)
+        if reduce is not None:
+            # per-bank fused counts, then one sum over the bank axis —
+            # the pad words shard_words appended carry a zero mask
+            base = (jnp.full((n_words,), 0xFFFFFFFF, jnp.uint32)
+                    if mask is None else jnp.asarray(mask, jnp.uint32))
+            mask_sh = shard_words(base, n_banks)
+            counts = lowering.execute_lowered(
+                lp, sharded, row_words, outputs, backend=backend,
+                reduce="popcount", mask=mask_sh)
+            names = outputs if outputs is not None else list(counts)
+            totals = {k: counts[k].sum(axis=0) for k in names}
+            if reduce == "popcount":
+                return totals
+            return lowering.weight_counts(
+                jnp.stack([totals[k] for k in names]))
         out_rows = lowering.execute_lowered(lp, sharded, row_words, outputs,
                                             backend=backend)
         names = outputs if outputs is not None else list(out_rows)

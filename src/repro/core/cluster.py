@@ -50,7 +50,6 @@ from repro.core.engine import BuddyError, RowState, _check_outputs
 from repro.core.timing import DDR3_1600, DramTiming
 from repro.dist.sharding import CLUSTER_RULES, resolve_spec
 from repro.obs.telemetry import get_telemetry
-from repro.ops.popcount import popcount_words
 
 CHIP_AXIS = "chip"
 DEFAULT_PLACEMENT_CHIPS = 8
@@ -233,13 +232,18 @@ class ChipCluster:
             out_specs = (self.spec(out_ndim),) * len(out_names)
         else:
             def body(vals, mask):
-                # per-shard masked popcount, reduced by the chip-axis
-                # tree: (1, local_banks, ..., w) -> sum over the shard
-                # dims, keeping any inner batch (query) axes
+                # fused count epilogue: the VM dispatch popcounts each
+                # mask-ANDed output row in place (in VMEM on the pallas
+                # backend — no output plane reaches HBM), then the shard
+                # dims of (1, local_banks, ...) sum away and the chip
+                # axis tree-reduces, keeping any inner batch (query) axes
+                per_bank = lowering.execute_lowered(
+                    lp, dict(zip(in_names, vals)), row_words=local_words,
+                    outputs=list(out_names), backend=backend,
+                    reduce="popcount", mask=mask)
                 counts = []
-                for r in run_local(vals):
-                    c = popcount_words(r & mask, axis=-1)  # word axis
-                    c = c.sum(axis=(0, 1))                 # local slots
+                for o in out_names:
+                    c = per_bank[o].sum(axis=(0, 1))       # local slots
                     counts.append(tree_psum(c, CHIP_AXIS, self.n_chips))
                 return tuple(counts)
             specs = (in_specs, self.spec(mask_ndim))

@@ -450,10 +450,25 @@ def _layout(lp: LoweredProgram, data_names: Tuple[str, ...],
     return layout
 
 
+def weight_counts(counts: jax.Array) -> jax.Array:
+    """``sum_j 2**j * counts[j]`` over the leading plane axis, in float32.
+
+    The shared aggregate-mode weighting for fused-reduction dispatches
+    (x64 is off, so exact int64 shifts are unavailable in-jit; exact-big-
+    integer consumers weight ``reduce="popcount"`` counts host-side with
+    Python ints — see `service.scheduler`)."""
+    n_out = counts.shape[0]
+    weights = jnp.asarray([float(1 << j) for j in range(n_out)],
+                          jnp.float32).reshape(
+                              (n_out,) + (1,) * (counts.ndim - 1))
+    return jnp.sum(counts.astype(jnp.float32) * weights, axis=0)
+
+
 @functools.partial(jax.jit, static_argnames=(
-    "n_rows", "out_runs", "row_words", "batch", "backend", "fixed_idx"))
-def _dispatch(table, vals, fixed_vals=(), errors=None, *, n_rows, out_runs,
-              row_words, batch, backend, fixed_idx=()):
+    "n_rows", "out_runs", "row_words", "batch", "backend", "fixed_idx",
+    "reduce"))
+def _dispatch(table, vals, fixed_vals=(), errors=None, mask=None, *, n_rows,
+              out_runs, row_words, batch, backend, fixed_idx=(), reduce=None):
     """Plane build + VM run + output extraction as ONE compiled dispatch.
 
     The opcode table is a *traced* argument, so the compiled executable is
@@ -464,6 +479,14 @@ def _dispatch(table, vals, fixed_vals=(), errors=None, *, n_rows, out_runs,
     planes | zero tail], scan (or megakernel), slice the output runs.
     ``errors`` (also traced; None on the clean path) carries the
     per-command TRA fault masks of `core.errors` into the VM.
+
+    ``reduce`` (static) selects the fused count epilogue: instead of the
+    output rows, return their per-plane masked popcounts (``"popcount"``,
+    int32) or the float32 weighted sum (``"aggregate"``). On the pallas
+    backend the popcount runs INSIDE the megakernel (VMEM-accumulated, no
+    output-plane HBM writeback); the scan backend folds the identical
+    reduction into this same jitted dispatch. ``mask`` (traced; only with
+    a reduce mode) ANDs a per-word mask into every counted row.
     """
     shape = batch + (row_words,)
     tail = n_rows - N_RESERVED - len(vals)
@@ -480,20 +503,28 @@ def _dispatch(table, vals, fixed_vals=(), errors=None, *, n_rows, out_runs,
         from repro.kernels.vm import vm_megakernel
 
         out_idx = tuple(i for a, b in out_runs for i in range(a, b))
-        return vm_megakernel(table, plane, out_idx, errors=errors)
+        return vm_megakernel(table, plane, out_idx, errors=errors,
+                             reduce=reduce, mask=mask)
     if errors is None:
         out_plane, _ = jax.lax.scan(_vm_step, plane, table)
     else:
         out_plane, _ = jax.lax.scan(_vm_step_err, plane, (table, errors))
-    return jnp.concatenate([out_plane[a:b] for a, b in out_runs])
+    rows = jnp.concatenate([out_plane[a:b] for a, b in out_runs])
+    if reduce is None:
+        return rows
+    from repro.ops.popcount import popcount_words
+
+    counts = popcount_words(rows if mask is None else rows & mask, axis=-1)
+    return counts if reduce == "popcount" else weight_counts(counts)
 
 
 def execute_lowered(lp: LoweredProgram, data: Dict[str, jax.Array],
                     row_words: Optional[int] = None,
                     outputs: Optional[List[str]] = None,
                     backend: str = "scan",
-                    errors: Optional[jax.Array] = None
-                    ) -> Dict[str, jax.Array]:
+                    errors: Optional[jax.Array] = None,
+                    reduce: Optional[str] = None,
+                    mask: Optional[jax.Array] = None):
     """Run a lowered program over named rows; returns named rows.
 
     Mirrors `engine.execute`: rows the program references but ``data`` does
@@ -501,17 +532,34 @@ def execute_lowered(lp: LoweredProgram, data: Dict[str, jax.Array],
     touches pass through unchanged; with ``outputs=None`` the returned dict
     covers exactly the rows the interpreter would return. ``backend`` picks
     the `jax.lax.scan` VM (``"scan"``) or the Pallas megakernel
-    (``"pallas"``, `kernels.vm`), which loads the plane into VMEM once and
-    loops the command table on-chip. Either way the whole call — plane
-    build, program execution, output extraction — is one jitted dispatch.
+    (``"pallas"``, `kernels.vm`), which streams the plane through VMEM
+    block by block and loops the command table on-chip. Either way the
+    whole call — plane build, program execution, output extraction — is
+    one jitted dispatch.
 
     ``errors`` injects seeded TRA fault masks (`core.errors.error_planes`,
     shape ``(n_cmds, 4[, *batch], row_words)``) at compute time; masks are
     indexed by command position, so the `_Layout` row renumbering below
     never changes where a fault lands.
+
+    ``reduce`` requests the fused count epilogue instead of output rows:
+      * ``"popcount"`` — the dict maps each output name to its per-plane
+        int32 popcount (shape ``batch``); on the pallas backend the count
+        accumulates in VMEM inside the megakernel and NO output plane is
+        written to HBM.
+      * ``"aggregate"`` — returns (not a dict) the ``batch``-shaped
+        float32 ``sum_j 2**j * popcount(OUT_j)`` over the requested
+        outputs in order (`weight_counts`).
+    ``mask`` (reduce modes only) ANDs a per-word uint32 mask into every
+    counted row before popcounting — the catalog tail mask, or any shape
+    broadcastable against the output rows (e.g. per-bank mask shards).
     """
     if backend not in ("scan", "pallas"):
         raise ValueError(f"unknown lowered backend {backend!r}")
+    if reduce not in (None, "popcount", "aggregate"):
+        raise ValueError(f"unknown reduce mode {reduce!r}")
+    if mask is not None and reduce is None:
+        raise ValueError("mask= is only meaningful with a reduce mode")
     # the plane's batch shape is the broadcast of every row's batch shape
     # (right-aligned, like the interpreter's per-op jnp broadcasting):
     # batched operands may be (..., X, W) while other rows are (W,)
@@ -535,12 +583,25 @@ def execute_lowered(lp: LoweredProgram, data: Dict[str, jax.Array],
         tuple(jnp.asarray(data[k], jnp.uint32) for k in lay.val_names),
         tuple(jnp.asarray(data[n], jnp.uint32) for n in seeded_fixed),
         errors,
+        None if mask is None else jnp.asarray(mask, jnp.uint32),
         n_rows=lay.n_rows, out_runs=lay.out_runs,
         row_words=row_words, batch=batch, backend=backend,
-        fixed_idx=tuple(FIXED_ROWS.index(n) for n in seeded_fixed))
+        fixed_idx=tuple(FIXED_ROWS.index(n) for n in seeded_fixed),
+        reduce=reduce)
+    if reduce == "aggregate":
+        return out_rows                 # (batch,) float32 weighted sum
     result = {o: out_rows[k] for k, o in enumerate(lay.out_names)}
     passthrough = outputs if outputs is not None else data
     for name in passthrough:
         if name not in result and name in data:
-            result[name] = jnp.asarray(data[name], jnp.uint32)
+            row = jnp.asarray(data[name], jnp.uint32)
+            if reduce == "popcount":
+                # count passthrough rows the same way the VM epilogue
+                # counts written rows (rare: a requested output the
+                # program never writes)
+                from repro.ops.popcount import popcount_words
+
+                row = popcount_words(row if mask is None else row & mask,
+                                     axis=-1)
+            result[name] = row
     return result

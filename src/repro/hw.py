@@ -1,0 +1,12 @@
+"""Shared TPU peak-hardware constants (single source of truth).
+
+TPU v5e per-chip numbers (assignment-specified). Both the dry-run roofline
+analysis (`launch.roofline`) and the measured-bandwidth benchmark
+(`benchmarks/vm_stream.py`) price against these — deduplicating them here
+keeps the modeled and measured fractions-of-roofline on one denominator.
+"""
+from __future__ import annotations
+
+PEAK_FLOPS = 197e12          # bf16 FLOP/s
+HBM_BW = 819e9               # bytes/s
+ICI_BW = 50e9                # bytes/s/link

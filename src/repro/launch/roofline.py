@@ -23,11 +23,10 @@ import re
 from typing import Any, Dict, Optional
 
 from repro.configs.base import ModelConfig, ShapeConfig
-
-# TPU v5e per-chip constants (assignment-specified)
-PEAK_FLOPS = 197e12          # bf16
-HBM_BW = 819e9               # bytes/s
-ICI_BW = 50e9                # bytes/s/link
+# TPU v5e per-chip constants live in `repro.hw` (shared with the measured
+# bandwidth benchmark, benchmarks/vm_stream.py); re-exported here for
+# existing importers of roofline.PEAK_FLOPS et al.
+from repro.hw import HBM_BW, ICI_BW, PEAK_FLOPS  # noqa: F401
 
 _DTYPE_BYTES = {
     "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,

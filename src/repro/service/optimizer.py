@@ -225,14 +225,26 @@ _INTERP_MAX_CMDS = 2
 #: but only on accelerator devices; off-TPU it runs in interpret mode and
 #: would only slow the host down
 _PALLAS_MIN_CMDS = 48
+#: fused-reduction dispatches amortize sooner: the count epilogue runs in
+#: VMEM scratch and skips the output-plane HBM writeback entirely, so the
+#: launch overhead is recouped at roughly half the command count
+_PALLAS_MIN_CMDS_FUSED = 24
 
 
-def choose_backend(program: Program, device: str) -> str:
-    """Per-plan dispatch backend: "interp" | "scan" | "pallas"."""
+def choose_backend(program: Program, device: str,
+                   fused_reduce: bool = False) -> str:
+    """Per-plan dispatch backend: "interp" | "scan" | "pallas".
+
+    ``fused_reduce=True`` prices a count-only dispatch (the megakernel's
+    ``reduce=`` epilogue): the pallas threshold drops because the fused
+    path never writes output planes back to HBM. Tiny programs still go
+    to the interpreter — a popcount on the host beats any launch there.
+    """
     n_cmds = len(program.commands)
     if n_cmds <= _INTERP_MAX_CMDS:
         return "interp"
-    if device in ("tpu", "gpu") and n_cmds >= _PALLAS_MIN_CMDS:
+    floor = _PALLAS_MIN_CMDS_FUSED if fused_reduce else _PALLAS_MIN_CMDS
+    if device in ("tpu", "gpu") and n_cmds >= floor:
         return "pallas"
     return "scan"
 
@@ -266,8 +278,8 @@ class QueryOptimizer:
              n_outputs: int) -> PlanCost:
         return cost_program(program, n_inputs, n_outputs, self.params)
 
-    def backend(self, program: Program) -> str:
-        return choose_backend(program, self._device)
+    def backend(self, program: Program, fused_reduce: bool = False) -> str:
+        return choose_backend(program, self._device, fused_reduce)
 
 
 # ---------------------------------------------------------------------------

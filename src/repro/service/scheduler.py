@@ -278,6 +278,26 @@ class Scheduler:
         backend = plan.backend or self.backend
         rel = self.reliability
         replicas = 1
+        rel_clean = rel is None or rel.mode == "none"
+        if (not need_words and rel_clean and backend != "interp"
+                and plan.lowered is not None):
+            # count-only group: fused-reduction dispatch. The VM popcounts
+            # each tail-masked output plane inside the kernel (VMEM scratch
+            # on pallas — the planes never reach HBM) and only
+            # (n_outputs, n_queries) int32 counts cross to the host, where
+            # exact Python ints apply the 2**j aggregate weights.
+            opt = getattr(self.planner.cache, "optimizer", None)
+            if opt is not None:
+                backend = opt.backend(plan.program, fused_reduce=True)
+            counts = lowering.execute_lowered(
+                plan.lowered, data, outputs=list(plan.outputs),
+                backend=backend, reduce="popcount",
+                mask=self.catalog.mask())
+            cnp = np.asarray(jnp.stack([counts[o] for o in plan.outputs]))
+            scalars = [sum(int(cnp[j, s]) << j
+                           for j in range(len(plan.outputs)))
+                       for s in range(len(members))]
+            return None, scalars, 1
         if (rel is not None and rel.mode != "none"
                 and plan.lowered is not None):
             out, replicas = self._run_reliable(plan, data)

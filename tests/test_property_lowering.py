@@ -93,3 +93,96 @@ def test_lowered_banked_matches_interpreter(seed):
     for k in ref:
         np.testing.assert_array_equal(np.asarray(ref[k]),
                                       np.asarray(banked[k]), err_msg=k)
+
+
+# -- streamed multi-block megakernel ------------------------------------------
+#
+# The Pallas VM streams the plane HBM->VMEM in block_cols-wide grid blocks
+# and folds batch axes into the launch grid. 520 words at block_cols=128 is
+# 5 grid blocks (the last partial) — the properties below pin the streamed
+# path to the interpreter/scan oracle across batch layouts, with TRA error
+# injection, and through the fused count epilogue.
+
+STREAM_W = 520
+STREAM_BLOCK = 128
+_BATCHES = [(), (2,), (2, 2)]
+
+
+def _stream_setup(rng, batch):
+    program = _random_program(rng)
+    lp = lowering.lower(program)
+    data = {f"D{i}": rng.integers(0, 1 << 32, batch + (STREAM_W,),
+                                  dtype=np.uint32) for i in range(4)}
+    outs = [r for r in lp.writes if r != lowering.SINK]
+    return program, lp, data, outs
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=10, deadline=None)
+def test_streamed_megakernel_matches_oracle_across_batches(seed):
+    from repro.kernels.vm import run_megakernel
+
+    rng = np.random.default_rng(seed)
+    batch = _BATCHES[seed % len(_BATCHES)]
+    program, lp, data, outs = _stream_setup(rng, batch)
+    if not outs:
+        return
+    ref = engine.execute(program, data, outputs=outs, lowered=False)
+    plane = lowering.make_plane(lp, data, STREAM_W, batch=batch)
+    got = run_megakernel(lp, plane, tuple(outs), block_cols=STREAM_BLOCK)
+    for j, k in enumerate(outs):
+        np.testing.assert_array_equal(np.asarray(got[j]),
+                                      np.asarray(ref[k]), err_msg=k)
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=8, deadline=None)
+def test_streamed_megakernel_error_injection_matches_scan(seed):
+    """Identical seeded TRA fault masks -> bit-identical faulty state on
+    the scan VM and the multi-block streamed megakernel."""
+    import jax
+
+    from repro.core.errors import TRAErrorModel, error_planes
+    from repro.kernels.vm import run_megakernel
+
+    rng = np.random.default_rng(seed)
+    batch = _BATCHES[seed % len(_BATCHES)]
+    program, lp, data, outs = _stream_setup(rng, batch)
+    if not outs:
+        return
+    masks = error_planes(lp.table, jax.random.PRNGKey(seed), batch,
+                         STREAM_W, TRAErrorModel(p_flip=0.05))
+    faulty_scan = lowering.execute_lowered(lp, data, STREAM_W, outs,
+                                           backend="scan", errors=masks)
+    plane = lowering.make_plane(lp, data, STREAM_W, batch=batch)
+    got = run_megakernel(lp, plane, tuple(outs), block_cols=STREAM_BLOCK,
+                         errors=masks)
+    for j, k in enumerate(outs):
+        np.testing.assert_array_equal(np.asarray(got[j]),
+                                      np.asarray(faulty_scan[k]), err_msg=k)
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=10, deadline=None)
+def test_fused_popcount_equals_materialize_then_popcount(seed):
+    """reduce="popcount" / "aggregate" on the streamed kernel == popcount
+    of the materialized planes, for every random program and batch."""
+    from repro.kernels.vm import run_megakernel
+    from repro.ops.popcount import popcount_words
+
+    rng = np.random.default_rng(seed)
+    batch = _BATCHES[seed % len(_BATCHES)]
+    program, lp, data, outs = _stream_setup(rng, batch)
+    if not outs:
+        return
+    plane = lowering.make_plane(lp, data, STREAM_W, batch=batch)
+    rows = run_megakernel(lp, plane, tuple(outs), block_cols=STREAM_BLOCK)
+    counts = run_megakernel(lp, plane, tuple(outs),
+                            block_cols=STREAM_BLOCK, reduce="popcount")
+    ref = popcount_words(rows, axis=-1)
+    np.testing.assert_array_equal(np.asarray(counts), np.asarray(ref))
+    agg = run_megakernel(lp, plane, tuple(outs), block_cols=STREAM_BLOCK,
+                         reduce="aggregate")
+    want = sum(np.asarray(ref[j], np.float32) * float(1 << j)
+               for j in range(len(outs)))
+    np.testing.assert_allclose(np.asarray(agg), np.asarray(want), rtol=1e-6)
