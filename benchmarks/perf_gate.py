@@ -13,9 +13,11 @@ shared metric is compared with a tolerance band:
     (``bytes``, ``n_cmds``, ``n_chips``, ...) agree — CI smoke runs shrink
     operands, and comparing a 256 KB wall time against a committed 8 MB
     baseline would be noise, so mismatched rows are reported as skipped;
-    measured-bandwidth metrics (``*gbps`` / ``*hbm_frac``) are
-    additionally skipped when either row ran in Pallas interpret mode
-    (``interpret: true``) — off-TPU they measure the interpreter, not HBM
+    measured-bandwidth metrics (``*gbps`` / ``*hbm_frac``) and
+    wall-clock-derived metrics (``*wall_us`` / ``*wall_qps`` /
+    ``pipeline_speedup``) are additionally skipped when either row ran
+    in Pallas interpret mode (``interpret: true``) — off-TPU they
+    measure the interpreter, not HBM or real serving overlap
     (deterministic *modeled* rows keep full-size workloads even in smoke
     mode — see `benchmarks/cluster_scaling.py` — and are always compared);
   * a baseline row missing from the current run is a coverage regression
@@ -49,7 +51,7 @@ WARN_RATIO = 1.3
 ROW_FAIL_RATIOS = {"obs_overhead/serve_disabled": 1.03}
 
 #: benches every CI run must produce (bare names, without BENCH_/.json)
-REQUIRED = ["fig9_throughput", "serve_qps", "optimizer",
+REQUIRED = ["fig9_throughput", "serve_qps", "serve_loop", "optimizer",
             "arith_throughput", "vm_dispatch", "vm_stream",
             "cluster_scaling", "reliability", "obs_overhead"]
 
@@ -63,19 +65,31 @@ SIZE_KEYS = ("bytes", "row_words", "n_cmds", "n_rows", "n_banks",
 #: reflect the interpreter, not HBM, and are never compared cross-run
 BANDWIDTH_KEYS = ("gbps", "hbm_frac")
 
+#: wall-clock-derived metrics (as opposed to deterministic modeled-ns
+#: ones): from an interpret-mode run they time the Pallas interpreter on
+#: whatever CPU CI landed on, so — like bandwidth — they are only
+#: compared between real-hardware runs. ``*_wall_us`` spellings and the
+#: serving loop's wall-side throughput/pipelining numbers qualify;
+#: modeled ``qps`` / ``*_ns`` stay gated everywhere.
+WALL_KEYS = ("wall_us", "wall_qps", "pipeline_speedup")
+
 
 def _lower_better(key: str) -> bool:
     return key.endswith("_us") or key.endswith("_ns")
 
 
 def _higher_better(key: str) -> bool:
-    return (key in ("gbps", "qps") or "speedup" in key
+    return (key == "gbps" or key.endswith("qps") or "speedup" in key
             or "hit_rate" in key
             or any(key.endswith(s) for s in BANDWIDTH_KEYS))
 
 
 def _bandwidth(key: str) -> bool:
     return any(key.endswith(s) for s in BANDWIDTH_KEYS)
+
+
+def _wall(key: str) -> bool:
+    return any(key == s or key.endswith(s) for s in WALL_KEYS)
 
 
 def load_payload(path: pathlib.Path) -> Tuple[Dict[str, dict], bool]:
@@ -112,7 +126,7 @@ def compare_rows(name: str, base: dict, cur: dict
         b, c = base[key], cur[key]
         if not isinstance(b, (int, float)) or not isinstance(c, (int, float)):
             continue
-        if interp and _bandwidth(key):
+        if interp and (_bandwidth(key) or _wall(key)):
             continue
         if _lower_better(key):
             ratio = c / b if b > 0 else (1.0 if c <= 0 else float("inf"))

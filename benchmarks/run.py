@@ -18,6 +18,7 @@ SECTIONS = [
     "fig11_bitweaving",
     "fig12_setops",
     "serve_qps",
+    "serve_loop",
     "optimizer",
     "arith_throughput",
     "vm_dispatch",

@@ -1,0 +1,247 @@
+"""Continuous-serving benchmark: sustained QPS, SLO, pipelining.
+
+Replays seeded open-loop Poisson traces (`poisson_arrivals`, same tenant
+catalog as BENCH_serve_qps) through `service.server.ServingLoop` and
+reports:
+
+  * **saturation** — offered load far beyond capacity, no SLO: the loop's
+    sustained modeled QPS with full slot-packing ticks (the serving-side
+    throughput ceiling), plus mean tick occupancy;
+  * **rated load** — ~60% of saturation with the SLO armed: p99 sojourn
+    must land under the target with nothing shed (the "p99 under SLO at
+    rated load" acceptance row);
+  * **overload** — 3x rated with the same SLO: admission control sheds,
+    and the p99 of what *was served* still holds under the target;
+  * **open- vs closed-loop serving** — the same rated trace served
+    round-based (the closed-loop `query_batch` shape of
+    BENCH_serve_qps at equal resources: collect a capacity-sized round,
+    dispatch it only when the previous round has completed AND the
+    round's last query has arrived): the serving loop's greedy
+    slot-packing keeps the device busy with partial ticks, so its
+    sustained modeled QPS must be strictly above the closed-loop
+    baseline;
+  * **pipelining** — the rated trace replayed serially (plan tick N,
+    run tick N, plan tick N+1, ...) and pipelined (host planning of
+    tick N+1 overlapped with device execution of tick N); the wall-side
+    split is reported per mode.
+
+Bit-identity is asserted inline: every query served by the loop must
+match the sequential unbatched reference exactly.
+
+Modeled metrics (qps / p50_ns / p99_ns / occupancy / shed_frac /
+open_loop_speedup) are deterministic and perf-gated everywhere;
+wall-side metrics (``*wall_qps`` / ``pipeline_speedup``) carry the
+``interpret`` flag and are only gated between real-hardware runs — in
+Pallas interpret mode both pipeline stages are GIL-bound Python, so the
+overlap they measure is the interpreter's, not the host/device split
+(see benchmarks/perf_gate.py).
+
+Writes BENCH_serve_loop.json (machine-readable trajectory tracking).
+"""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import Row, emit, smoke_mode, write_bench_json
+from repro.kernels.common import use_interpret
+from repro.service import (SloConfig, WorkloadSpec, build_service,
+                           poisson_arrivals, results_bit_identical,
+                           run_queries_unbatched)
+
+N_BANKS = 8
+
+
+def _served_bit_identical(svc, arrivals, rep) -> None:
+    served = [r for r in rep.records if r.status == "served"]
+    ref = run_queries_unbatched(svc.catalog,
+                                [arrivals[r.index].query for r in served])
+    assert results_bit_identical([r.result for r in served], ref.results), \
+        "serving-loop results differ from sequential unbatched reference"
+
+
+def _replay(svc, arrivals, *, slo=None, depth=4, pipeline=True):
+    loop = svc.serve_loop(depth=depth, slo=slo, pipeline=pipeline)
+    t0 = time.perf_counter()
+    rep = loop.run_trace(arrivals)
+    wall_us = (time.perf_counter() - t0) * 1e6
+    return rep, wall_us
+
+
+def _closed_loop_qps(svc, arrivals, round_size):
+    """Round-based closed-loop serving of an open-loop trace, modeled.
+
+    The pre-loop serving shape at equal resources: queries accumulate
+    into capacity-sized rounds, and round k dispatches as one
+    `query_batch` only once round k-1 has completed AND the round's own
+    last query has arrived (a closed-loop server cannot see into the
+    future of its arrival stream). Returns (sustained modeled QPS,
+    results in stream order).
+    """
+    t_free = None
+    results = []
+    for i in range(0, len(arrivals), round_size):
+        chunk = arrivals[i:i + round_size]
+        ready = max(a.t_ns for a in chunk)
+        start = ready if t_free is None else max(t_free, ready)
+        rep = svc.query_batch([a.query for a in chunk])
+        t_free = start + rep.makespan_ns
+        results.extend(rep.results)
+    duration_ns = t_free - min(a.t_ns for a in arrivals)
+    return len(arrivals) / (duration_ns / 1e9), results
+
+
+def run(spec: WorkloadSpec = WorkloadSpec()) -> list[Row]:
+    if smoke_mode():
+        spec = WorkloadSpec(n_tenants=2, n_weeks=2, domain_bits=1 << 10,
+                            n_queries=64, seed=spec.seed)
+    n_arrivals = max(64, spec.n_queries)
+    interp = use_interpret()
+    rows: list[Row] = []
+    jrows: list[dict] = []
+
+    def fresh():
+        return build_service(spec, n_banks=N_BANKS)
+
+    # -- saturation: offered load >> capacity, no SLO ------------------------
+    svc = fresh()
+    sat_arrivals = poisson_arrivals(spec, svc, rate_qps=1e9,
+                                    n_arrivals=n_arrivals)
+    sat, _ = _replay(svc, sat_arrivals)
+    _served_bit_identical(svc, sat_arrivals, sat)
+    assert len(sat.shed) == 0, "no SLO, nothing may shed"
+    sat_qps = sat.sustained_qps
+    rows.append((
+        f"serve_loop/saturated{n_arrivals}", 0.0,
+        f"qps={sat_qps:.0f} ticks={len(sat.ticks)} "
+        f"occ={sat.occupancy_mean:.2f} "
+        f"p99_us={sat.sojourn_percentile_ns(99) / 1e3:.1f} "
+        f"bitwise_match=yes"))
+    jrows.append({
+        "name": f"serve_loop/saturated{n_arrivals}",
+        "n_queries": n_arrivals, "n_banks": N_BANKS,
+        "qps": sat_qps,
+        "occupancy": sat.occupancy_mean,
+        "modeled_ns": sat.duration_ns,
+        "interpret": interp,
+    })
+
+    # -- rated load: 60% of saturation, SLO armed ----------------------------
+    rated_qps = 0.6 * sat_qps
+    # calibrate the target from an unarmed rated-load probe: 3x its p99
+    # leaves headroom for estimation noise at rated load, yet sits low
+    # enough that the 3x-rated overload trace genuinely breaches it
+    svc = fresh()
+    rated_arrivals = poisson_arrivals(spec, svc, rate_qps=rated_qps,
+                                      n_arrivals=n_arrivals)
+    probe, _ = _replay(svc, rated_arrivals)
+    slo = SloConfig(p99_ns=max(3 * probe.sojourn_percentile_ns(99), 1e4))
+    svc = fresh()
+    rated, _ = _replay(svc, rated_arrivals, slo=slo)
+    _served_bit_identical(svc, rated_arrivals, rated)
+    p50, p99 = (rated.sojourn_percentile_ns(50),
+                rated.sojourn_percentile_ns(99))
+    assert rated.shed_frac == 0.0, \
+        f"rated load shed {rated.shed_frac:.2f} of the offered queries"
+    assert p99 <= slo.p99_ns, \
+        f"rated-load p99 {p99:.0f}ns breaches SLO {slo.p99_ns:.0f}ns"
+    rows.append((
+        f"serve_loop/rated{n_arrivals}", 0.0,
+        f"offered={rated_qps:.0f} served_qps={rated.sustained_qps:.0f} "
+        f"p50_us={p50 / 1e3:.1f} p99_us={p99 / 1e3:.1f} "
+        f"slo_us={slo.p99_ns / 1e3:.1f} shed=0 "
+        f"occ={rated.occupancy_mean:.2f} slo_ok=yes"))
+    jrows.append({
+        "name": f"serve_loop/rated{n_arrivals}",
+        "n_queries": n_arrivals, "n_banks": N_BANKS,
+        "qps": rated.sustained_qps,
+        "p50_ns": p50, "p99_ns": p99,
+        "slo_target_ns": slo.p99_ns,
+        "shed_frac": rated.shed_frac,
+        "occupancy": rated.occupancy_mean,
+        "interpret": interp,
+    })
+
+    # -- overload: 3x rated, same SLO — admission control must engage --------
+    svc = fresh()
+    over_arrivals = poisson_arrivals(spec, svc, rate_qps=3 * rated_qps,
+                                     n_arrivals=n_arrivals)
+    over, _ = _replay(svc, over_arrivals, slo=slo)
+    _served_bit_identical(svc, over_arrivals, over)
+    over_p99 = over.sojourn_percentile_ns(99)
+    assert over.shed_frac > 0.0, \
+        "3x-rated overload did not trip admission control"
+    assert over_p99 <= slo.p99_ns, \
+        f"overload p99-of-served {over_p99:.0f}ns breaches SLO: " \
+        "admission control failed to protect the served population"
+    rows.append((
+        f"serve_loop/overload{n_arrivals}", 0.0,
+        f"offered={3 * rated_qps:.0f} served_qps={over.sustained_qps:.0f} "
+        f"shed_frac={over.shed_frac:.2f} "
+        f"p99_us={over_p99 / 1e3:.1f} slo_ok=yes"))
+    jrows.append({
+        "name": f"serve_loop/overload{n_arrivals}",
+        "n_queries": n_arrivals, "n_banks": N_BANKS,
+        "qps": over.sustained_qps,
+        "p99_ns": over_p99,
+        "shed_frac": over.shed_frac,
+        "interpret": interp,
+    })
+
+    # -- open-loop slot-packing vs round-based closed-loop, modeled ----------
+    # equal resources: same service, same scheduler, same trace; the
+    # closed-loop side serves capacity-sized query_batch rounds (the
+    # BENCH_serve_qps shape), the loop packs partial ticks greedily
+    loop_qps = rated.sustained_qps
+    svc = fresh()
+    closed_qps, closed_results = _closed_loop_qps(
+        svc, rated_arrivals, round_size=N_BANKS * 4)
+    assert results_bit_identical(rated.results(), closed_results), \
+        "serving-loop results differ from closed-loop round results"
+    open_loop_speedup = loop_qps / closed_qps
+    assert loop_qps > closed_qps, \
+        f"serving loop {loop_qps:.0f} sustained qps not above the " \
+        f"closed-loop baseline {closed_qps:.0f} at equal resources"
+    rows.append((
+        f"serve_loop/vs_closed{n_arrivals}", 0.0,
+        f"loop_qps={loop_qps:.0f} closed_qps={closed_qps:.0f} "
+        f"open_loop_speedup={open_loop_speedup:.2f}x bitwise_match=yes"))
+    jrows.append({
+        "name": f"serve_loop/vs_closed{n_arrivals}",
+        "n_queries": n_arrivals, "n_banks": N_BANKS,
+        "qps": loop_qps,
+        "closed_qps": closed_qps,
+        "open_loop_speedup": open_loop_speedup,
+    })
+
+    # -- pipelined vs serial host planning, wall clock -----------------------
+    # reported, not asserted: in interpret mode both stages are GIL-bound
+    # Python, so the overlap is only meaningful on real hardware (the
+    # perf gate compares these keys between real-hardware runs only)
+    svc_s = fresh()
+    serial, serial_us = _replay(svc_s, rated_arrivals, pipeline=False)
+    svc_p = fresh()
+    piped, piped_us = _replay(svc_p, rated_arrivals, pipeline=True)
+    assert results_bit_identical(piped.results(), serial.results()), \
+        "pipelined loop results differ from serial loop results"
+    speedup = serial_us / piped_us
+    plan_ms = sum(t.plan_wall_us for t in piped.ticks) / 1e3
+    rows.append((
+        f"serve_loop/pipeline{n_arrivals}", piped_us,
+        f"serial_ms={serial_us / 1e3:.0f} piped_ms={piped_us / 1e3:.0f} "
+        f"speedup={speedup:.2f}x plan_ms={plan_ms:.0f} "
+        f"interpret={'yes' if interp else 'no'} bitwise_match=yes"))
+    jrows.append({
+        "name": f"serve_loop/pipeline{n_arrivals}",
+        "n_queries": n_arrivals, "n_banks": N_BANKS,
+        "pipeline_speedup": speedup,
+        "serial_wall_qps": len(serial.served) / (serial_us / 1e6),
+        "loop_wall_qps": len(piped.served) / (piped_us / 1e6),
+        "interpret": interp,
+    })
+
+    write_bench_json("serve_loop", jrows)
+    return rows
+
+
+if __name__ == "__main__":
+    emit(run(), header=True)

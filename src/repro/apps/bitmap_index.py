@@ -97,9 +97,9 @@ def build_query_service(db: UserDatabase, n_banks: int = 8):
     bitmap becomes `male`; all co-located in one allocator affinity group
     (they participate in every query together — §6.2.4 placement).
     """
-    from repro.service import QueryService
+    from repro.service import QueryService, ServiceConfig
 
-    svc = QueryService(n_banks=n_banks)
+    svc = QueryService(ServiceConfig(n_banks=n_banks))
     n_weeks = db.daily.shape[0]
     for w in range(n_weeks):
         for d in range(7):

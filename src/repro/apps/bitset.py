@@ -94,11 +94,12 @@ def setop_via_service(element_lists, domain: int, op: str = "intersection",
     """
     from repro.core.bitplane import BitVector
     from repro.ops.setops import BitSet
-    from repro.service import MATERIALIZE, QueryService
+    from repro.service import (MATERIALIZE, QueryService,
+                               ServiceConfig)
 
     sets = [BitSet.from_elements(jnp.asarray(e), domain)
             for e in element_lists]
-    svc = QueryService(n_banks=n_banks)
+    svc = QueryService(ServiceConfig(n_banks=n_banks))
     for i, s in enumerate(sets):
         svc.register(f"s{i}", s.bits, group="sets")
     names = [f"s{i}" for i in range(len(sets))]

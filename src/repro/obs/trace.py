@@ -119,6 +119,16 @@ class Tracer:
                             "tid": self._tid(MODEL_PID, track),
                             "args": args})
 
+    def counter_event(self, name: str, ts_ns: float, track: str,
+                      **values) -> None:
+        """A counter ("C") sample at modeled time: Chrome renders each
+        named series (queue depth, occupancy, ...) as a stacked area
+        chart over the timeline. Values must be numeric."""
+        self.events.append({"name": name, "ph": "C", "ts": ts_ns / 1e3,
+                            "pid": MODEL_PID,
+                            "tid": self._tid(MODEL_PID, track),
+                            "args": values})
+
     # -- export --------------------------------------------------------------
 
     def export(self) -> Json:
@@ -151,6 +161,10 @@ class NullTracer:
                     track: str, **args) -> None:
         pass
 
+    def counter_event(self, name: str, ts_ns: float, track: str,
+                      **values) -> None:
+        pass
+
     def export(self) -> Json:
         return {"traceEvents": [], "displayTimeUnit": "ms"}
 
@@ -176,7 +190,8 @@ def validate_chrome_trace(payload: Json) -> None:
 
     Enforced: a ``traceEvents`` list; every event has ``name``/``ph``/
     ``ts``/``pid``/``tid`` with numeric non-negative ``ts``; ``X`` events
-    carry a non-negative ``dur``; ``B``/``E`` events balance with LIFO
+    carry a non-negative ``dur``; ``C`` counter samples carry an args
+    dict of numeric series values; ``B``/``E`` events balance with LIFO
     discipline per ``(pid, tid)`` track. This is the schema test the
     acceptance criteria (and any trace consumer) rely on.
     """
@@ -195,6 +210,12 @@ def validate_chrome_trace(payload: Json) -> None:
         if ph == "X":
             if not isinstance(ev.get("dur"), (int, float)) or ev["dur"] < 0:
                 raise ValueError(f"X event {i} has bad dur: {ev}")
+        elif ph == "C":
+            args = ev.get("args")
+            if (not isinstance(args, dict) or not args
+                    or not all(isinstance(v, (int, float))
+                               for v in args.values())):
+                raise ValueError(f"C event {i} needs numeric args: {ev}")
         elif ph == "B":
             stacks[key] = stacks.get(key, 0) + 1
         elif ph == "E":

@@ -28,8 +28,8 @@ def between_scan(planes: jax.Array, lo: int, hi: int, n_bits: int,
     (vs the unfused reference, `kernels.ref.bitweaving_scan`, which walks
     the planes once per bound). Dispatches to the Pallas kernel for large
     columns and the jnp reference otherwise; bit-identical either way
-    (tests/test_ops.py). This is the service's range-scan fast path
-    (`repro.service.QueryService.range_scan_fast`).
+    (tests/test_ops.py). The service's `range_scan` re-derives this fused
+    program through the cost-based optimizer pipeline.
     """
     planes = jnp.asarray(planes, jnp.uint32)
     big = (planes.size >= _KERNEL_MIN // 32 if use_kernel is None

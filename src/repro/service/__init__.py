@@ -14,13 +14,22 @@ interactive query-shaped traffic over the bank group). Sub-modules:
   scheduler  — batches concurrent queries, runs the batch sharing pass,
                groups by shared plan into stacked bank-group dispatches,
                models latency/energy (shared work charged once)
-  service    — the `QueryService` facade (register / query / materialize /
-               range_scan / explain)
+  service    — the `QueryService` facade (register / submit / query /
+               materialize / range_scan / explain), configured by
+               `ServiceConfig`
+  server     — the continuous-serving runtime: `ServingLoop` packs
+               in-flight queries into scheduler ticks (double-buffered
+               plan/execute pipelining, DRR tenant fairness, SLO
+               admission control per `SloConfig`)
+  config     — `ServiceConfig` / `SloConfig` construction + policy knobs
   workload   — synthetic multi-tenant §8 query streams (bitmap analytics,
-               BitWeaving scans, set algebra) for benchmarks and serving
+               BitWeaving scans, set algebra) for benchmarks and serving;
+               closed-loop batches plus seeded open-loop Poisson traces
 """
 from repro.service.catalog import (Catalog, CatalogEntry, CatalogError,
                                    plane_name)
+from repro.service.config import (DEFER, OBSERVE, SHED, ServiceConfig,
+                                  SloConfig)
 from repro.service.optimizer import (CostParams, CseBatch, CseExplain,
                                      ExplainReport, PlanCost, PlanExplain,
                                      QueryOptimizer, choose_backend,
@@ -33,11 +42,18 @@ from repro.service.scheduler import (AGGREGATE, MATERIALIZE, POPCOUNT,
                                      BatchReport, Query, QueryResult,
                                      Scheduler, results_bit_identical,
                                      run_queries_unbatched)
+from repro.service.server import (Arrival, QueryHandle, QueryShedError,
+                                  ServeRecord, ServeReport, ServingLoop,
+                                  TickStats)
 from repro.service.service import QueryService
-from repro.service.workload import WorkloadSpec, build_service, query_stream
+from repro.service.workload import (WorkloadSpec, build_service,
+                                    poisson_arrivals, query_stream)
 
 __all__ = [
     "Catalog", "CatalogEntry", "CatalogError", "plane_name",
+    "DEFER", "OBSERVE", "SHED", "ServiceConfig", "SloConfig",
+    "Arrival", "QueryHandle", "QueryShedError", "ServeRecord",
+    "ServeReport", "ServingLoop", "TickStats",
     "CostParams", "CseBatch", "CseExplain", "ExplainReport", "PlanCost",
     "PlanExplain", "QueryOptimizer", "choose_backend", "cost_program",
     "plan_group_cse", "reorder_expr",
@@ -47,5 +63,5 @@ __all__ = [
     "QueryResult", "Scheduler", "results_bit_identical",
     "run_queries_unbatched",
     "QueryService",
-    "WorkloadSpec", "build_service", "query_stream",
+    "WorkloadSpec", "build_service", "poisson_arrivals", "query_stream",
 ]

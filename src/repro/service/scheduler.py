@@ -102,11 +102,23 @@ class Query:
 
 @dataclasses.dataclass
 class QueryResult:
-    """Outcome of one query: value + modeled cost accounting."""
+    """Outcome of one query: value + modeled cost accounting.
+
+    One canonical shape across the three result modes. `scalar` is always
+    populated — the weighted popcount sum_j 2**j * popcount(plane j),
+    which for boolean plans is exactly the predicate popcount — because
+    the grouped dispatch computes it for every group member anyway.
+    `planes` is the canonical packed view of a materialized result: a
+    ``(n_output_planes, n_words)`` uint32 array even for boolean plans
+    (which used to return a bare word vector, one of three historical
+    value shapes). `value` keeps the historical per-mode shape for
+    existing callers: popcount/aggregate int, boolean-materialize 1-D
+    words, arithmetic-materialize 2-D plane stack.
+    """
 
     index: int                    # position in the submitted batch
     mode: str
-    value: Union[int, np.ndarray]  # popcount int or packed uint32 words
+    value: Union[int, np.ndarray]  # legacy per-mode shape (see above)
     latency_ns: float             # modeled batch-epoch -> completion
     bank: int
     cache_hit: bool
@@ -114,6 +126,28 @@ class QueryResult:
     energy_nj: float
     tenant: Optional[str] = None
     chip: int = 0                 # distributed mode: serving chip
+    #: weighted-popcount scalar, populated for EVERY mode
+    scalar: Optional[int] = None
+
+    @property
+    def planes(self) -> np.ndarray:
+        """Canonical ``(n_output_planes, n_words)`` packed result."""
+        if self.mode != MATERIALIZE:
+            raise ValueError(
+                f"planes: {self.mode!r} query carries only the scalar; "
+                "run with mode=MATERIALIZE for packed planes")
+        v = np.asarray(self.value)
+        return v[None] if v.ndim == 1 else v
+
+    @property
+    def words(self) -> np.ndarray:
+        """Single-plane (boolean) materialized result as flat words."""
+        p = self.planes
+        if p.shape[0] != 1:
+            raise ValueError(
+                f"words: result has {p.shape[0]} planes (arithmetic "
+                "query); use .planes")
+        return p[0]
 
 
 @dataclasses.dataclass
@@ -481,13 +515,35 @@ class Scheduler:
 
     # -- the scheduler proper ------------------------------------------------
 
-    def submit(self, queries: Sequence[Query]) -> BatchReport:
-        """Plan, group, execute, and cost one batch of concurrent queries."""
+    def plan_queries(self, queries: Sequence[Query]) -> List[BoundPlan]:
+        """Host-side parse/plan/bind of a batch, no dispatch.
+
+        The serving loop's double-buffered tick pipeline runs this for
+        tick N+1 while tick N executes on device, then hands the bound
+        plans back through ``submit(queries, preplanned=...)`` so the
+        dispatch path skips planning entirely.
+        """
+        return [self.planner.plan(q.query, columns=self.catalog.columns,
+                                  names=self.catalog)
+                for q in queries]
+
+    def submit(self, queries: Sequence[Query],
+               preplanned: Optional[List[BoundPlan]] = None,
+               allow_cse: bool = True) -> BatchReport:
+        """Plan, group, execute, and cost one batch of concurrent queries.
+
+        ``preplanned`` (from `plan_queries`) skips the planning stage —
+        the serving loop plans tick N+1 on the host while tick N runs on
+        device. ``allow_cse=False`` additionally skips the batch-level
+        sharing pass: the CSE rewrite compiles ephemeral plans through
+        the shared planner cache, which the pipelined loop is using from
+        the other thread.
+        """
         if not queries:
             return BatchReport([], 0.0, self.n_banks, 0)
         tel = self.telemetry
         if not (tel.tracing or tel.metering):
-            return self._submit(queries, tel)
+            return self._submit(queries, tel, preplanned, allow_cse)
         wall0 = time.perf_counter()
         if tel.tracing:
             tr = tel.tracer
@@ -497,12 +553,12 @@ class Scheduler:
             prev = set_telemetry(tel)
             tr.begin("batch", n_queries=len(queries))
             try:
-                report = self._submit(queries, tel)
+                report = self._submit(queries, tel, preplanned, allow_cse)
             finally:
                 tr.end()
                 set_telemetry(prev)
         else:
-            report = self._submit(queries, tel)
+            report = self._submit(queries, tel, preplanned, allow_cse)
         if tel.metering:
             self._m_batches.inc()
             self._m_groups.inc(report.n_plan_groups)
@@ -511,7 +567,9 @@ class Scheduler:
         return report
 
     def _submit(self, queries: Sequence[Query],
-                tel: "Telemetry") -> BatchReport:  # noqa: F821
+                tel: "Telemetry",  # noqa: F821
+                preplanned: Optional[List[BoundPlan]] = None,
+                allow_cse: bool = True) -> BatchReport:
         tracing = tel.tracing
         tr = tel.tracer
         if self.reliability is not None and self.reliability.mode == "ecc":
@@ -529,7 +587,9 @@ class Scheduler:
         # 1. plan every query through the cache (hits skip recompilation),
         #    then run the batch-level sharing pass (cross-query CSE)
         orig_bound: List[BoundPlan] = []
-        if tracing:
+        if preplanned is not None:
+            orig_bound = list(preplanned)
+        elif tracing:
             for i, q in enumerate(queries):
                 with tr.span("query", index=i, mode=q.mode):
                     orig_bound.append(self.planner.plan(
@@ -540,7 +600,10 @@ class Scheduler:
                                             columns=self.catalog.columns,
                                             names=self.catalog)
                           for q in queries]
-        bound, cse = self._apply_cse(queries, orig_bound)
+        if allow_cse:
+            bound, cse = self._apply_cse(queries, orig_bound)
+        else:
+            bound, cse = orig_bound, None
 
         # 1b. shared-subexpression planes execute first (topo order), ONE
         #     dispatch each; consumers read them as input leaves below
@@ -638,7 +701,8 @@ class Scheduler:
                 latency_ns=lat, bank=b,
                 cache_hit=orig_bound[idx].cache_hit,
                 n_aaps=bp.plan.n_aaps,
-                energy_nj=energy, tenant=q.tenant, chip=c))
+                energy_nj=energy, tenant=q.tenant, chip=c,
+                scalar=count_by_idx[idx]))
             if tracing:
                 tr.model_event(f"q{idx}", 0.0, lat, "queries",
                                latency_ns=lat, n_aaps=bp.plan.n_aaps,
@@ -916,12 +980,10 @@ def run_queries_unbatched(catalog: Catalog, queries: Sequence[Query],
             planes = np.asarray(
                 jnp.stack([out[o] & mask for o in outputs]))
             n_leaves = len(data)
-            if q.mode == MATERIALIZE:
-                value = planes
-            else:
-                from repro.ops.arith import weighted_plane_sum
+            from repro.ops.arith import weighted_plane_sum
 
-                value = weighted_plane_sum(jnp.asarray(planes), mask)
+            scalar = int(weighted_plane_sum(jnp.asarray(planes), mask))
+            value = planes if q.mode == MATERIALIZE else scalar
         else:
             compiled = compile_expr_fused(parsed, DST)
             program, outputs = compiled.program, [DST]
@@ -930,10 +992,8 @@ def run_queries_unbatched(catalog: Catalog, queries: Sequence[Query],
                                  outputs=[DST], lowered=False)[DST]
             words = np.asarray(out & mask)
             n_leaves = len(leaves)
-            if q.mode == MATERIALIZE:
-                value = words
-            else:
-                value = int(popcount_words(jnp.asarray(words)))
+            scalar = int(popcount_words(jnp.asarray(words)))
+            value = words if q.mode == MATERIALIZE else scalar
         exec_ns = program_latency_ns(program, timing)
         xfer = timing.aap_ns * (n_leaves + len(outputs))
         clock += n_blocks * (xfer + exec_ns)
@@ -941,5 +1001,5 @@ def run_queries_unbatched(catalog: Catalog, queries: Sequence[Query],
             index=idx, mode=q.mode, value=value, latency_ns=clock, bank=0,
             cache_hit=False, n_aaps=program.n_aap,
             energy_nj=n_blocks * program_energy_nj(program, DEFAULT_ENERGY),
-            tenant=q.tenant))
+            tenant=q.tenant, scalar=scalar))
     return BatchReport(results, clock, 1, len(queries))

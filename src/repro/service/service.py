@@ -2,24 +2,39 @@
 
 Wires catalog -> planner/plan-cache -> batching scheduler into one object:
 
-    svc = QueryService(n_banks=8)
+    svc = QueryService(ServiceConfig(n_banks=8))
     svc.register_bits("mon", monday_bits, group="tenant0")
     svc.register_bits("tue", tuesday_bits, group="tenant0")
     n = svc.query("mon & tue").value          # popcount aggregate
     svc.materialize("both", "mon & tue")      # derived vector, re-queryable
+
+The serving surface is the async handle model:
+
+    h = svc.submit("mon & tue", tenant="t0")  # -> QueryHandle
+    h.done(); h.result().scalar
+
+`query()`, `query_batch()` and `range_scan()` are thin synchronous
+wrappers over `submit()` — a batch defers its handles and `flush()`
+serves them as one scheduler dispatch. Without an attached serving loop
+`submit()` executes eagerly (a batch of one); with a running
+`ServingLoop` (`svc.serve_loop().start()`) it enqueues into the
+continuous-serving runtime (`service.server`), which packs in-flight
+queries into scheduler ticks under SLO admission control.
+
+Construction keywords live in `ServiceConfig` (`service.config`). The
+old bare-keyword constructor still works — `QueryService(n_banks=8)` —
+but the deployment-shaping keywords (`reliability`, `fault_tolerance`,
+`n_chips`, `backend`) emit a `DeprecationWarning` pointing at the
+config dataclass.
 
 Columns (BitWeaving-V layout) ride the same machinery: `register_column`
 places each vertical bit plane as a catalog vector, and `range_scan` lowers
 `lo <= v <= hi` to the fusable predicate DAG of `ops.predicate` so the scan
 executes as one minimized AAP program through the cost-based planning
 pipeline (`parse -> canonicalize -> optimize -> cost -> bind -> dispatch`,
-`service.optimizer`) — there is no dedicated fast-path branch anymore; the
-optimizer's compile-off re-derives the fused between-scan program, and the
-per-plan backend choice dispatches long scans to the megakernel on
-accelerator devices. `range_scan_fast` survives only as a deprecated
-alias. `explain()` reports every planning decision for a batch: per-plan
-cost breakdown, chosen backend, and the shared-subexpression report of the
-cross-query CSE pass.
+`service.optimizer`). `explain()` reports every planning decision for a
+batch: per-plan cost breakdown, chosen backend, and the
+shared-subexpression report of the cross-query CSE pass.
 
 Registered columns also unlock the bit-serial arithmetic grammar
 (`core.arith_compiler` lowered through the planner/scheduler):
@@ -33,72 +48,72 @@ Registered columns also unlock the bit-serial arithmetic grammar
 from __future__ import annotations
 
 import dataclasses
+import threading
 import warnings
-from typing import Dict, Optional, Sequence, Union
+from typing import Dict, List, Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.compiler import Expr
-from repro.core.timing import DDR3_1600, DramTiming
 from repro.ops.predicate import VerticalColumn, range_scan_expr
 from repro.service.catalog import Catalog, CatalogEntry
+from repro.service.config import (CONFIG_FIELDS, DEPRECATED_KWARGS,
+                                  ServiceConfig)
 from repro.service.optimizer import (CostParams, ExplainReport,
                                      QueryOptimizer)
 from repro.service.planner import PlanCache, Planner
 from repro.service.scheduler import (MATERIALIZE, POPCOUNT, BatchReport,
                                      Query, QueryResult, Scheduler)
+from repro.service.server import QueryHandle, ServingLoop
 
 
-@dataclasses.dataclass
 class QueryService:
     """Catalog + planner + scheduler behind one serving interface.
 
-    ``n_chips=None`` (default) is the single-process deployment: one
-    device, bank-axis batching only. ``n_chips=C`` is the distributed
-    deployment mode: a `core.cluster.ChipCluster` over C mesh devices,
-    catalog vectors word-sharded across chips (placement recorded per
-    vector, affinity groups chip-local), every plan-group dispatched as
-    one `shard_map` VM launch, popcounts tree-psum'd. `rescale(C')`
-    re-plans the layout through `dist.elastic.plan_rescale` and re-places
-    the catalog without losing a single registered vector.
+    Construct with a `ServiceConfig` (preferred) or the legacy keyword
+    form; keywords override config fields. ``n_chips=None`` (default)
+    is the single-process deployment: one device, bank-axis batching
+    only. ``n_chips=C`` is the distributed deployment mode: a
+    `core.cluster.ChipCluster` over C mesh devices, catalog vectors
+    word-sharded across chips (placement recorded per vector, affinity
+    groups chip-local), every plan-group dispatched as one `shard_map`
+    VM launch, popcounts tree-psum'd. `rescale(C')` re-plans the layout
+    through `dist.elastic.plan_rescale` and re-places the catalog
+    without losing a single registered vector.
+
+    Attribute docs (reliability / fault_tolerance / telemetry /
+    optimize / plan_cache_capacity semantics) live on `ServiceConfig`.
     """
 
-    n_banks: int = 8
-    timing: DramTiming = DDR3_1600
-    #: distributed deployment: number of mesh chips (None = single-process)
-    n_chips: Optional[int] = None
-    #: placement granularity — vectors shard over max_chips*n_banks slots,
-    #: fixed across rescales; defaults to the smallest multiple of n_chips
-    #: >= 8 (see `core.cluster.ChipCluster.create`)
-    max_chips: Optional[int] = None
-    #: TRA reliability mode (`core.errors.ReliabilityConfig`): "vote" /
-    #: "ecc" mitigated execution of every plan-group, with the replica and
-    #: vote overhead charged on the modeled timeline. Single-process only.
-    reliability: Optional["ReliabilityConfig"] = None  # noqa: F821
-    #: chip/straggler fault policy (`dist.fault_tolerance.FaultTolerance`).
-    #: Unless the policy already carries a recovery hook, the service
-    #: installs `_recover_chip_failure` — elastic rescale-down on a
-    #: `ChipFailure`, preserving every registered vector.
-    fault_tolerance: Optional["FaultTolerance"] = None  # noqa: F821
-    #: observability sink (`repro.obs.Telemetry`). Default (None) is
-    #: metrics-on / tracing-off: `stats()` reads the registry, the hot
-    #: dispatch loop pays plain counter adds and no span machinery. Pass
-    #: `Telemetry()` for full query-lifecycle tracing + Chrome trace
-    #: export, or `NULL_TELEMETRY` to turn everything off.
-    telemetry: Optional["Telemetry"] = None  # noqa: F821
-    #: the cost-based optimizer (`service.optimizer`): predicate
-    #: reordering + compile-off, per-plan backend choice, and the batch
-    #: cross-query CSE pass. False = the plain pipeline (canonicalize,
-    #: compile, cache), the pre-optimizer behavior — benchmarks use it as
-    #: the baseline side of optimized-vs-unoptimized comparisons.
-    optimize: bool = True
-    #: plan cache LRU bound (None = unbounded, the pre-LRU behavior);
-    #: evictions are counted in `stats()["plan_cache_evictions"]`
-    plan_cache_capacity: Optional[int] = 1024
-
-    def __post_init__(self):
+    def __init__(self, config: Optional[ServiceConfig] = None, **kwargs):
+        if config is None:
+            config = ServiceConfig()
+        if kwargs:
+            unknown = sorted(set(kwargs) - CONFIG_FIELDS)
+            if unknown:
+                raise TypeError(
+                    f"QueryService: unknown keyword(s) {unknown}; valid "
+                    f"fields: {sorted(CONFIG_FIELDS)}")
+            deprecated = sorted(set(kwargs) & DEPRECATED_KWARGS)
+            if deprecated:
+                warnings.warn(
+                    f"QueryService({', '.join(deprecated)}=...) keywords "
+                    "are deprecated; pass "
+                    f"ServiceConfig({', '.join(deprecated)}=...) instead",
+                    DeprecationWarning, stacklevel=2)
+            config = dataclasses.replace(config, **kwargs)
+        self.config = config
+        self.n_banks = config.n_banks
+        self.timing = config.timing
+        self.n_chips = config.n_chips
+        self.max_chips = config.max_chips
+        self.reliability = config.reliability
+        self.fault_tolerance = config.fault_tolerance
+        self.telemetry = config.telemetry
+        self.optimize = config.optimize
+        self.plan_cache_capacity = config.plan_cache_capacity
         if self.telemetry is None:
             from repro.obs.telemetry import Telemetry
 
@@ -127,11 +142,16 @@ class QueryService:
             self.fault_tolerance.on_chip_failure = self._recover_chip_failure
         self.scheduler = Scheduler(catalog=self.catalog, planner=self.planner,
                                    n_banks=self.n_banks, timing=self.timing,
+                                   backend=config.backend,
                                    cluster=self.cluster,
                                    reliability=self.reliability,
                                    fault_tolerance=self.fault_tolerance,
                                    telemetry=self.telemetry)
         self._columns: Dict[str, VerticalColumn] = {}
+        #: serializes direct dispatch against a live serving loop
+        self._dispatch_lock = threading.RLock()
+        self._loop: Optional[ServingLoop] = None
+        self._pending: List[tuple] = []     # deferred (Query, QueryHandle)
 
     # -- catalog management --------------------------------------------------
 
@@ -182,16 +202,82 @@ class QueryService:
         self._columns[name] = col
         return col
 
-    # -- query interface -----------------------------------------------------
+    # -- query interface (async handle model) --------------------------------
+
+    def submit(self, query: Union[str, Expr, Query], *,
+               mode: str = POPCOUNT, tenant: Optional[str] = None,
+               priority: int = 0, deadline_ns: Optional[float] = None,
+               defer: bool = False) -> QueryHandle:
+        """Submit one query; returns a `QueryHandle`.
+
+        Routing: with a running `ServingLoop` attached (`serve_loop()` +
+        `start()`), the query enqueues into the continuous-serving
+        runtime and the handle resolves when its tick completes (or
+        raises `QueryShedError` if admission control dropped it). With
+        ``defer=True`` the handle parks until the next `flush()` serves
+        every deferred query as ONE scheduler batch (what
+        `query_batch()` does). Otherwise the query executes eagerly as
+        a batch of one and the handle returns already resolved.
+        """
+        q = query if isinstance(query, Query) else Query(query, mode, tenant)
+        if self._loop is not None and self._loop.accepting and not defer:
+            return self._loop.submit(q, priority=priority,
+                                     deadline_ns=deadline_ns)
+        handle = QueryHandle(q, priority=priority, deadline_ns=deadline_ns)
+        if defer:
+            self._pending.append((q, handle))
+            return handle
+        self._run_batch([(q, handle)])
+        return handle
+
+    def flush(self) -> BatchReport:
+        """Serve every deferred `submit(..., defer=True)` as one batch."""
+        pending, self._pending = self._pending, []
+        return self._run_batch(pending)
+
+    def _run_batch(self, pending: Sequence[tuple]) -> BatchReport:
+        """Direct (loop-less) dispatch path; resolves the handles."""
+        queries = [q for q, _ in pending]
+        with self._dispatch_lock:
+            try:
+                report = self.scheduler.submit(queries)
+            except BaseException as e:
+                for _, handle in pending:
+                    handle._fail(e)
+                raise
+        for (_, handle), result in zip(pending, report.results):
+            handle._resolve(result)
+        return report
 
     def query(self, query: Union[str, Expr], mode: str = POPCOUNT,
               tenant: Optional[str] = None) -> QueryResult:
-        """Serve one query (a batch of one)."""
-        return self.query_batch([Query(query, mode, tenant)]).results[0]
+        """Serve one query synchronously (`submit()` + `result()`)."""
+        return self.submit(query, mode=mode, tenant=tenant).result()
 
     def query_batch(self, queries: Sequence[Query]) -> BatchReport:
-        """Serve a batch of concurrent queries through the scheduler."""
-        return self.scheduler.submit(queries)
+        """Serve a batch of concurrent queries through the scheduler.
+
+        A thin wrapper over the handle model: every query defers, one
+        `flush()` serves them as a single plan-grouped dispatch.
+        """
+        for q in queries:
+            self.submit(q, defer=True)
+        return self.flush()
+
+    # -- continuous serving --------------------------------------------------
+
+    def serve_loop(self, **kwargs) -> ServingLoop:
+        """Build (and attach) the continuous-serving runtime.
+
+        Returns a `service.server.ServingLoop` bound to this service's
+        scheduler; its SLO defaults to ``config.slo``. Use
+        ``run_trace(arrivals)`` for deterministic open-loop replay or
+        ``start()``/``submit()``/``stop()`` for live serving (while the
+        loop accepts, `submit()` on this service routes into it).
+        """
+        loop = ServingLoop(self, **kwargs)
+        self._loop = loop
+        return loop
 
     def materialize(self, name: str, query: Union[str, Expr],
                     group: Optional[str] = None) -> CatalogEntry:
@@ -217,25 +303,12 @@ class QueryService:
         every other query: the compile-off picks the minimal fused
         between-scan program (what the removed `range_scan_fast` branch
         hard-coded) and the optimizer's backend choice dispatches long
-        scans to the megakernel on accelerator devices.
+        scans to the megakernel on accelerator devices. (The deprecated
+        `range_scan_fast` alias was removed; `range_scan(...,
+        mode=MATERIALIZE).words` is the bit-identical replacement —
+        tests/test_service.py pins the recorded behavior.)
         """
         return self.query(self.range_scan_query(column, lo, hi), mode, tenant)
-
-    def range_scan_fast(self, column: str, lo: int, hi: int) -> np.ndarray:
-        """Deprecated alias of `range_scan(..., mode=MATERIALIZE)`.
-
-        The dedicated between-scan dispatch branch is gone — the general
-        optimizer pipeline re-derives the same minimal program (asserted
-        bit-for-bit and cost-for-cost by tests/test_optimizer.py), so this
-        wrapper only preserves the old call shape and return type.
-        """
-        warnings.warn(
-            "range_scan_fast is deprecated: the optimizer serves "
-            "range_scan through the general planning pipeline; use "
-            "range_scan(column, lo, hi, mode=MATERIALIZE)",
-            DeprecationWarning, stacklevel=2)
-        r = self.range_scan(column, lo, hi, mode=MATERIALIZE)
-        return np.asarray(r.value)
 
     def explain(self, queries: Sequence[Union[Query, str]]) -> ExplainReport:
         """Plan a batch without executing it; report every decision.
@@ -268,7 +341,7 @@ class QueryService:
         if self.cluster is None:
             raise ValueError(
                 "rescale() needs a distributed service; construct with "
-                "QueryService(n_chips=...)")
+                "ServiceConfig(n_chips=...)")
         from repro.core.cluster import ChipCluster
         from repro.dist.elastic import plan_rescale
 
@@ -424,6 +497,9 @@ class QueryService:
                     m.counter("tra_corrected_bits_total").value),
                 "chip_rescales": int(
                     m.counter("chip_rescales_total").value),
+                "serve_queue_depth": m.gauge("serve_queue_depth").value,
+                "serve_shed": int(m.counter("serve_shed_total").value),
+                "serve_ticks": int(m.counter("serve_ticks_total").value),
             }
         else:
             s = {

@@ -17,16 +17,27 @@ The stream is deliberately repetitive in *shape* (each tenant re-asks the
 same templates, and all tenants share template structure), which is exactly
 the pattern the planner's canonical plan cache and the scheduler's
 plan-grouped batching exploit.
+
+Two consumers share the template bank:
+
+  * `query_stream` — a closed-loop batch of `n_queries` (the serve_qps
+    benchmark shape: submit everything at once, measure the batch);
+  * `poisson_arrivals` — an open-loop arrival trace for the continuous
+    serving runtime (`service.server.ServingLoop.run_trace`): seeded
+    per-tenant Poisson processes with skewed rates and a heavy-tailed
+    query-size mix, so benchmarks and chaos tests replay the exact same
+    offered load.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.apps.bitmap_index import week_or
 from repro.service.scheduler import AGGREGATE, POPCOUNT, Query
+from repro.service.server import Arrival
 from repro.service.service import QueryService
 
 
@@ -83,9 +94,14 @@ def build_service(spec: WorkloadSpec, n_banks: int = 8,
     return svc
 
 
-def query_stream(spec: WorkloadSpec, svc: QueryService) -> List[Query]:
-    """A mixed, repetitive multi-tenant stream of `n_queries` queries."""
-    rng = np.random.default_rng(spec.seed + 1)
+def _make_templates(spec: WorkloadSpec, svc: QueryService, rng):
+    """The shared per-tenant query template bank.
+
+    Consumes the first six integer draws of `rng` for the fixed range-scan
+    bounds (so the closed-loop stream stays seed-stable), then returns the
+    template closures keyed by name. Every template takes a tenant id and
+    its own random draws from the same `rng`.
+    """
     # a few fixed range predicates per tenant so scans repeat
     bounds: List[Tuple[int, int]] = []
     for _ in range(3):
@@ -127,26 +143,105 @@ def query_stream(spec: WorkloadSpec, svc: QueryService) -> List[Query]:
     def sum_add(t: str) -> Query:
         return Query(f"sum({t}/col + {t}/col2)", AGGREGATE, tenant=t)
 
+    def draw(t: str) -> Query:
+        kind = int(rng.integers(9))
+        if kind == 0:
+            return weekly(t, int(rng.integers(spec.n_weeks)))
+        elif kind == 1:
+            return every_week(t)
+        elif kind == 2:
+            return male_week(t, int(rng.integers(spec.n_weeks)))
+        elif kind == 3:
+            return range_scan(t, int(rng.integers(len(bounds))))
+        elif kind == 4:
+            return intersect(t, int(rng.integers(2, spec.n_sets)))
+        elif kind == 5:
+            return union_diff(t)
+        elif kind == 6:
+            return sum_col(t)
+        elif kind == 7:
+            return lt_filter(t, int(rng.integers(len(bounds))))
+        return sum_add(t)
+
+    def draw_light(t: str) -> Query:
+        kind = int(rng.integers(4))
+        if kind == 0:
+            return weekly(t, int(rng.integers(spec.n_weeks)))
+        elif kind == 1:
+            return male_week(t, int(rng.integers(spec.n_weeks)))
+        elif kind == 2:
+            return union_diff(t)
+        return intersect(t, 2)
+
+    def draw_heavy(t: str) -> Query:
+        kind = int(rng.integers(4))
+        if kind == 0:
+            return every_week(t)
+        elif kind == 1:
+            return sum_col(t)
+        elif kind == 2:
+            return sum_add(t)
+        return range_scan(t, int(rng.integers(len(bounds))))
+
+    return {"draw": draw, "light": draw_light, "heavy": draw_heavy}
+
+
+def query_stream(spec: WorkloadSpec, svc: QueryService) -> List[Query]:
+    """A mixed, repetitive multi-tenant stream of `n_queries` queries."""
+    rng = np.random.default_rng(spec.seed + 1)
+    templates = _make_templates(spec, svc, rng)
     queries: List[Query] = []
     while len(queries) < spec.n_queries:
         t = f"t{int(rng.integers(spec.n_tenants))}"
-        kind = int(rng.integers(9))
-        if kind == 0:
-            queries.append(weekly(t, int(rng.integers(spec.n_weeks))))
-        elif kind == 1:
-            queries.append(every_week(t))
-        elif kind == 2:
-            queries.append(male_week(t, int(rng.integers(spec.n_weeks))))
-        elif kind == 3:
-            queries.append(range_scan(t, int(rng.integers(len(bounds)))))
-        elif kind == 4:
-            queries.append(intersect(t, int(rng.integers(2, spec.n_sets))))
-        elif kind == 5:
-            queries.append(union_diff(t))
-        elif kind == 6:
-            queries.append(sum_col(t))
-        elif kind == 7:
-            queries.append(lt_filter(t, int(rng.integers(len(bounds)))))
-        else:
-            queries.append(sum_add(t))
+        queries.append(templates["draw"](t))
     return queries
+
+
+def poisson_arrivals(spec: WorkloadSpec, svc: QueryService, *,
+                     rate_qps: float, n_arrivals: int = 64,
+                     seed: Optional[int] = None,
+                     tenant_weights: Optional[Sequence[float]] = None,
+                     heavy_frac: float = 0.2,
+                     priorities: Optional[Dict[str, int]] = None,
+                     ) -> List[Arrival]:
+    """Seeded open-loop arrival trace for the continuous serving runtime.
+
+    Each tenant is an independent Poisson process: the aggregate offered
+    rate `rate_qps` (queries per modeled second) splits across tenants by
+    `tenant_weights` (default: a 2:1 geometric skew, so tenant 0 is the
+    hog and the tail tenants trickle — the shape DRR fairness and
+    per-tenant SLO shedding are tested against), `n_arrivals` splits by a
+    multinomial draw on the same weights, and inter-arrival gaps are
+    exponential. The query mix is heavy-tailed in *size*: probability
+    `heavy_frac` draws a heavy template (multi-week AND trees, ripple-add
+    SUMs, range scans — many-plane programs), the rest draw light
+    single-plane-ish templates. `priorities` maps tenant id -> admission
+    priority (higher sheds last); unlisted tenants get 0.
+
+    Deterministic for a given (spec.seed, seed, rate, n): benchmarks and
+    chaos tests replay byte-identical offered load.
+    """
+    rng = np.random.default_rng(spec.seed + 2 if seed is None else seed)
+    templates = _make_templates(spec, svc, rng)
+    if tenant_weights is None:
+        tenant_weights = [2.0 ** -i for i in range(spec.n_tenants)]
+    w = np.asarray(tenant_weights, float)
+    if len(w) != spec.n_tenants or np.any(w < 0) or w.sum() <= 0:
+        raise ValueError(f"bad tenant_weights {tenant_weights!r}")
+    w = w / w.sum()
+    counts = rng.multinomial(n_arrivals, w)
+    priorities = priorities or {}
+    arrivals: List[Arrival] = []
+    for i, n_t in enumerate(counts):
+        if n_t == 0:
+            continue
+        tenant = f"t{i}"
+        rate_per_ns = rate_qps * w[i] / 1e9
+        times = np.cumsum(rng.exponential(1.0 / rate_per_ns, size=int(n_t)))
+        for t_ns in times:
+            heavy = rng.random() < heavy_frac
+            q = templates["heavy" if heavy else "light"](tenant)
+            arrivals.append(Arrival(t_ns=float(t_ns), query=q,
+                                    priority=priorities.get(tenant, 0)))
+    arrivals.sort(key=lambda a: a.t_ns)
+    return arrivals

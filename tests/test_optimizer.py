@@ -1,6 +1,6 @@
 """Cost-based optimizer: reordering compile-off, backend choice, cross-
-query CSE, bounded LRU plan cache, the explain() surface, and the
-range_scan_fast deprecation parity (ISSUE: optimizer tentpole)."""
+query CSE, bounded LRU plan cache, the explain() surface, and range-scan
+parity through the general optimizer path (ISSUE: optimizer tentpole)."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -280,20 +280,17 @@ def test_eviction_counter_in_service_stats():
     assert svc.stats()["plan_cache_evictions"] >= 2
 
 
-# -- satellite: range_scan_fast through the general optimizer path -----------
+# -- satellite: range scans through the general optimizer path ---------------
 
 
-def test_range_scan_fast_bit_and_cost_identical():
+def test_range_scan_bit_and_cost_identical():
     svc = QueryService(n_banks=4)
     vals = RNG.integers(0, 256, 224, dtype=np.uint32)
     col = svc.register_column("col", jnp.asarray(vals), 8)
     lo, hi = 40, 180
-    with pytest.warns(DeprecationWarning):
-        fast = svc.range_scan_fast("col", lo, hi)
-    # bit-for-bit against the old dedicated between-scan kernel
+    # bit-for-bit against the old dedicated between-scan kernel (the
+    # removed `range_scan_fast` shortcut dispatched to it directly)
     old = np.asarray(between_scan(col.planes, lo, hi, 8))
-    np.testing.assert_array_equal(fast, old)
-    # and against the general path explicitly
     r = svc.range_scan("col", lo, hi, mode=MATERIALIZE)
     np.testing.assert_array_equal(np.asarray(r.value), old)
     # cost-for-cost: the optimizer plan never exceeds the plain compile of

@@ -219,20 +219,24 @@ def test_materialize_roundtrip():
     assert r.value == int(((a & b) | c).sum())
 
 
-def test_range_scan_service_matches_fast_path():
+def test_range_scan_parity_recorded_behavior():
+    """Pins the behavior the removed `range_scan_fast` shortcut used to
+    record: `range_scan(..., MATERIALIZE).words` is the packed predicate
+    bitmap, bit-for-bit equal to the direct numpy evaluation."""
     svc = QueryService(n_banks=4)
     vals = RNG.integers(0, 256, 224, dtype=np.uint32)
     svc.register_column("col", jnp.asarray(vals), 8)
     lo, hi = 40, 180
     r = svc.query(svc.range_scan_query("col", lo, hi), mode=MATERIALIZE)
-    with pytest.warns(DeprecationWarning):
-        fast = svc.range_scan_fast("col", lo, hi)
-    np.testing.assert_array_equal(np.asarray(r.value), fast)
     expect = (vals >= lo) & (vals <= hi)
     np.testing.assert_array_equal(
         np.asarray(unpack_bits(jnp.asarray(r.value), 224)), expect)
+    np.testing.assert_array_equal(
+        np.asarray(svc.range_scan("col", lo, hi, mode=MATERIALIZE).words),
+        np.asarray(r.value))
     # popcount mode agrees
     assert svc.range_scan("col", lo, hi).value == int(expect.sum())
+    assert not hasattr(svc, "range_scan_fast")
 
 
 def test_stats_shape():
